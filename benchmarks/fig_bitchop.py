@@ -1,0 +1,37 @@
+"""Fig 6/7/8: BitChop bitlength trajectory + per-step histogram."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run():
+    bc = common.lm_run("bitchop")
+    base = common.lm_run("none")
+    bits = np.asarray([t["bc_bits"] for t in bc["qm_traj"]])
+    hist, _ = np.histogram(bits, bins=np.arange(9) - 0.5)
+    return {
+        "mean_bits": float(bits.mean()),
+        "bits_histogram": hist.tolist(),
+        "final_bits": int(bits[-1]),
+        "mantissa_vs_bf16": float(bits.mean() / 7.0),
+        "xent_bc": float(np.mean([h["xent"] for h in bc["history"][-10:]])),
+        "xent_base": float(np.mean([h["xent"]
+                                    for h in base["history"][-10:]])),
+        "traj": bits.tolist()[::5],
+    }
+
+
+def main():
+    r = run()
+    print(f"BitChop: mean {r['mean_bits']:.2f} bits "
+          f"({100*r['mantissa_vs_bf16']:.0f}% of BF16 mantissa), "
+          f"final {r['final_bits']}")
+    print(f"histogram over steps (0..7 bits): {r['bits_histogram']}")
+    print(f"loss parity: bc {r['xent_bc']:.3f} vs base {r['xent_base']:.3f}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Fig 9/10: exponent value distribution + post-Gecko bitlength CDF +
+compression ratios for weights and activations of a trained model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import containers, gecko
+
+
+def run():
+    r = common.lm_run("none")
+    params = r["params"]
+    # weights: biggest 2D tensors
+    weights = [jnp.asarray(v) for v in jax.tree.leaves(params)
+               if hasattr(v, "ndim") and v.ndim >= 2][:8]
+    w_exp = jnp.concatenate([containers.exponent_field(w).reshape(-1)
+                             for w in weights])
+    # activations: forward stash of the CNN run (post-ReLU etc.)
+    crun = common.cnn_run("none")
+    _, stash = common.cnn_stash(crun, "none")
+    a_exp = jnp.concatenate([
+        containers.exponent_field(jnp.asarray(s["tensor"])).reshape(-1)
+        for s in stash[:6]])
+
+    # Activations after ReLU are ~half exact zeros (exponent field 0),
+    # which poisons delta rows. The paper combines SFP with JS-style
+    # zero-skip (§VI-B, "when combined this further improves..."): one tag
+    # bit per value, Gecko over the nonzero exponents only.
+    a_nz = a_exp[a_exp != 0]
+    out = {}
+    for name, e, nz in (("weights", w_exp, None),
+                        ("activations", a_exp, a_nz)):
+        ratio_d = float(gecko.compression_ratio(e, "delta"))
+        ratio_b = float(gecko.compression_ratio(e, "bias"))
+        pv = np.asarray(gecko.per_value_bits(e, "delta"))
+        centered = np.abs(np.asarray(e, np.int32) - 127)
+        d = {
+            "ratio_delta": ratio_d, "ratio_bias": ratio_b,
+            "frac_1bit": float((pv <= 1).mean()),
+            "frac_le4bit": float((pv <= 4).mean()),
+            "exp_within_16_of_bias": float((centered <= 16).mean()),
+        }
+        if nz is not None:
+            zs_bits = float(gecko.compressed_bits(nz, "delta")) + e.size
+            d["ratio_delta_zeroskip"] = zs_bits / (e.size * 8)
+            d["zero_frac"] = float((np.asarray(e) == 0).mean())
+        out[name] = d
+    return out
+
+
+def main():
+    r = run()
+    for name, d in r.items():
+        print(f"{name}: gecko ratio delta={d['ratio_delta']:.3f} "
+              f"bias={d['ratio_bias']:.3f}; <=1b {100*d['frac_1bit']:.0f}%, "
+              f"<=4b {100*d['frac_le4bit']:.0f}%; "
+              f"|exp-127|<=16 for {100*d['exp_within_16_of_bias']:.0f}%")
+        if "ratio_delta_zeroskip" in d:
+            print(f"  with JS zero-skip (paper §VI-B combo): "
+                  f"{d['ratio_delta_zeroskip']:.3f} "
+                  f"(zeros: {100*d['zero_frac']:.0f}%)")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig 2/3/4: Quantum Mantissa bitlength trajectories + accuracy parity.
+
+LM variant (per-period bitlengths over training) + CNN variant; reports
+how quickly bits collapse, the final per-layer spread, and loss parity
+against the unquantized baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run():
+    qm = common.lm_run("qm")
+    base = common.lm_run("none")
+    act = np.asarray([t["act"] for t in qm["qm_traj"]])   # (steps, periods)
+    w = np.asarray([t["w"] for t in qm["qm_traj"]])
+    out = {
+        "steps_to_half": int(np.argmax(act.mean(1) < 3.5))
+        if (act.mean(1) < 3.5).any() else -1,
+        "final_act_mean": float(act[-1].mean()),
+        "final_act_min": float(act[-1].min()),
+        "final_act_max": float(act[-1].max()),
+        "final_w_mean": float(w[-1].mean()),
+        "xent_qm": float(np.mean([h["xent"] for h in qm["history"][-10:]])),
+        "xent_base": float(np.mean([h["xent"]
+                                    for h in base["history"][-10:]])),
+        "act_traj_mean": act.mean(1).tolist()[::5],
+    }
+    out["xent_delta"] = out["xent_qm"] - out["xent_base"]
+    return out
+
+
+def main():
+    r = run()
+    print(f"QM bits: act {r['final_act_mean']:.2f} "
+          f"[{r['final_act_min']:.2f}..{r['final_act_max']:.2f}], "
+          f"w {r['final_w_mean']:.2f}; reached <3.5b at step "
+          f"{r['steps_to_half']}")
+    print(f"loss parity: qm {r['xent_qm']:.3f} vs base {r['xent_base']:.3f} "
+          f"(delta {r['xent_delta']:+.3f})")
+    print("mean-act-bits trajectory (every 5 steps):",
+          [f"{x:.1f}" for x in r["act_traj_mean"]])
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig 13: cumulative activation footprint vs BF16 / JS / GIST++.
+
+JS: zero-skip sparse coding with one tag bit per value. GIST++: ReLU-pool
+tensors at 1 bit/value, sparsity coding elsewhere only when it wins.
+SFP_QM/SFP_BC: the dynamic containers (measured bitlengths from the
+trained runs) on top of Gecko exponents.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import footprint
+
+
+def run():
+    base = common.cnn_run("none")
+    qm = common.cnn_run("qm")
+    bc = common.cnn_run("bitchop")
+    _, stash = common.cnn_stash(base, "none")
+
+    totals = {"bf16": 0, "js": 0, "gist": 0, "sfp_qm": 0, "sfp_bc": 0,
+              "fp32": 0}
+    for s in stash:
+        t = jnp.asarray(s["tensor"])
+        totals["fp32"] += footprint.baseline_bits(t, "fp32")
+        totals["bf16"] += footprint.baseline_bits(t, "bf16")
+        totals["js"] += footprint.js_bits(t, 16)
+        totals["gist"] += footprint.gist_bits(t, 16,
+                                              relu_pool=s["relu_pool"])
+        totals["sfp_qm"] += footprint.sfp_footprint(
+            t, qm["final_qm_bits"], signless=s["signless"]).total_bits
+        totals["sfp_bc"] += footprint.sfp_footprint(
+            t, float(bc["final_bc_bits"]), signless=s["signless"]).total_bits
+    out = {k: v / totals["bf16"] for k, v in totals.items()}
+    out["sparsity"] = float(np.mean([
+        float((jnp.asarray(s["tensor"]) == 0).mean()) for s in stash]))
+    return out
+
+
+def main():
+    r = run()
+    print("activation footprint relative to BF16:")
+    for k in ("fp32", "bf16", "js", "gist", "sfp_bc", "sfp_qm"):
+        print(f"  {k:8s} {r[k]:.3f}")
+    print(f"(mean activation sparsity {100*r['sparsity']:.0f}%)")
+    return r
+
+
+if __name__ == "__main__":
+    main()

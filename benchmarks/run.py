@@ -1,0 +1,61 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; each row's ``derived`` field
+carries the headline metric the paper reports in that table/figure.
+Artifacts (full dicts) are written to experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "experiments"
+
+
+def main() -> None:
+    from benchmarks import (fig_bitchop, fig_gecko, fig_qm_bitlengths,
+                            fig_relative_compression, table1_footprint,
+                            table2_perf_energy)
+
+    rows = []
+    results = {}
+
+    def bench(name, fn, derive):
+        t0 = time.time()
+        r = fn()
+        us = (time.time() - t0) * 1e6
+        results[name] = r
+        rows.append(f"{name},{us:.0f},{derive(r)}")
+
+    bench("table1_footprint", table1_footprint.run,
+          lambda r: f"qm_vs_fp32={r['resnet8_qm']['vs_fp32']:.3f};"
+                    f"bc_vs_fp32={r['resnet8_bitchop']['vs_fp32']:.3f};"
+                    f"qm_acc_delta={r['resnet8_qm']['acc_delta']:+.3f}")
+    bench("table2_perf_energy", table2_perf_energy.run,
+          lambda r: f"qm_speedup={r['paper_accel']['speedup_qm']:.2f}x;"
+                    f"qm_energy={r['paper_accel']['energy_qm']:.2f}x;"
+                    f"bc_speedup={r['paper_accel']['speedup_bc']:.2f}x")
+    bench("fig_qm_bitlengths", fig_qm_bitlengths.run,
+          lambda r: f"final_act_bits={r['final_act_mean']:.2f};"
+                    f"xent_delta={r['xent_delta']:+.3f}")
+    bench("fig_bitchop", fig_bitchop.run,
+          lambda r: f"mean_bits={r['mean_bits']:.2f};"
+                    f"final_bits={r['final_bits']}")
+    bench("fig_gecko", fig_gecko.run,
+          lambda r: f"w_ratio={r['weights']['ratio_delta']:.3f};"
+                    f"a_ratio={r['activations']['ratio_delta']:.3f}")
+    bench("fig_relative_compression", fig_relative_compression.run,
+          lambda r: f"sfp_qm_vs_bf16={r['sfp_qm']:.3f};"
+                    f"gist_vs_bf16={r['gist']:.3f}")
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "bench_results.json").write_text(json.dumps(results, indent=2,
+                                                       default=str))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

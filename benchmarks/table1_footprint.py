@@ -1,0 +1,83 @@
+"""Table I / Fig 12: total memory footprint + accuracy under SFP_QM / SFP_BC.
+
+Trains the paper-family CNN (ResNet-8 on synthetic data — DESIGN.md D1) and
+a reduced LM under each policy, then accounts the stashed-tensor footprint
+bit-exactly: mantissa bits from the learned/heuristic bitlengths, exponents
+through Gecko, signs elided for provably-nonnegative tensors.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import footprint, gecko
+
+
+def footprint_for(stash, mantissa_bits) -> Dict[str, float]:
+    total_sfp = total_js = total_fp32 = total_bf16 = 0
+    parts = {"sign": 0, "mantissa": 0, "exponent": 0}
+    for s in stash:
+        t = jnp.asarray(s["tensor"])
+        bits = (mantissa_bits[s["name"]]
+                if isinstance(mantissa_bits, dict) else mantissa_bits)
+        rep = footprint.sfp_footprint(t, bits, signless=s["signless"])
+        rep_js = footprint.sfp_js_footprint(t, bits, signless=s["signless"])
+        total_sfp += rep.total_bits
+        total_js += min(rep_js.total_bits, rep.total_bits)
+        total_fp32 += footprint.baseline_bits(t, "fp32")
+        total_bf16 += footprint.baseline_bits(t, "bf16")
+        parts["sign"] += rep.sign_bits
+        parts["mantissa"] += rep.mantissa_bits
+        parts["exponent"] += rep.exponent_bits
+    return {"sfp_bits": total_sfp, "fp32_bits": total_fp32,
+            "bf16_bits": total_bf16,
+            "vs_fp32": total_sfp / total_fp32,
+            "vs_bf16": total_sfp / total_bf16,
+            "js_vs_fp32": total_js / total_fp32,
+            "share_sign": parts["sign"] / total_sfp,
+            "share_mantissa": parts["mantissa"] / total_sfp,
+            "share_exponent": parts["exponent"] / total_sfp}
+
+
+def run() -> Dict:
+    out = {}
+    base = common.cnn_run("none")
+    for mode in ("qm", "bitchop"):
+        r = common.cnn_run(mode)
+        bits = (r.get("final_qm_bits_per_layer", r["final_qm_bits"])
+                if mode == "qm" else float(r["final_bc_bits"]))
+        params, stash = common.cnn_stash(r, mode, act_bits=bits)
+        fp = footprint_for(stash, bits)
+        acc = np.mean([h["acc"] for h in r["history"][-10:]])
+        acc_base = np.mean([h["acc"] for h in base["history"][-10:]])
+        mean_bits = (float(np.mean(list(bits.values())))
+                     if isinstance(bits, dict) else float(bits))
+        out[f"resnet8_{mode}"] = {
+            "acc": float(acc), "acc_fp32_baseline": float(acc_base),
+            "acc_delta": float(acc - acc_base),
+            "mantissa_bits": mean_bits, **fp}
+        if isinstance(bits, dict):
+            out[f"resnet8_{mode}"]["bits_per_layer"] = bits
+    return out
+
+
+def main():
+    res = run()
+    for name, r in res.items():
+        print(f"{name}: footprint={100*r['vs_fp32']:.1f}% of FP32 "
+              f"({100*r['vs_bf16']:.1f}% of BF16), acc {r['acc']:.3f} "
+              f"(baseline {r['acc_fp32_baseline']:.3f}, "
+              f"delta {r['acc_delta']:+.3f}), bits={r['mantissa_bits']:.2f}")
+        print(f"  breakdown: sign {100*r['share_sign']:.0f}% / "
+              f"mantissa {100*r['share_mantissa']:.0f}% / "
+              f"exponent {100*r['share_exponent']:.0f}%; "
+              f"+JS zero-skip -> {100*r['js_vs_fp32']:.1f}% of FP32")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Table II: performance + energy-efficiency gains (analytic accelerator
+model, as in the paper §VI-C — they too found cycle-accurate simulation of
+full training impractical).
+
+Model: per stashed layer, time = max(compute / FLOPS, traffic / DRAM_BW);
+energy = flops * e_mac + traffic * e_dram. The paper's accelerator is
+16 TFLOPS + 8x LPDDR4-3200; its effective DRAM traffic per stashed value
+(tiling re-reads, weight/gradient movement, 32MB-buffer spills at batch
+256) is not published, so we calibrate a single traffic-amplification
+scalar k (bytes moved per stashed fp32 value = k * 8) such that the BF16
+column reproduces the paper's published 1.53x ResNet speedup — then read
+off SFP_QM / SFP_BC with OUR measured footprint ratios. One scalar
+calibrated against one published number, predicting four others
+(documented in EXPERIMENTS.md).
+
+The same model with TPU-v5e constants translates Table II to the target
+hardware: v5e's 3x higher flops/byte balance pushes every layer deeper
+into the memory-bound regime, where SFP's traffic reduction converts to
+time nearly 1:1 — the paper's "would benefit from higher computational
+performance hardware" remark (§VI-C), quantified.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks import common, table1_footprint
+
+FLOPS = 16e12
+DRAM_BW = 8 * 25.6e9          # 8 channels LPDDR4-3200
+E_MAC = 0.6e-12               # J/flop (65nm-scale)
+E_DRAM = 20e-12               # J/byte (LPDDR4 access+IO)
+PAPER_BF16_SPEEDUP = 1.53     # Table II, ResNet18
+
+TPU_FLOPS = 197e12
+TPU_BW = 819e9
+TPU_E_MAC = 0.15e-12
+TPU_E_DRAM = 8e-12
+
+
+def _layers(stash):
+    """Per stashed tensor: (flops, minimal fp32 traffic = write+read)."""
+    out = []
+    for s in stash:
+        t = np.asarray(s["tensor"])
+        n = int(t.size)
+        c = int(t.shape[-1]) if t.ndim >= 2 else 64
+        flops = 3 * 2 * 9 * c * n      # 3x3 conv producing it, fwd + 2x bwd
+        out.append((float(flops), float(2 * 4 * n)))
+    return out
+
+
+def _totals(layers, ratio, fl, bw, em, ed):
+    T = E = 0.0
+    for flops, fp32_bytes in layers:
+        traffic = fp32_bytes * ratio
+        T += max(flops / fl, traffic / bw)
+        E += flops * em + traffic * ed
+    return T, E
+
+
+def _calibrate_traffic(raw) -> float:
+    """Traffic amplification k reproducing the paper's bf16 1.53x."""
+    lo, hi = 0.1, 2000.0
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        layers = [(f, b * mid) for f, b in raw]
+        t32, _ = _totals(layers, 1.0, FLOPS, DRAM_BW, E_MAC, E_DRAM)
+        t16, _ = _totals(layers, 0.5, FLOPS, DRAM_BW, E_MAC, E_DRAM)
+        if t32 / t16 > PAPER_BF16_SPEEDUP:
+            hi = mid        # too memory-bound: less amplification
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)
+
+
+def run() -> Dict:
+    fp = table1_footprint.run()
+    base = common.cnn_run("none")
+    _, stash = common.cnn_stash(base, "none")
+    raw = _layers(stash)
+    k = _calibrate_traffic(raw)
+    layers = [(f, b * k) for f, b in raw]
+
+    ratios = {
+        "bf16": 0.5,
+        "qm": fp["resnet8_qm"]["vs_fp32"],
+        "bc": fp["resnet8_bitchop"]["vs_fp32"],
+        "qm_js": fp["resnet8_qm"]["js_vs_fp32"],
+    }
+    out = {"calibrated_traffic_x": k, "ratios": ratios}
+    for hwname, consts in (
+            ("paper_accel", (FLOPS, DRAM_BW, E_MAC, E_DRAM)),
+            ("tpu_v5e", (TPU_FLOPS, TPU_BW, TPU_E_MAC, TPU_E_DRAM))):
+        fl, bw, em, ed = consts
+        t32, e32 = _totals(layers, 1.0, fl, bw, em, ed)
+        r = {}
+        for name, ratio in ratios.items():
+            t, e = _totals(layers, ratio, fl, bw, em, ed)
+            r[f"speedup_{name}"] = t32 / t
+            r[f"energy_{name}"] = e32 / e
+        out[hwname] = r
+    return out
+
+
+def main():
+    res = run()
+    print(f"(traffic calibrated x{res['calibrated_traffic_x']:.1f} so bf16 "
+          f"matches the paper's {PAPER_BF16_SPEEDUP}x; footprint ratios "
+          f"{ {k: round(v, 3) for k, v in res['ratios'].items()} })")
+    for hwname in ("paper_accel", "tpu_v5e"):
+        r = res[hwname]
+        print(f"[{hwname}] vs FP32 baseline "
+              f"(paper: QM 2.30x/6.12x, BC 2.15x/4.54x perf/energy):")
+        print(f"  perf    x: bf16 {r['speedup_bf16']:.2f}  "
+              f"SFP_QM {r['speedup_qm']:.2f}  SFP_BC {r['speedup_bc']:.2f}  "
+              f"SFP_QM+JS {r['speedup_qm_js']:.2f}")
+        print(f"  energy  x: bf16 {r['energy_bf16']:.2f}  "
+              f"SFP_QM {r['energy_qm']:.2f}  SFP_BC {r['energy_bc']:.2f}  "
+              f"SFP_QM+JS {r['energy_qm_js']:.2f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""BitChop in action: watch the controller chase the loss (Fig 5-8).
+
+  PYTHONPATH=src python examples/bitchop_demo.py
+"""
+import numpy as np
+
+from benchmarks import common
+
+r = common.lm_run("bitchop", steps=80)
+bits = [t["bc_bits"] for t in r["qm_traj"]]
+loss = [h["xent"] for h in r["history"]]
+print("step  loss   bits   " + "(eq. 8-9: shrink while improving)")
+for i in range(0, len(bits), 8):
+    bar = "#" * bits[i]
+    print(f"{i:4d}  {loss[i]:5.2f}  {bits[i]}  {bar}")
+hist, _ = np.histogram(bits, bins=np.arange(9) - 0.5)
+print("bit histogram 0..7:", hist.tolist())

@@ -1,0 +1,28 @@
+"""Gecko on real trained tensors: distributions and ratios (Fig 9/10).
+
+  PYTHONPATH=src python examples/gecko_compression.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import containers, gecko
+
+r = common.lm_run("none", steps=80)
+weights = [jnp.asarray(v) for v in jax.tree.leaves(r["params"])
+           if hasattr(v, "ndim") and v.ndim >= 2][:6]
+exp = jnp.concatenate([containers.exponent_field(w).reshape(-1)
+                       for w in weights])
+centered = np.asarray(exp, np.int32) - 127
+print(f"exponent distribution over {exp.size} trained weights:")
+for lo, hi in ((-64, -17), (-16, -9), (-8, -5), (-4, -1), (0, 0), (1, 4),
+               (5, 8), (9, 127)):
+    frac = ((centered >= lo) & (centered <= hi)).mean()
+    print(f"  [{lo:+4d},{hi:+4d}]: {'#' * int(frac * 60):60s} {frac:.1%}")
+for mode in ("delta", "bias"):
+    print(f"gecko {mode}: ratio {float(gecko.compression_ratio(exp, mode)):.3f}"
+          " (paper: ~0.52-0.56)")
+pv = np.asarray(gecko.per_value_bits(exp, "delta"))
+print(f"post-encoding bits/exponent: mean {pv.mean():.2f}, "
+      f"<=1b {100*(pv<=1).mean():.0f}%, <=4b {100*(pv<=4).mean():.0f}%")

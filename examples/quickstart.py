@@ -1,0 +1,45 @@
+"""Quickstart: Schrödinger's FP containers on any tensor, in 30 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Shows the three core mechanisms on real tensors: Quantum Mantissa
+quantization (learnable bitlengths), Gecko lossless exponent compression,
+and the realized SFP8 container pack/unpack.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers, footprint, gecko, quantum_mantissa as qm
+from repro.kernels import ops
+
+key = jax.random.PRNGKey(0)
+x = (jax.random.normal(key, (4, 1024)) * 2.0).astype(jnp.bfloat16)
+
+# 1) Quantum Mantissa: stochastic fractional-bitlength quantization (eq 5+6)
+n = jnp.asarray(2.5, jnp.float32)          # learnable parameter
+q = qm.qm_quantize(x, n, jax.random.PRNGKey(1))
+err = jnp.max(jnp.abs((q - x).astype(jnp.float32)))
+print(f"QM @ n={float(n)} bits: max abs err {float(err):.4f}")
+
+# ...and its learning signal: d(loss)/dn pushes n where the data needs it
+dn = jax.grad(lambda n: jnp.sum(
+    qm.qm_quantize(x, n, jax.random.PRNGKey(1)) ** 2).astype(jnp.float32))(n)
+print(f"dL/dn = {float(dn):+.3f}  (gradient descent finds the bitlength)")
+
+# 2) Gecko: lossless exponent compression
+exp = containers.exponent_field(x)
+ratio = float(gecko.compression_ratio(exp.reshape(-1), "delta"))
+print(f"Gecko exponent ratio: {ratio:.3f} (1.0 = uncompressed 8b)")
+
+# 3) Realized SFP8 container (sign + 4b delta-exp + 3b mantissa + shared base)
+packed = ops.sfp_compress_nd(containers.truncate_mantissa(x, 3), "sfp8")
+back = ops.sfp_decompress_nd(packed, jnp.bfloat16, "sfp8")
+exact = jnp.all(back == containers.truncate_mantissa(x, 3))
+bytes_packed = packed.payload.size + packed.bases.size
+print(f"SFP8: {x.size * 2} B -> {bytes_packed} B "
+      f"({bytes_packed / (x.size * 2):.2%}), bit-exact={bool(exact)}")
+
+# 4) Bit-exact footprint accounting (what the paper's Table I counts)
+rep = footprint.sfp_footprint(x, mantissa_bits=2, signless=False)
+print(f"SFP entitlement @2b mantissa: {rep.vs_fp32():.1%} of FP32, "
+      f"{rep.vs_bf16():.1%} of BF16")

@@ -1,0 +1,45 @@
+"""Serving example: prefill + batched greedy decode with a compressed
+KV cache (SFP8 containers) next to the exact bf16 cache.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models import attention
+from repro.models.model import DecoderModel
+from repro.serve import engine, kvcache
+
+cfg = reduced(configs.get("mistral-large-123b"))
+model = DecoderModel(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+B, S, NEW = 4, 32, 16
+prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+t0 = time.time()
+res = engine.generate(model, params, prompt, max_new=NEW)
+print(f"greedy generate: {res.tokens.shape} in {time.time()-t0:.1f}s")
+print("first sequence:", np.asarray(res.tokens[0]).tolist())
+
+# compressed-KV decode for one layer: error stays bounded
+p0 = jax.tree.map(lambda a: a[0], params["periods"])["slot0"]["attn"]
+h = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (B, 1, cfg.d_model),
+                            cfg.compute_dtype)
+raw = attention.cache_init(cfg, "global", B, 64, cfg.compute_dtype)
+packed = kvcache.packed_cache_init(cfg, "global", B, 64)
+o_raw, _ = attention.attention_decode(p0, h, raw, jnp.asarray(0), cfg,
+                                      kind="global")
+o_pk, _ = kvcache.attention_decode_packed(p0, h, packed, jnp.asarray(0),
+                                          cfg, kind="global")
+rel = float(jnp.max(jnp.abs((o_pk - o_raw).astype(jnp.float32)))
+            / (float(jnp.max(jnp.abs(o_raw.astype(jnp.float32)))) + 1e-9))
+bytes_raw = raw.k.size * 2 * 2
+bytes_pk = (packed.k_payload.size + packed.k_bases.size) * 2
+print(f"compressed KV: {bytes_raw} B -> {bytes_pk} B "
+      f"({bytes_pk/bytes_raw:.2%}), relative decode error {rel:.3f}")

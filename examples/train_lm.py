@@ -1,0 +1,21 @@
+"""End-to-end training driver: LM + Quantum Mantissa, fault-tolerant loop.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --preset small
+  PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b --preset tiny
+
+Presets reduce the assigned configs for this CPU box; `--preset full
+--batch 256 --seq 4096` is the production shape (use launch/train.py with
+a mesh on real hardware). Watch qm_act_mean collapse from 7 bits to 1-3
+within the first tens of steps while xent tracks the baseline.
+"""
+import sys
+
+from repro.launch import train as train_cli
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "gemma2-2b", "--preset", "small",
+                     "--policy", "qm", "--steps", "200",
+                     "--metrics", "experiments/train_lm_metrics.jsonl",
+                     "--ckpt-dir", "/tmp/sfp_ckpt", "--ckpt-every", "50"]
+    train_cli.main()

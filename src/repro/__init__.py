@@ -1,0 +1,10 @@
+"""Schrödinger's FP on TPU: dynamic floating-point containers for training
+and serving, as a production-grade multi-pod JAX framework.
+
+Reproduces Nikolić et al., 2022 (Quantum Mantissa / BitChop / Gecko / the
+SFP encoder-decoder pipeline) and extends it with TPU-native realized
+containers, a compressed-stash training step, compressed KV-cache serving,
+and compressed cross-pod gradient exchange. See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+"""Checkpointing: atomic versioned save/restore, async writer, elastic reshard."""

@@ -1,0 +1,194 @@
+"""Checkpoint manager: atomic, versioned, async, elastically reshardable.
+
+Layout:
+  <dir>/step_000123.tmp-<nonce>/   (written, then atomically renamed)
+  <dir>/step_000123/
+      manifest.json                (tree structure, shapes, dtypes, step)
+      arr_00000.npy ...            (one file per leaf, host-gathered)
+
+Fault-tolerance contract:
+  * writes are crash-safe (tmp dir + rename; readers never see partials);
+  * ``keep`` old checkpoints are retained for rollback;
+  * restore() accepts a different mesh/sharding than save() used — leaves
+    are host-loaded and re-placed with the new shardings (elastic restart
+    after losing nodes);
+  * optional SFP compression of checkpoint payloads (bf16 + truncated
+    mantissas via the paper's containers) for non-optimizer leaves.
+
+The async writer snapshots to host (blocking only on device->host copy)
+and serializes on a background thread.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import uuid
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import containers
+
+_NATIVE_DTYPES = {
+    "float64", "float32", "float16", "int64", "int32", "int16", "int8",
+    "uint64", "uint32", "uint16", "uint8", "bool", "complex64", "complex128",
+}
+
+
+def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out.append((name, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 compress_bits: Optional[int] = None):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.compress_bits = compress_bits
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp") and "tmp-" not in p.name:
+                try:
+                    steps.append(int(p.name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+        """Snapshot to host, then write (async unless blocking)."""
+        self.wait()  # never two writers at once (gc races on tmp dirs)
+        leaves, _ = _flatten_with_paths(tree)
+        host = [(name, np.asarray(leaf)) for name, leaf in leaves]
+
+        if blocking:
+            self._write(step, host, tree)
+        else:
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host, tree),
+                daemon=True)
+            self._thread.start()
+
+    def _write_guarded(self, step, host, tree):
+        try:
+            self._write(step, host, tree)
+        except BaseException as e:  # pragma: no cover
+            self._error = e
+
+    def _write(self, step: int, host, tree) -> None:
+        final = self._step_dir(step)
+        tmp = self.dir / f"{final.name}.tmp-{uuid.uuid4().hex[:8]}"
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        for i, (name, arr) in enumerate(host):
+            fname = f"arr_{i:05d}.npy"
+            entry = {"name": name, "file": fname, "dtype": str(arr.dtype),
+                     "shape": list(arr.shape)}
+            if (self.compress_bits is not None
+                    and arr.dtype in (np.float32,)
+                    and arr.ndim >= 2 and "opt" not in name):
+                q = np.asarray(containers.truncate_mantissa(
+                    jax.numpy.asarray(arr), self.compress_bits))
+                entry["sfp_mantissa_bits"] = self.compress_bits
+                arr = q
+            if arr.dtype.name not in _NATIVE_DTYPES:
+                # ml_dtypes (bf16/fp8) need pickle under np.save; store the
+                # raw bits in a same-width uint container instead.
+                stored = np.dtype(f"uint{arr.dtype.itemsize * 8}")
+                entry["stored_as"] = stored.name
+                arr = arr.view(stored)
+            np.save(tmp / fname, arr)
+            manifest["leaves"].append(entry)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            # re-save of an existing step (e.g. final save == last periodic
+            # save): swap the old dir out first — os.replace cannot
+            # overwrite a non-empty directory.
+            old = self.dir / f"{final.name}.old-{uuid.uuid4().hex[:8]}"
+            os.rename(final, old)
+            os.replace(tmp, final)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.replace(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # only reap *stale* tmp dirs (crash leftovers) — a live writer may
+        # own a fresh one.
+        now = time.time()
+        for p in self.dir.glob("step_*.tmp-*"):
+            try:
+                if now - p.stat().st_mtime > 300:
+                    shutil.rmtree(p, ignore_errors=True)
+            except OSError:
+                pass
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.check()
+
+    def check(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+
+    def restore(self, step: int, like: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of ``like``; optionally re-place with
+        new shardings (elastic restart onto a different mesh)."""
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves, treedef = _flatten_with_paths(like)
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+        sh_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: x is None)
+            if shardings is not None else [None] * len(leaves))
+        out = []
+        for (name, leaf), sh in zip(leaves, sh_leaves):
+            entry = by_name[name]
+            arr = np.load(d / entry["file"])
+            if "stored_as" in entry:
+                arr = arr.view(jax.numpy.dtype(entry["dtype"]))
+            expect = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != expect:
+                raise ValueError(
+                    f"checkpoint leaf {name} shape {arr.shape} != {expect}")
+            target = getattr(leaf, "dtype", arr.dtype)
+            if arr.dtype != target:
+                # numpy lacks direct casts for ml_dtypes (bf16 etc.)
+                arr = np.asarray(jax.numpy.asarray(arr).astype(target))
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,11 @@
+"""Core contribution of Schrödinger's FP: dynamic floating-point containers.
+
+Public surface:
+  containers        - FP bit-field plumbing, Q(M, n) truncation (eq. 5-6)
+  quantum_mantissa  - learned per-tensor mantissa bitlengths (eq. 5-7)
+  bitchop           - loss-EMA heuristic bitlength controller (eq. 8-9)
+  gecko             - lossless exponent delta compression
+  footprint         - bit-exact SFP footprint accounting (Table I / Fig 12-13)
+  sfp               - container policies + stash compression used by train/serve
+"""
+from repro.core import bitchop, containers, footprint, gecko, quantum_mantissa, sfp  # noqa: F401

@@ -1,0 +1,101 @@
+"""BitChop: history-based network-wide mantissa bitlength control.
+
+Paper §IV-B. Observes the per-batch training loss, maintains an exponential
+moving average (eq. 8) and a noise threshold epsilon (EMA of |L - Mavg|),
+and once per period (N = 1 batch) decides to shrink / keep / grow the
+single network-wide mantissa bitlength (eq. 9):
+
+    n <- n - 1   if Mavg > L + eps     (loss clearly improving)
+    n <- n       if |Mavg - L| <= eps
+    n <- n + 1   if Mavg < L - eps     (loss clearly regressing)
+
+The controller is a pure function over a small state pytree so it can live
+on-device inside a jitted train step (the paper implements it as a tiny
+hardware block fed by a loss register — the software analogue is a fused
+scalar update). Full precision is forced for a window after learning-rate
+changes (the paper: "Full precision is used during LR changes").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BitChopConfig:
+    alpha: float = 0.1            # loss EMA decay (eq. 8)
+    eps_alpha: float = 0.1        # EMA decay for the |L - Mavg| noise proxy
+    eps_scale: float = 1.0        # epsilon = eps_scale * err_ema
+    max_bits: int = 7             # container mantissa bits (7 bf16, 23 fp32)
+    min_bits: int = 0
+    period: int = 1               # batches per decision period (paper: N=1)
+    warmup_steps: int = 8         # observe-only steps before first decision
+    lr_change_hold: int = 100     # full-precision steps after an LR change
+
+
+class BitChopState(NamedTuple):
+    mavg: jax.Array        # fp32 scalar, EMA of loss
+    err_ema: jax.Array     # fp32 scalar, EMA of |L - mavg|
+    n: jax.Array           # int32 scalar, current mantissa bitlength
+    step: jax.Array        # int32 scalar
+    hold_until: jax.Array  # int32 scalar; full precision while step < hold_until
+
+
+def init(cfg: BitChopConfig) -> BitChopState:
+    return BitChopState(
+        mavg=jnp.asarray(0.0, jnp.float32),
+        err_ema=jnp.asarray(0.0, jnp.float32),
+        n=jnp.asarray(cfg.max_bits, jnp.int32),
+        step=jnp.asarray(0, jnp.int32),
+        hold_until=jnp.asarray(0, jnp.int32),
+    )
+
+
+def update(state: BitChopState, loss, cfg: BitChopConfig,
+           lr_changed=False) -> BitChopState:
+    """One observe/decide step (eq. 8 + 9). Safe to call inside jit."""
+    loss = jnp.asarray(loss, jnp.float32)
+    first = state.step == 0
+    mavg0 = jnp.where(first, loss, state.mavg)
+    err = jnp.abs(loss - mavg0)
+    err_ema = jnp.where(
+        first, err, state.err_ema + cfg.eps_alpha * (err - state.err_ema)
+    )
+    # eq. (8): Mavg <- Mavg + alpha * (L - Mavg)
+    mavg = mavg0 + cfg.alpha * (loss - mavg0)
+
+    eps = cfg.eps_scale * err_ema
+    decide = (
+        (state.step >= cfg.warmup_steps)
+        & (state.step >= state.hold_until)
+        & ((state.step % cfg.period) == 0)
+    )
+    # eq. (9)
+    shrink = mavg0 > loss + eps
+    grow = mavg0 < loss - eps
+    delta = jnp.where(shrink, -1, jnp.where(grow, 1, 0)).astype(jnp.int32)
+    n = jnp.where(decide, state.n + delta, state.n)
+    n = jnp.clip(n, cfg.min_bits, cfg.max_bits)
+
+    lr_changed = jnp.asarray(lr_changed, bool)
+    hold_until = jnp.where(
+        lr_changed, state.step + cfg.lr_change_hold, state.hold_until
+    ).astype(jnp.int32)
+    # During the hold window run at full container precision.
+    n = jnp.where(state.step < hold_until, cfg.max_bits, n)
+
+    return BitChopState(
+        mavg=mavg,
+        err_ema=err_ema,
+        n=n.astype(jnp.int32),
+        step=state.step + 1,
+        hold_until=hold_until,
+    )
+
+
+def effective_bits(state: BitChopState, cfg: BitChopConfig) -> jax.Array:
+    """Bitlength to apply this step (full precision inside hold windows)."""
+    return jnp.where(state.step < state.hold_until, cfg.max_bits, state.n)

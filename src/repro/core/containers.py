@@ -1,0 +1,176 @@
+"""Floating-point container manipulation.
+
+Implements the bit-level plumbing behind Schrödinger's FP: splitting
+FP32/BF16 values into (sign, exponent, mantissa) fields, the mantissa
+truncation quantizer Q(M, n) of eq. (5), and the stochastic fractional
+bitlength extension of eq. (6).
+
+All functions are pure jnp and differentiable only where explicitly made so
+(see quantum_mantissa.py for the custom VJPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatSpec:
+    """Static description of an IEEE-ish floating point container."""
+
+    name: str
+    dtype: jnp.dtype
+    int_dtype: jnp.dtype
+    total_bits: int
+    exp_bits: int
+    man_bits: int
+    bias: int
+
+    @property
+    def sign_shift(self) -> int:
+        return self.total_bits - 1
+
+    @property
+    def exp_shift(self) -> int:
+        return self.man_bits
+
+    @property
+    def exp_mask(self) -> int:
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def man_mask(self) -> int:
+        return (1 << self.man_bits) - 1
+
+
+FP32 = FloatSpec("fp32", jnp.dtype(jnp.float32), jnp.dtype(jnp.uint32), 32, 8, 23, 127)
+BF16 = FloatSpec("bf16", jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.uint16), 16, 8, 7, 127)
+FP16 = FloatSpec("fp16", jnp.dtype(jnp.float16), jnp.dtype(jnp.uint16), 16, 5, 10, 15)
+
+_SPECS = {s.dtype: s for s in (FP32, BF16, FP16)}
+
+
+def spec_for(x: Union[jax.Array, jnp.dtype]) -> FloatSpec:
+    dtype = jnp.dtype(x.dtype if hasattr(x, "dtype") else x)
+    try:
+        return _SPECS[dtype]
+    except KeyError as e:  # pragma: no cover - guarded by callers
+        raise ValueError(f"No FloatSpec for dtype {dtype}") from e
+
+
+def bitcast_to_int(x: jax.Array) -> jax.Array:
+    """Reinterpret a float array as its unsigned integer container."""
+    spec = spec_for(x)
+    return jax.lax.bitcast_convert_type(x, spec.int_dtype)
+
+
+def bitcast_to_float(u: jax.Array, spec: FloatSpec) -> jax.Array:
+    return jax.lax.bitcast_convert_type(u.astype(spec.int_dtype), spec.dtype)
+
+
+def split_fields(x: jax.Array):
+    """Split into (sign, biased_exponent, mantissa) unsigned integer fields."""
+    spec = spec_for(x)
+    u = bitcast_to_int(x)
+    sign = (u >> spec.sign_shift) & 1
+    exp = (u >> spec.exp_shift) & spec.exp_mask
+    man = u & spec.man_mask
+    return sign, exp, man
+
+
+def combine_fields(sign: jax.Array, exp: jax.Array, man: jax.Array, spec: FloatSpec) -> jax.Array:
+    u = (
+        (sign.astype(spec.int_dtype) << spec.sign_shift)
+        | ((exp.astype(spec.int_dtype) & spec.exp_mask) << spec.exp_shift)
+        | (man.astype(spec.int_dtype) & spec.man_mask)
+    )
+    return bitcast_to_float(u, spec)
+
+
+def _mantissa_keep_mask(n: jax.Array, spec: FloatSpec) -> jax.Array:
+    """Bitmask keeping the top ``n`` mantissa bits. ``n`` may be traced.
+
+    Equivalent to ``(2^n - 1) << (m - n)`` from eq. (5), expressed as
+    ``man_mask ^ (2^(m-n) - 1)`` which is shift-safe for n in [0, m].
+    """
+    n = jnp.asarray(n, dtype=jnp.int32)
+    n = jnp.clip(n, 0, spec.man_bits)
+    drop = (spec.man_bits - n).astype(spec.int_dtype)
+    one = jnp.asarray(1, dtype=spec.int_dtype)
+    low = jnp.left_shift(one, drop) - one  # 2^(m-n) - 1
+    return jnp.asarray(spec.man_mask, dtype=spec.int_dtype) ^ low
+
+
+def truncate_mantissa(x: jax.Array, n) -> jax.Array:
+    """Q(M, n): zero all but the top ``n`` mantissa bits (paper eq. 5).
+
+    ``n`` is an integer (scalar or broadcastable array, possibly traced).
+    Not differentiable — see quantum_mantissa.qm_quantize for the STE
+    wrapper.
+    """
+    spec = spec_for(x)
+    u = bitcast_to_int(x)
+    keep = _mantissa_keep_mask(n, spec)
+    mask = (
+        jnp.asarray(~spec.man_mask & ((1 << spec.total_bits) - 1), dtype=spec.int_dtype)
+        | keep
+    )
+    return bitcast_to_float(u & mask, spec)
+
+
+def round_mantissa(x: jax.Array, n) -> jax.Array:
+    """Round-to-nearest-even mantissa reduction to ``n`` bits.
+
+    A beyond-paper variant of eq. (5): instead of truncation, adds half an
+    ULP of the target precision before masking. Used by the gradient
+    compression path where unbiasedness matters less than magnitude
+    preservation; the paper's quantizer is ``truncate_mantissa``.
+    """
+    spec = spec_for(x)
+    n = jnp.clip(jnp.asarray(n, dtype=jnp.int32), 0, spec.man_bits)
+    u = bitcast_to_int(x)
+    drop = (spec.man_bits - n).astype(spec.int_dtype)
+    one = jnp.asarray(1, dtype=spec.int_dtype)
+    # round-half-away: add 2^(drop-1) where drop > 0, then mask.
+    half = jnp.where(drop > 0, jnp.left_shift(one, jnp.maximum(drop, 1) - one), 0)
+    exp_all_ones = ((u >> spec.exp_shift) & spec.exp_mask) == spec.exp_mask
+    u2 = u + half.astype(spec.int_dtype)
+    # Adding into the mantissa may carry into the exponent — that is the
+    # correct IEEE behaviour (rounds up to the next binade). Guard inf/nan.
+    u2 = jnp.where(exp_all_ones, u, u2)
+    keep = _mantissa_keep_mask(n, spec)
+    mask = (
+        jnp.asarray(~spec.man_mask & ((1 << spec.total_bits) - 1), dtype=spec.int_dtype)
+        | keep
+    )
+    return bitcast_to_float(u2 & mask, spec)
+
+
+def stochastic_bitlength(n_float: jax.Array, key: jax.Array, max_bits: int) -> jax.Array:
+    """Eq. (6): draw an integer bitlength from a real-valued one.
+
+    Returns floor(n) + Bernoulli(frac(n)), clipped to [0, max_bits]. One
+    draw per call — the paper (§IV-A3) finds per-tensor granularity
+    sufficient, so callers pass one key per tensor per step.
+    """
+    nf = jnp.clip(jnp.asarray(n_float, jnp.float32), 0.0, float(max_bits))
+    floor_n = jnp.floor(nf)
+    frac = nf - floor_n
+    bump = jax.random.bernoulli(key, frac).astype(jnp.int32)
+    return jnp.clip(floor_n.astype(jnp.int32) + bump, 0, max_bits)
+
+
+def exponent_field(x: jax.Array) -> jax.Array:
+    """The biased exponent field as uint8 (input to Gecko)."""
+    _, exp, _ = split_fields(x)
+    return exp.astype(jnp.uint8)
+
+
+def finite_like(x: jax.Array) -> jax.Array:
+    """True where x is finite (exponent field not all-ones)."""
+    spec = spec_for(x)
+    _, exp, _ = split_fields(x)
+    return exp != spec.exp_mask

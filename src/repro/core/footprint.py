@@ -1,0 +1,136 @@
+"""Bit-exact SFP footprint accounting (reproduces Table I / Fig 12 / Fig 13).
+
+Computes, for a tensor and a container policy, exactly how many bits the
+paper's variable-length encoding would write to off-chip memory:
+
+  total = sign_bits + mantissa_bits + gecko(exponent_field)
+
+plus the baselines (FP32, BF16) and the comparison schemes of Fig 13
+(JS zero-skip and GIST++-style sparsity encoding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers, gecko
+
+
+@dataclasses.dataclass(frozen=True)
+class FootprintReport:
+    n_values: int
+    sign_bits: int
+    mantissa_bits: int
+    exponent_bits: int
+    metadata_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return self.sign_bits + self.mantissa_bits + self.exponent_bits + self.metadata_bits
+
+    def vs_fp32(self) -> float:
+        return self.total_bits / (32.0 * max(self.n_values, 1))
+
+    def vs_bf16(self) -> float:
+        return self.total_bits / (16.0 * max(self.n_values, 1))
+
+    def breakdown(self) -> Dict[str, float]:
+        t = max(self.total_bits, 1)
+        return {
+            "sign": self.sign_bits / t,
+            "mantissa": self.mantissa_bits / t,
+            "exponent": self.exponent_bits / t,
+            "metadata": self.metadata_bits / t,
+        }
+
+
+def sfp_footprint(x: jax.Array, mantissa_bits, *, signless: bool = False,
+                  gecko_mode: str = "delta") -> FootprintReport:
+    """Exact SFP bits for tensor ``x`` stored at ``mantissa_bits`` mantissa.
+
+    ``mantissa_bits`` may be a python int, a scalar, or fractional (QM's
+    expectation: fractional n costs its expected bits). ``signless`` models
+    post-ReLU/softmax tensors whose sign bit is elided (§IV-D).
+    """
+    n = int(x.size)
+    exp = containers.exponent_field(x)
+    ebits = int(gecko.compressed_bits(exp, mode=gecko_mode))
+    mbits = float(jnp.clip(jnp.asarray(mantissa_bits, jnp.float32), 0,
+                           containers.spec_for(x).man_bits)) * n
+    return FootprintReport(
+        n_values=n,
+        sign_bits=0 if signless else n,
+        mantissa_bits=int(round(mbits)),
+        exponent_bits=ebits,
+        metadata_bits=0,  # mantissa-length metadata: 2 floats/layer, negligible
+    )
+
+
+def sfp_js_footprint(x: jax.Array, mantissa_bits, *, signless: bool = False,
+                     gecko_mode: str = "delta") -> FootprintReport:
+    """SFP + JS zero-skip combination (paper §VI-B): one tag bit per value,
+    containers only for the nonzeros — ReLU zeros otherwise poison the
+    Gecko delta rows with exponent-field-0 outliers."""
+    n = int(x.size)
+    flat = x.reshape(-1)
+    nz_mask = flat != 0
+    nnz = int(jnp.sum(nz_mask))
+    exp = containers.exponent_field(flat)
+    exp_nz = jnp.where(nz_mask, exp, 127).astype(jnp.uint8)
+    # account only nonzero exponents (hardware packs them densely; the
+    # where() keeps this jit-friendly at identical group count, which makes
+    # the estimate slightly conservative)
+    nz_sorted = jnp.sort(exp_nz)  # cluster padding 127s together
+    ebits = int(gecko.compressed_bits(nz_sorted, mode=gecko_mode))
+    ebits = int(ebits * (nnz / max(n, 1)))
+    mbits = float(jnp.clip(jnp.asarray(mantissa_bits, jnp.float32), 0,
+                           containers.spec_for(x).man_bits)) * nnz
+    return FootprintReport(
+        n_values=n,
+        sign_bits=(0 if signless else nnz),
+        mantissa_bits=int(round(mbits)),
+        exponent_bits=ebits,
+        metadata_bits=n,  # 1 zero-tag bit per value
+    )
+
+
+def baseline_bits(x: jax.Array, fmt: str) -> int:
+    n = int(x.size)
+    return {"fp32": 32, "bf16": 16, "fp16": 16}[fmt] * n
+
+
+def js_bits(x: jax.Array, base_bits: int = 16) -> int:
+    """JS: sparse zero-skip with 1 extra bit per value (Fig 13 baseline)."""
+    n = int(x.size)
+    nnz = int(jnp.sum(x != 0))
+    return n + nnz * base_bits
+
+
+def gist_bits(x: jax.Array, base_bits: int = 16, *, relu_pool: bool = False) -> int:
+    """GIST++-style: ReLU-pool tensors cost 1 bit/value; otherwise sparsity
+    encoding is used only when it reduces footprint (the '++' refinement)."""
+    n = int(x.size)
+    if relu_pool:
+        return n
+    return min(baseline_bits(x, "bf16" if base_bits == 16 else "fp32"), js_bits(x, base_bits))
+
+
+def container_realized_bits(x: jax.Array, container: str) -> int:
+    """Byte-aligned on-TPU container sizes (DESIGN.md D3)."""
+    n = int(x.size)
+    per = {"sfp8": 8, "sfp16": 16, "bf16": 16, "fp32": 32}[container]
+    group_overhead = {"sfp8": 8 / 128, "sfp16": 8 / 128}.get(container, 0.0)
+    return int(n * (per + group_overhead))
+
+
+def tensor_group_numels(tree) -> Dict[str, int]:
+    """Flatten a pytree of arrays to {path: numel} for QM lambda weights."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[name] = int(leaf.size)
+    return out

@@ -1,0 +1,172 @@
+"""Gecko: lossless exponent compression (paper §IV-C).
+
+Training exponents concentrate tightly around the bias (127). Gecko stores
+each exponent with only as many bits as its magnitude needs, amortizing the
+width metadata over groups:
+
+Delta mode (the paper's primary scheme):
+  * values are grouped 64 at a time, viewed as an 8x8 matrix;
+  * each of the 8 columns stores an 8-bit *base* exponent = its row-0 value;
+  * rows 1..7 store sign+magnitude *deltas* against the column bases;
+  * each delta row carries one 3-bit width field sized by the row's max
+    magnitude: a row whose max |delta| needs k bits costs
+    3 + 8*(k+1) bits (sign+magnitude per value), or just the 3-bit field
+    when every delta in the row is zero (k = 0). [DESIGN.md D2]
+
+Bias mode (the paper's alternative):
+  * a fixed programmable bias (127) is subtracted from every exponent;
+  * values are grouped 8 at a time with one 3-bit width field per group.
+
+Both encoders here are *bit-exact invertible* (property-tested) and return
+exact bit counts without materializing bitstreams. The byte-aligned
+on-device realization lives in repro/kernels/sfp_pack.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+DELTA_GROUP = (8, 8)  # (rows, cols) — 64 exponents per group
+BIAS_GROUP = 8
+DEFAULT_BIAS = 127
+
+
+def _bitwidth(x: jax.Array) -> jax.Array:
+    """Bits needed to represent unsigned magnitude x (0 -> 0 bits).
+
+    Exact for x < 2^15 (we only ever see x <= 255).
+    """
+    x = x.astype(jnp.int32)
+    w = jnp.zeros_like(x)
+    for b in range(8, -1, -1):  # 255 needs 8 bits
+        w = jnp.where((x >> b) > 0, jnp.maximum(w, b + 1), w)
+    return w
+
+
+class GeckoDelta(NamedTuple):
+    """Mechanical encoding (lossless); bit accounting is separate."""
+
+    bases: jax.Array      # (G, 8)  uint8 column bases (row 0)
+    deltas: jax.Array     # (G, 7, 8) int16 row deltas vs column base
+    row_widths: jax.Array  # (G, 7) int32 magnitude bits per row
+    n_values: int          # original (un-padded) element count
+
+
+class GeckoBias(NamedTuple):
+    deltas: jax.Array       # (G, 8) int16 value - bias
+    group_widths: jax.Array  # (G,) int32
+    bias: int
+    n_values: int
+
+
+def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem:
+        # Edge-replicate: hardware pads the trailing partial group; repeating
+        # the last exponent keeps the padded deltas at zero cost.
+        x = jnp.concatenate([x, jnp.broadcast_to(x[-1:], (rem,))])
+    return x
+
+
+def encode_delta(exponents: jax.Array) -> GeckoDelta:
+    """Encode a flat uint8 exponent stream (8x8 delta scheme)."""
+    e = _pad_to(exponents.reshape(-1).astype(jnp.uint8), 64)
+    g = e.reshape(-1, 8, 8).astype(jnp.int16)  # (G, row, col)
+    bases = g[:, 0, :]
+    deltas = g[:, 1:, :] - bases[:, None, :]
+    row_max = jnp.max(jnp.abs(deltas), axis=2)  # (G, 7)
+    row_widths = _bitwidth(row_max)
+    return GeckoDelta(
+        bases=bases.astype(jnp.uint8),
+        deltas=deltas,
+        row_widths=row_widths,
+        n_values=int(exponents.size),
+    )
+
+
+def decode_delta(enc: GeckoDelta) -> jax.Array:
+    g0 = enc.bases.astype(jnp.int16)[:, None, :]
+    rest = enc.deltas + g0
+    full = jnp.concatenate([g0, rest], axis=1)  # (G, 8, 8)
+    flat = full.reshape(-1).astype(jnp.uint8)
+    return flat[: enc.n_values]
+
+
+def delta_bits(enc: GeckoDelta) -> jax.Array:
+    """Exact compressed size in bits (metadata + payload), padded groups included."""
+    per_row = jnp.where(enc.row_widths > 0, 3 + 8 * (enc.row_widths + 1), 3)
+    bases_bits = enc.bases.shape[0] * 8 * 8  # 8 bases x 8b per group
+    # fp32 accumulation: bit counts overflow int32 for multi-GB tensors and
+    # x64 is disabled; ~7 significant digits is ample for accounting.
+    return jnp.asarray(bases_bits, jnp.float32) + jnp.sum(
+        per_row.astype(jnp.float32))
+
+
+def encode_bias(exponents: jax.Array, bias: int = DEFAULT_BIAS) -> GeckoBias:
+    e = _pad_to(exponents.reshape(-1).astype(jnp.uint8), BIAS_GROUP)
+    d = e.astype(jnp.int16) - jnp.int16(bias)
+    d = d.reshape(-1, BIAS_GROUP)
+    widths = _bitwidth(jnp.max(jnp.abs(d), axis=1))
+    return GeckoBias(deltas=d, group_widths=widths, bias=bias,
+                     n_values=int(exponents.size))
+
+
+def decode_bias(enc: GeckoBias) -> jax.Array:
+    flat = (enc.deltas + jnp.int16(enc.bias)).reshape(-1).astype(jnp.uint8)
+    return flat[: enc.n_values]
+
+
+def bias_bits(enc: GeckoBias) -> jax.Array:
+    per_group = jnp.where(
+        enc.group_widths > 0, 3 + BIAS_GROUP * (enc.group_widths + 1), 3
+    )
+    return jnp.sum(per_group.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Pure accounting entry points (jit-friendly; no NamedTuple plumbing).
+# ---------------------------------------------------------------------------
+
+def compressed_bits(exponents: jax.Array, mode: str = "delta",
+                    bias: int = DEFAULT_BIAS) -> jax.Array:
+    """Exact Gecko-compressed size of a uint8 exponent stream, in bits."""
+    if mode == "delta":
+        return delta_bits(encode_delta(exponents))
+    elif mode == "bias":
+        return bias_bits(encode_bias(exponents, bias))
+    raise ValueError(f"unknown gecko mode: {mode}")
+
+
+def compression_ratio(exponents: jax.Array, mode: str = "delta",
+                      bias: int = DEFAULT_BIAS) -> jax.Array:
+    """(M + C) / O per the paper: metadata+compressed over original 8b/value."""
+    comp = compressed_bits(exponents, mode, bias)
+    return comp / jnp.asarray(exponents.size * 8, jnp.float32)
+
+
+def per_value_bits(exponents: jax.Array, mode: str = "delta",
+                   bias: int = DEFAULT_BIAS) -> jax.Array:
+    """Post-encoding bitlength of each value's exponent (Fig 10 CDF).
+
+    Row-0 bases count as 8b in delta mode; delta values count sign+magnitude
+    of their row width.
+    """
+    if mode == "delta":
+        enc = encode_delta(exponents)
+        g = enc.bases.shape[0]
+        base_bits = jnp.full((g, 1, 8), 8, jnp.int32)
+        row_bits = jnp.where(enc.row_widths > 0, enc.row_widths + 1, 0)
+        rest_bits = jnp.broadcast_to(row_bits[:, :, None], (g, 7, 8))
+        bits = jnp.concatenate([base_bits, rest_bits], axis=1).reshape(-1)
+        return bits[: enc.n_values]
+    elif mode == "bias":
+        enc = encode_bias(exponents, bias)
+        per_group = jnp.where(enc.group_widths > 0, enc.group_widths + 1, 0)
+        bits = jnp.broadcast_to(per_group[:, None],
+                                (per_group.shape[0], BIAS_GROUP)).reshape(-1)
+        return bits[: enc.n_values]
+    raise ValueError(f"unknown gecko mode: {mode}")

@@ -1,0 +1,126 @@
+"""Quantum Mantissa: learning mantissa bitlengths with gradient descent.
+
+Paper §IV-A. A real-valued bitlength parameter n per (tensor, kind) is
+optimized jointly with the model:
+
+  forward  : q = Q(x, floor(n) + Bernoulli(frac(n)))          (eq. 5, 6)
+  backward : dL/dx = dL/dq                                     (STE)
+             dL/dn = sum(dL/dq * (Q(x, floor(n)+1) - Q(x, floor(n))))
+  loss     : L = L0 + gamma * sum_i lambda_i * n_i             (eq. 7)
+
+The dL/dn term is the exact derivative of the expectation
+E[Q(x, n)] = (1-{n}) Q(x, floor n) + {n} Q(x, floor n + 1), which is
+piecewise-linear in n — this is the "function of the weight values and
+gradients" the paper computes with O(n) overhead (§IV-A3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def qm_quantize(x: jax.Array, n: jax.Array, key: jax.Array) -> jax.Array:
+    """Stochastic fractional-bitlength mantissa quantization (eq. 5+6).
+
+    Args:
+      x:   float array (fp32 or bf16).
+      n:   scalar float32 bitlength parameter (differentiable).
+      key: PRNG key; one Bernoulli draw per call (per-tensor granularity).
+    """
+    spec = containers.spec_for(x)
+    n_int = containers.stochastic_bitlength(n, key, spec.man_bits)
+    return containers.truncate_mantissa(x, n_int)
+
+
+def _qm_fwd(x, n, key):
+    spec = containers.spec_for(x)
+    n_int = containers.stochastic_bitlength(n, key, spec.man_bits)
+    q = containers.truncate_mantissa(x, n_int)
+    # Save x and n (cheap: n is scalar); Q(x, floor), Q(x, floor+1) are
+    # recomputed in the backward pass — keeping the stash small is the point.
+    return q, (x, n)
+
+
+def _qm_bwd(res, g):
+    x, n = res
+    spec = containers.spec_for(x)
+    nf = jnp.clip(jnp.asarray(n, jnp.float32), 0.0, float(spec.man_bits))
+    floor_n = jnp.floor(nf).astype(jnp.int32)
+    ceil_n = jnp.minimum(floor_n + 1, spec.man_bits)
+    q_lo = containers.truncate_mantissa(x, floor_n)
+    q_hi = containers.truncate_mantissa(x, ceil_n)
+    # dE[Q]/dn = Q(x, floor+1) - Q(x, floor)   (0 once n >= man_bits)
+    diff = (q_hi - q_lo).astype(jnp.float32)
+    dn = jnp.sum(g.astype(jnp.float32) * diff).astype(jnp.float32)
+    dx = g.astype(x.dtype)  # straight-through
+    return dx, dn, None
+
+
+qm_quantize.defvjp(_qm_fwd, _qm_bwd)
+
+
+def qm_quantize_deterministic(x: jax.Array, n: jax.Array) -> jax.Array:
+    """Deployment-mode quantization: round the learned bitlength up (§IV-A4)."""
+    spec = containers.spec_for(x)
+    n_int = jnp.clip(jnp.ceil(jnp.asarray(n, jnp.float32)), 0, spec.man_bits).astype(jnp.int32)
+    return containers.truncate_mantissa(x, n_int)
+
+
+@dataclasses.dataclass(frozen=True)
+class QMConfig:
+    """Hyper-parameters for Quantum Mantissa (paper defaults)."""
+
+    gamma: float = 0.1          # regularizer strength (0.1 -> 0.01 -> 0.001)
+    init_bits: float = 7.0      # start at full bf16 mantissa
+    lr: float = 0.01            # learning rate for the bitlength params
+    min_bits: float = 0.0
+    # step thresholds at which gamma decays 10x (paper: epochs 0/30/60 of 90)
+    gamma_decay_steps: tuple = ()
+    # freeze (round up) bitlengths for the final fraction of training (§IV-A4)
+    freeze_final_fraction: float = 0.111  # last 10 of 90 epochs
+
+
+def gamma_at(cfg: QMConfig, step: jax.Array) -> jax.Array:
+    g = jnp.asarray(cfg.gamma, jnp.float32)
+    for s in cfg.gamma_decay_steps:
+        g = jnp.where(step >= s, g * 0.1, g)
+    return g
+
+
+def init_bitlengths(names, cfg: QMConfig) -> Dict[str, jax.Array]:
+    """One fp32 bitlength parameter per named tensor group."""
+    return {name: jnp.asarray(cfg.init_bits, jnp.float32) for name in names}
+
+
+def footprint_lambdas(numels: Mapping[str, int]) -> Dict[str, float]:
+    """lambda_i = tensor i's share of the total stash footprint (eq. 7).
+
+    The paper weights each group by its footprint so the penalty measures
+    total memory, making the optimizer squeeze big tensors hardest.
+    """
+    total = float(sum(numels.values()))
+    if total <= 0:
+        return {k: 0.0 for k in numels}
+    return {k: float(v) / total for k, v in numels.items()}
+
+
+def qm_penalty(bitlengths: Mapping[str, jax.Array], lambdas: Mapping[str, float],
+               gamma) -> jax.Array:
+    """gamma * sum_i lambda_i * n_i  (eq. 7, second term)."""
+    acc = jnp.asarray(0.0, jnp.float32)
+    for name, n in bitlengths.items():
+        lam = lambdas.get(name, 0.0)
+        acc = acc + lam * jnp.clip(jnp.asarray(n, jnp.float32), 0.0, None)
+    return jnp.asarray(gamma, jnp.float32) * acc
+
+
+def clip_bitlengths(bitlengths: Dict[str, jax.Array], max_bits: float,
+                    min_bits: float = 0.0) -> Dict[str, jax.Array]:
+    return {k: jnp.clip(v, min_bits, max_bits) for k, v in bitlengths.items()}

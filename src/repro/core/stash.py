@@ -1,0 +1,128 @@
+"""SFP-compressed activation stashing.
+
+The paper's hardware sits between the compute units and DRAM: the forward
+pass *encodes* activations as they are stashed off-chip; the backward pass
+*decodes* them on the way back in (§V). The TPU-native equivalent is a
+scan-over-layers whose saved cross-pass residuals are the packed
+containers:
+
+    sfp_scan(layer_fn, compress, decompress, (h0, extras0), xs)
+
+  forward : for each layer i, stash c_i = compress(h_i, x_i) and compute
+            h_{i+1} = layer_fn(decompress(c_i, x_i), x_i) — compute consumes
+            the quantized values, exactly as in the paper (§IV-A1).
+  backward: a reverse scan re-reads each c_i, decompresses, recomputes the
+            layer (rematerialization) and transposes it. Only the packed
+            containers (plus the tiny ``extras`` carry, e.g. accumulated
+            router aux losses) live across the forward/backward gap.
+
+This gives bit-identical forward/backward values (the backward sees exactly
+what the forward computed from) and makes the stash the *only* cross-pass
+residual — the paper's "transparent encode/decode" as a JAX transform.
+
+Gradient semantics at the stash boundary: straight-through (dL/dh = dL/dh_q)
+— the paper's STE (§IV-A1). The optional ``stash_grad`` hook lets Quantum
+Mantissa inject bitlength gradients computed from the *realized* stash
+(DESIGN.md D8: an importance-weighted estimator, since hardware cannot see
+mantissa bits it never stored).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sfp_scan(
+    layer_fn: Callable[[Tuple[Any, Any], Any], Tuple[Tuple[Any, Any], Any]],
+    compress: Callable[[Any, Any], Any],
+    decompress: Callable[[Any, Any], Any],
+    carry0: Tuple[Any, Any],
+    xs: Any,
+    stash_grad: Optional[Callable[[Any, Any, Any], Any]] = None,
+):
+    """Scan with compressed cross-pass activation stash.
+
+    Args:
+      layer_fn:  ((h, extras), x) -> ((h_new, extras_new), aux). ``extras``
+                 is a small differentiable side-carry (e.g. accumulated MoE
+                 aux loss); ``aux`` is metrics-only (cotangent discarded).
+      compress:  (h, x) -> packed pytree (the off-chip representation).
+      decompress:(packed, x) -> h_q with h's shape/dtype.
+      carry0:    (h0, extras0).
+      xs:        per-layer dict pytree (params slices, rng keys, bitlengths).
+      stash_grad: optional (dh, packed, x) -> {top-level xs key: cotangent}
+                 overlay added to the parameter cotangents (QM bitlength
+                 gradients). Keys must map to float leaves of xs.
+
+    Returns:
+      ((h_final, extras_final), aux_stacked)
+    """
+
+    def fwd_body(carry, x):
+        h, extras = carry
+        c = compress(h, x)
+        h_q = decompress(c, x)
+        (h_new, extras_new), aux = layer_fn((h_q, extras), x)
+        return (h_new, extras_new), (c, extras, aux)
+
+    @jax.custom_vjp
+    def run(carry0, xs):
+        carry, (_, _, aux) = jax.lax.scan(fwd_body, carry0, xs)
+        return carry, aux
+
+    def run_fwd(carry0, xs):
+        carry, (stash, extras_seq, aux) = jax.lax.scan(fwd_body, carry0, xs)
+        # Residuals: packed stash + per-step extras (tiny) + xs (an
+        # unmodified input — kept alive anyway, no copy).
+        return (carry, aux), (stash, extras_seq, xs)
+
+    def run_bwd(res, cotangents):
+        stash, extras_seq, xs = res
+        (g_h, g_extras), _g_aux = cotangents  # aux is metrics-only
+
+        def bwd_body(dcarry, step):
+            dh, dex = dcarry
+            x, c, extras_in = step
+            h_q = decompress(c, x)
+
+            def fwd_only(hh, ee, xx):
+                (h_new, e_new), _aux = layer_fn((hh, ee), xx)
+                return h_new, e_new
+
+            _, vjp = jax.vjp(fwd_only, h_q, extras_in, x)
+            dh_prev, dex_prev, dx = vjp((dh, dex))
+            if stash_grad is not None:
+                dx = dict(dx)
+                for k, v in stash_grad(dh, c, x).items():
+                    dx[k] = jax.tree.map(lambda a, b: a + b, dx[k], v)
+            return (dh_prev, dex_prev), dx
+
+        (dh0, dex0), dxs = jax.lax.scan(
+            bwd_body, (g_h, g_extras), (xs, stash, extras_seq), reverse=True)
+        return (dh0, dex0), dxs
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(carry0, xs)
+
+
+def identity_compress(h, x):
+    """Baseline: stash the raw activation (plain remat-with-saved-carries)."""
+    del x
+    return h
+
+
+def identity_decompress(c, x):
+    del x
+    return c
+
+
+def plain_scan(layer_fn, carry0, xs):
+    """Uncompressed-stash baseline with the same remat structure as sfp_scan.
+
+    Used for the paper-faithful FP32/BF16 baselines so that SFP-vs-baseline
+    comparisons isolate the container change, not the remat strategy.
+    """
+    return sfp_scan(layer_fn, identity_compress, identity_decompress,
+                    carry0, xs)

@@ -1,0 +1,1 @@
+"""Data pipeline: synthetic corpora, sharded batching, prefetch."""

@@ -1,0 +1,57 @@
+"""Host-side input pipeline: device placement + background prefetch.
+
+Batches are produced on the host (data/synthetic.py or any iterator of
+numpy dicts), placed with the training step's batch shardings, and
+prefetched on a background thread so host data generation overlaps device
+compute — the standard single-controller JAX input pattern. At multi-host
+scale each host would feed its local shard (jax.make_array_from_.
+process_allgather pattern); here the single process owns all (host)
+devices so placement is one device_put.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def place(batch: Dict[str, np.ndarray], shardings: Optional[Dict[str, Any]]
+          ) -> Dict[str, jax.Array]:
+    if shardings is None:
+        return {k: jax.device_put(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, shardings.get(k)) for k, v in batch.items()}
+
+
+def prefetch(it: Iterator[Dict[str, np.ndarray]],
+             shardings: Optional[Dict[str, Any]] = None,
+             depth: int = 2) -> Iterator[Dict[str, jax.Array]]:
+    """Background-thread prefetch of ``depth`` placed batches."""
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def worker():
+        try:
+            for b in it:
+                if stop.is_set():
+                    return
+                q.put(place(b, shardings))
+        except Exception as e:  # pragma: no cover
+            q.put(e)
+        finally:
+            q.put(None)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            if isinstance(item, Exception):
+                raise item
+            yield item
+    finally:
+        stop.set()

@@ -1,0 +1,72 @@
+"""Elastic scaling: rebuild meshes and reshard state when capacity changes.
+
+The flow on a real fleet: a node dies -> the job restarts on the surviving
+slice -> `plan_remesh` picks the largest valid (data, model) mesh for the
+new device count -> the checkpoint restores with the new shardings
+(CheckpointManager.restore re-places host-loaded leaves). Divisibility
+constraints come from the model config (TP degree must divide fused head /
+ff dims; batch must divide the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_devices: int
+
+
+def valid_tp_degrees(cfg: ArchConfig, max_tp: int = 64) -> List[int]:
+    """TP degrees that divide every model-sharded dim."""
+    dims = [cfg.padded_vocab]
+    if cfg.n_heads:
+        dims += [cfg.n_heads * cfg.head_dim_, cfg.n_kv_heads * cfg.head_dim_]
+    if cfg.d_ff:
+        dims.append(cfg.d_ff)
+    if cfg.is_moe:
+        dims.append(cfg.n_experts)
+    if cfg.ssm_state:
+        dims.append(cfg.d_inner)
+    if "rglru" in cfg.period:
+        dims.append(cfg.lru_width_)
+    out = []
+    for tp in range(1, max_tp + 1):
+        if all(d % tp == 0 for d in dims):
+            out.append(tp)
+    return out
+
+
+def plan_remesh(n_devices: int, cfg: ArchConfig, global_batch: int,
+                prefer_tp: int = 16) -> RemeshPlan:
+    """Largest (data, model) mesh usable with ``n_devices`` survivors."""
+    tps = [t for t in valid_tp_degrees(cfg, prefer_tp) if t <= n_devices]
+    best: Optional[RemeshPlan] = None
+    for tp in sorted(tps, reverse=True):
+        data = n_devices // tp
+        while data > 1 and global_batch % data != 0:
+            data -= 1
+        used = data * tp
+        plan = RemeshPlan(shape=(data, tp), axes=("data", "model"),
+                          dropped_devices=n_devices - used)
+        if best is None or used > best.shape[0] * best.shape[1] or (
+                used == best.shape[0] * best.shape[1]
+                and abs(tp - prefer_tp) < abs(best.shape[1] - prefer_tp)):
+            best = plan
+    assert best is not None, "no valid mesh"
+    return best
+
+
+def build_mesh(plan: RemeshPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = plan.shape[0] * plan.shape[1]
+    import numpy as np
+    return Mesh(np.asarray(devices[:n]).reshape(plan.shape), plan.axes)

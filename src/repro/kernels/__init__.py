@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for Schrödinger's FP hot spots.
+
+  mantissa_quant   - Q(M, n) truncation (paper eq. 5, the quantizer datapath)
+  sfp_pack         - SFP8/SFP16 container pack/unpack (the §V compressor)
+  flash_attention  - online-softmax attention (consumer of compressed KV)
+  ops              - backend dispatch (pallas on TPU / jnp ref elsewhere)
+  ref              - pure-jnp oracles for all of the above
+"""

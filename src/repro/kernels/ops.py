@@ -1,0 +1,130 @@
+"""Jitted dispatch wrappers: Pallas kernel on TPU, jnp reference elsewhere.
+
+All model/runtime code calls through these so the same program runs on the
+CPU test/dry-run environment (reference path; identical FLOP/byte shape)
+and on real TPUs (Pallas path). ``force_backend()`` is the test hook.
+
+The SFP packed representation is a plain (payload, bases) array pair —
+array-only so it can ride through lax.scan as the compressed stash.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mantissa_quant as _mq
+from repro.kernels import ref as _ref
+from repro.kernels import sfp_pack as _sp
+
+_FORCED: Optional[str] = None  # None | 'pallas' | 'ref' | 'interpret'
+
+
+def force_backend(name: Optional[str]) -> None:
+    """Test hook: force 'pallas' (TPU), 'interpret' (CPU pallas), or 'ref'."""
+    global _FORCED
+    _FORCED = name
+
+
+def backend() -> str:
+    if _FORCED:
+        return _FORCED
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+class Packed(NamedTuple):
+    """SFP-compressed tensor: uint8/uint16 payload + per-128-group bases."""
+
+    payload: jax.Array  # (R, 128) uint8 (sfp8) or uint16 (sfp16)
+    bases: jax.Array    # (R, 1) uint8 shared base exponents
+
+
+# -- mantissa quantization ---------------------------------------------------
+
+def mantissa_quantize(x: jax.Array, n) -> jax.Array:
+    b = backend()
+    if b == "pallas":
+        return _mq.mantissa_quantize(x, n, interpret=False)
+    if b == "interpret":
+        return _mq.mantissa_quantize(x, n, interpret=True)
+    return _ref.mantissa_truncate(x, n)
+
+
+# -- SFP containers ----------------------------------------------------------
+
+def sfp_compress(x: jax.Array, container: str = "sfp8") -> Packed:
+    b = backend()
+    if b in ("pallas", "interpret"):
+        payload, bases = _sp.sfp_pack(x, container=container,
+                                      interpret=(b == "interpret"))
+    else:
+        payload, bases = _ref.sfp_pack(x, container)
+    return Packed(payload=payload, bases=bases)
+
+
+def sfp_decompress(packed: Packed, shape: tuple, dtype,
+                   container: str = "sfp8") -> jax.Array:
+    b = backend()
+    if b in ("pallas", "interpret"):
+        return _sp.sfp_unpack(packed.payload, packed.bases, shape=tuple(shape),
+                              dtype=jnp.dtype(dtype), container=container,
+                              interpret=(b != "pallas"))
+    return _ref.sfp_unpack(packed.payload, packed.bases, tuple(shape),
+                           jnp.dtype(dtype), container)
+
+
+def sfp_compress_nd(x: jax.Array, container: str = "sfp8") -> Packed:
+    """Rank-preserving pack (sharding-friendly; last dim % 128 == 0)."""
+    b = backend()
+    if b in ("pallas", "interpret"):
+        # TPU path: the kernel operates on 128-lane rows; the reshape is a
+        # no-op relayout on device. Interpret mode mirrors it for tests.
+        rows = x.reshape(-1, _ref.GROUP)
+        payload, bases = _sp.sfp_pack(rows, container=container,
+                                      interpret=(b == "interpret"))
+        return Packed(payload=payload.reshape(x.shape),
+                      bases=bases.reshape(*x.shape[:-1],
+                                          x.shape[-1] // _ref.GROUP))
+    payload, bases = _ref.sfp_pack_nd(x, container)
+    return Packed(payload=payload, bases=bases)
+
+
+def sfp_decompress_nd(packed: Packed, dtype, container: str = "sfp8"
+                      ) -> jax.Array:
+    b = backend()
+    if b in ("pallas", "interpret"):
+        shape = packed.payload.shape
+        rows = packed.payload.reshape(-1, _ref.GROUP)
+        bases = packed.bases.reshape(-1, 1)
+        out = _sp.sfp_unpack(rows, bases, shape=shape, dtype=jnp.dtype(dtype),
+                             container=container, interpret=(b != "pallas"))
+        return out
+    return _ref.sfp_unpack_nd(packed.payload, packed.bases, jnp.dtype(dtype),
+                              container)
+
+
+def sfp_roundtrip(x: jax.Array, container: str = "sfp8") -> jax.Array:
+    """compress->decompress (fake-quant view of the realized container)."""
+    return sfp_decompress(sfp_compress(x, container), x.shape, x.dtype,
+                          container)
+
+
+# -- attention ---------------------------------------------------------------
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              prefix_len: int = 0, q_offset: int = 0) -> jax.Array:
+    """GQA attention; Pallas flash kernel on TPU, jnp reference off-TPU."""
+    b = backend()
+    if b in ("pallas", "interpret") and prefix_len == 0 and q_offset == 0:
+        H, KH = q.shape[2], k.shape[2]
+        if H != KH:
+            k = jnp.repeat(k, H // KH, axis=2)
+            v = jnp.repeat(v, H // KH, axis=2)
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap,
+                                   interpret=(b == "interpret"))
+    return _ref.attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, prefix_len=prefix_len,
+                          q_offset=q_offset)

@@ -1,0 +1,227 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel allclose tests, the CPU execution
+path, and the lowering path used by the multi-pod dry-run (Pallas TPU
+kernels cannot lower on the CPU backend; the FLOP/byte structure of these
+references matches the kernels').
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+
+# ---------------------------------------------------------------------------
+# Mantissa quantization (paper eq. 5) — oracle for kernels/mantissa_quant.py
+# ---------------------------------------------------------------------------
+
+
+def mantissa_truncate(x: jax.Array, n) -> jax.Array:
+    """Q(M, n): keep the top ``n`` mantissa bits. ``n`` scalar (traced ok)."""
+    return containers.truncate_mantissa(x, n)
+
+
+# ---------------------------------------------------------------------------
+# SFP8 / SFP16 containers — oracles for kernels/sfp_pack.py
+#
+# Layouts (DESIGN.md D3). One shared 8-bit base exponent per group of 128
+# lanes (Gecko column-base in spirit; max-exponent base so deltas are >= 0):
+#   SFP8  byte  = sign<<7 | dexp4<<3 | man3        (bf16 payload)
+#   SFP16 word  = sign<<15 | dexp5<<10 | man10|man7<<3   (fp32|bf16 payload)
+# dexp saturates; (dexp == max, man == 0) encodes exact zero.
+# ---------------------------------------------------------------------------
+
+GROUP = 128
+
+
+def _sfp_fields(container: str, spec: containers.FloatSpec):
+    if container == "sfp8":
+        man_keep, dexp_bits = 3, 4
+    elif container == "sfp16":
+        man_keep, dexp_bits = (10, 5) if spec.man_bits == 23 else (7, 5)
+    else:
+        raise ValueError(container)
+    return man_keep, dexp_bits
+
+
+def _to_rows(x: jax.Array) -> jax.Array:
+    """Flatten to (rows, 128) lane groups, zero-padding the tail."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % GROUP
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, GROUP)
+
+
+def sfp_pack(x: jax.Array, container: str = "sfp8"):
+    """Pack a float tensor into (payload (R, 128), bases (R, 1) uint8).
+
+    Rows are consecutive 128-lane groups of the flattened tensor (Gecko
+    columns); identical layout to kernels/sfp_pack.py.
+    """
+    spec = containers.spec_for(x)
+    man_keep, dexp_bits = _sfp_fields(container, spec)
+    dexp_max = (1 << dexp_bits) - 1
+
+    xg = _to_rows(x)
+    sign, e, man = containers.split_fields(xg)
+    sign = sign.astype(jnp.int32)
+    e = e.astype(jnp.int32)
+    man = man.astype(jnp.int32)
+
+    base = jnp.max(e, axis=-1, keepdims=True)  # max-exponent base: deltas >= 0
+    dexp = base - e
+    man_top = man >> (spec.man_bits - man_keep)
+
+    flush = (e == 0) | (dexp > dexp_max)  # exact zeros + magnitudes below range
+    dexp = jnp.where(flush, dexp_max, jnp.minimum(dexp, dexp_max))
+    man_top = jnp.where(flush, 0, man_top)
+    sign = jnp.where(e == 0, 0, sign)
+
+    if container == "sfp8":
+        payload = ((sign << 7) | (dexp << 3) | man_top).astype(jnp.uint8)
+    else:
+        payload = ((sign << 15) | (dexp << (15 - dexp_bits)) | (
+            man_top << (15 - dexp_bits - man_keep))).astype(jnp.uint16)
+    return payload, base.astype(jnp.uint8)
+
+
+def sfp_pack_nd(x: jax.Array, container: str = "sfp8"):
+    """Rank-preserving pack: groups along the last dim (must be %128 == 0).
+
+    Keeps the leading dims (batch, seq, ...) intact so GSPMD shardings
+    propagate through the packed stash unchanged. payload has x's shape
+    (uint8/uint16); bases has shape (*x.shape[:-1], D//128).
+    """
+    D = x.shape[-1]
+    assert D % GROUP == 0, (x.shape,)
+    spec = containers.spec_for(x)
+    man_keep, dexp_bits = _sfp_fields(container, spec)
+    dexp_max = (1 << dexp_bits) - 1
+
+    xg = x.reshape(*x.shape[:-1], D // GROUP, GROUP)
+    sign, e, man = containers.split_fields(xg)
+    sign = sign.astype(jnp.int32)
+    e = e.astype(jnp.int32)
+    man = man.astype(jnp.int32)
+    base = jnp.max(e, axis=-1, keepdims=True)
+    dexp = base - e
+    man_top = man >> (spec.man_bits - man_keep)
+    flush = (e == 0) | (dexp > dexp_max)
+    dexp = jnp.where(flush, dexp_max, jnp.minimum(dexp, dexp_max))
+    man_top = jnp.where(flush, 0, man_top)
+    sign = jnp.where(e == 0, 0, sign)
+    if container == "sfp8":
+        payload = ((sign << 7) | (dexp << 3) | man_top).astype(jnp.uint8)
+    else:
+        payload = ((sign << 15) | (dexp << (15 - dexp_bits)) | (
+            man_top << (15 - dexp_bits - man_keep))).astype(jnp.uint16)
+    return payload.reshape(x.shape), base[..., 0].astype(jnp.uint8)
+
+
+def sfp_unpack_nd(payload: jax.Array, bases: jax.Array, dtype,
+                  container: str = "sfp8") -> jax.Array:
+    spec = containers.spec_for(jnp.dtype(dtype))
+    man_keep, dexp_bits = _sfp_fields(container, spec)
+    dexp_max = (1 << dexp_bits) - 1
+
+    D = payload.shape[-1]
+    p = payload.reshape(*payload.shape[:-1], D // GROUP, GROUP).astype(jnp.int32)
+    if container == "sfp8":
+        sign = (p >> 7) & 1
+        dexp = (p >> 3) & dexp_max
+        man_top = p & ((1 << man_keep) - 1)
+    else:
+        sign = (p >> 15) & 1
+        dexp = (p >> (15 - dexp_bits)) & dexp_max
+        man_top = (p >> (15 - dexp_bits - man_keep)) & ((1 << man_keep) - 1)
+    base = bases.astype(jnp.int32)[..., None]
+    e = jnp.maximum(base - dexp, 0)
+    man = man_top << (spec.man_bits - man_keep)
+    flush = (dexp == dexp_max) & (man_top == 0)
+    e = jnp.where(flush, 0, e)
+    man = jnp.where(flush, 0, man)
+    sign = jnp.where(flush, 0, sign)
+    out = containers.combine_fields(
+        sign.astype(spec.int_dtype), e.astype(spec.int_dtype),
+        man.astype(spec.int_dtype), spec)
+    return out.reshape(payload.shape)
+
+
+def sfp_unpack(payload: jax.Array, bases: jax.Array, shape: tuple,
+               dtype, container: str = "sfp8") -> jax.Array:
+    spec = containers.spec_for(jnp.dtype(dtype))
+    man_keep, dexp_bits = _sfp_fields(container, spec)
+    dexp_max = (1 << dexp_bits) - 1
+
+    p = payload.astype(jnp.int32)
+    if container == "sfp8":
+        sign = (p >> 7) & 1
+        dexp = (p >> 3) & dexp_max
+        man_top = p & ((1 << man_keep) - 1)
+    else:
+        sign = (p >> 15) & 1
+        dexp = (p >> (15 - dexp_bits)) & dexp_max
+        man_top = (p >> (15 - dexp_bits - man_keep)) & ((1 << man_keep) - 1)
+
+    base = bases.astype(jnp.int32)
+    e = jnp.maximum(base - dexp, 0)
+    man = man_top << (spec.man_bits - man_keep)
+    flush = (dexp == dexp_max) & (man_top == 0)
+    e = jnp.where(flush, 0, e)
+    man = jnp.where(flush, 0, man)
+    sign = jnp.where(flush, 0, sign)
+    out = containers.combine_fields(
+        sign.astype(spec.int_dtype), e.astype(spec.int_dtype),
+        man.astype(spec.int_dtype), spec)
+    n = 1
+    for s in shape:
+        n *= s
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Attention oracle — for kernels/flash_attention.py
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,           # (B, Sq, H, D)
+    k: jax.Array,           # (B, Sk, KH, D)
+    v: jax.Array,           # (B, Sk, KH, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,      # sliding window (local attention)
+    softcap: Optional[float] = None,   # gemma2 attn-logit softcap
+    prefix_len: int = 0,               # prefix-LM: first P kv fully visible
+    q_offset: int = 0,                 # absolute position of q[0] (decode)
+) -> jax.Array:
+    """Reference multi-head GQA attention, O(Sq*Sk). fp32 accumulation."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    rep = H // KH
+    kq = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vq = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask = k_pos <= q_pos
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    if prefix_len > 0:
+        mask = mask | (k_pos < prefix_len)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

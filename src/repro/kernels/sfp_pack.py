@@ -1,0 +1,167 @@
+"""Pallas TPU kernels: SFP8/SFP16 container pack/unpack.
+
+The paper's compressor/decompressor (§V) adapted to the TPU memory
+hierarchy (DESIGN.md §2): instead of a bit-serial packer at the DRAM pins,
+values are re-containered in 8/16-bit lanes on the HBM<->VMEM path with one
+shared 8-bit base exponent per 128-lane group (a Gecko column base). The
+mantissa width signal from Quantum Mantissa / BitChop decides which
+container a tensor gets; the pack kernel fuses the mantissa truncation with
+the exponent delta encoding — exactly the fusion the hardware packers do.
+
+Layouts (see kernels/ref.py for the bit-level oracle):
+  SFP8  byte = sign<<7 | dexp4<<3 | man3          (bf16 payload)
+  SFP16 word = sign<<15 | dexp5<<10 | manK<<(10-K) (K=10 fp32 / 7 bf16)
+(dexp == max, man == 0) encodes exact zero; dexp saturates (values more
+than 2^-15 below the group max flush — bounded error, see tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import containers
+from repro.kernels import ref as kref
+
+LANES = kref.GROUP  # 128
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _pack_kernel(x_ref, payload_ref, base_ref, *, spec, man_keep, dexp_bits,
+                 out_int):
+    x = x_ref[...]
+    u = jax.lax.bitcast_convert_type(x, spec.int_dtype).astype(jnp.int32)
+    sign = (u >> spec.sign_shift) & 1
+    e = (u >> spec.exp_shift) & spec.exp_mask
+    man = u & spec.man_mask
+
+    dexp_max = (1 << dexp_bits) - 1
+    base = jnp.max(e, axis=-1, keepdims=True)
+    dexp = base - e
+    man_top = man >> (spec.man_bits - man_keep)
+    flush = (e == 0) | (dexp > dexp_max)
+    dexp = jnp.where(flush, dexp_max, jnp.minimum(dexp, dexp_max))
+    man_top = jnp.where(flush, 0, man_top)
+    sign = jnp.where(e == 0, 0, sign)
+
+    if out_int == jnp.uint8:
+        word = (sign << 7) | (dexp << 3) | man_top
+    else:
+        word = (sign << 15) | (dexp << (15 - dexp_bits)) | (
+            man_top << (15 - dexp_bits - man_keep))
+    payload_ref[...] = word.astype(out_int)
+    base_ref[...] = base.astype(jnp.uint8)
+
+
+def _unpack_kernel(payload_ref, base_ref, o_ref, *, spec, man_keep,
+                   dexp_bits):
+    p = payload_ref[...].astype(jnp.int32)
+    dexp_max = (1 << dexp_bits) - 1
+    if payload_ref.dtype == jnp.uint8:
+        sign = (p >> 7) & 1
+        dexp = (p >> 3) & dexp_max
+        man_top = p & ((1 << man_keep) - 1)
+    else:
+        sign = (p >> 15) & 1
+        dexp = (p >> (15 - dexp_bits)) & dexp_max
+        man_top = (p >> (15 - dexp_bits - man_keep)) & ((1 << man_keep) - 1)
+    base = base_ref[...].astype(jnp.int32)
+    e = jnp.maximum(base - dexp, 0)
+    man = man_top << (spec.man_bits - man_keep)
+    flush = (dexp == dexp_max) & (man_top == 0)
+    e = jnp.where(flush, 0, e)
+    man = jnp.where(flush, 0, man)
+    sign = jnp.where(flush, 0, sign)
+    word = (
+        (sign << spec.sign_shift) | (e << spec.exp_shift) | man
+    ).astype(spec.int_dtype)
+    o_ref[...] = jax.lax.bitcast_convert_type(word, spec.dtype)
+
+
+def _to_rows(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % LANES
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), pad
+
+
+@functools.partial(jax.jit, static_argnames=("container", "block_rows",
+                                             "interpret"))
+def sfp_pack(x: jax.Array, *, container: str = "sfp8",
+             block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Pack ``x`` into (payload rows, per-row base exponents).
+
+    Returns (payload (R, 128) uint8|uint16, bases (R, 1) int32). Rows are
+    128-lane groups of the flattened tensor (Gecko columns).
+    """
+    spec = containers.spec_for(x)
+    man_keep, dexp_bits = kref._sfp_fields(container, spec)
+    out_int = jnp.uint8 if container == "sfp8" else jnp.uint16
+
+    rows2d, _pad = _to_rows(x)
+    rows = rows2d.shape[0]
+    block_rows = min(block_rows, rows)
+    rpad = (-rows) % block_rows
+    if rpad:
+        rows2d = jnp.pad(rows2d, ((0, rpad), (0, 0)))
+    grid = (rows2d.shape[0] // block_rows,)
+
+    payload, bases = pl.pallas_call(
+        functools.partial(_pack_kernel, spec=spec, man_keep=man_keep,
+                          dexp_bits=dexp_bits, out_int=out_int),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(rows2d.shape, out_int),
+            jax.ShapeDtypeStruct((rows2d.shape[0], 1), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(rows2d)
+    if rpad:
+        payload, bases = payload[:rows], bases[:rows]
+    return payload, bases
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "container",
+                                             "block_rows", "interpret"))
+def sfp_unpack(payload: jax.Array, bases: jax.Array, *, shape: tuple,
+               dtype, container: str = "sfp8",
+               block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = True) -> jax.Array:
+    spec = containers.spec_for(jnp.dtype(dtype))
+    man_keep, dexp_bits = kref._sfp_fields(container, spec)
+
+    rows = payload.shape[0]
+    block_rows = min(block_rows, rows)
+    rpad = (-rows) % block_rows
+    if rpad:
+        payload = jnp.pad(payload, ((0, rpad), (0, 0)))
+        bases = jnp.pad(bases, ((0, rpad), (0, 0)))
+    grid = (payload.shape[0] // block_rows,)
+
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, spec=spec, man_keep=man_keep,
+                          dexp_bits=dexp_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(payload.shape, spec.dtype),
+        interpret=interpret,
+    )(payload, bases)
+    if rpad:
+        out = out[:rows]
+    n = 1
+    for s in shape:
+        n *= s
+    return out.reshape(-1)[:n].reshape(shape)

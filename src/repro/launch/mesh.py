@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+A function (not a module-level constant) so importing never touches jax
+device state. The dry-run overrides the host platform device count to 512
+*before* any jax import (see dryrun.py lines 1-2).
+
+  single pod : (16, 16)        axes (data, model)      — 256 chips
+  multi  pod : (2, 16, 16)     axes (pod, data, model) — 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for subprocess SPMD tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

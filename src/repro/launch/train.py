@@ -1,0 +1,125 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --preset tiny \
+      --policy qm --steps 200 --ckpt-dir /tmp/ckpt
+
+Presets scale the assigned configs down for the CPU environment; on real
+hardware drop --preset and pass --mesh to shard across the fleet. The loop
+is fault-tolerant: it checkpoints every --ckpt-every steps and
+restores+continues on step failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.core import bitchop, quantum_mantissa as qmod, sfp
+from repro.data import pipeline, synthetic
+from repro.models.model import DecoderModel
+from repro.optim import adamw
+from repro.optim.schedule import Schedule
+from repro.train import loop as loop_mod
+from repro.train import step as step_mod
+
+
+def build(args):
+    cfg = configs.get(args.arch)
+    if args.preset == "tiny":
+        cfg = reduced(cfg)
+        batch, seq = 8, 64
+    elif args.preset == "small":
+        cfg = reduced(cfg, n_layers=max(2 * len(cfg.period), 4), d_model=256)
+        batch, seq = 8, 128
+    else:
+        batch, seq = args.batch, args.seq
+
+    policy = {
+        "none": sfp.SFPPolicy(mode=sfp.MODE_NONE),
+        "qm": sfp.SFPPolicy(mode=sfp.MODE_QM, container=args.container),
+        "bitchop": sfp.SFPPolicy(mode=sfp.MODE_BITCHOP,
+                                 container=args.container),
+        "static": sfp.SFPPolicy(mode=sfp.MODE_STATIC,
+                                container=args.container),
+    }[args.policy]
+
+    model = DecoderModel(cfg, policy)
+    tc = step_mod.TrainConfig(
+        opt=adamw.AdamWConfig(lr=args.lr),
+        schedule=Schedule(kind="cosine", base_lr=args.lr,
+                          warmup_steps=min(50, args.steps // 10),
+                          total_steps=args.steps),
+        qm=qmod.QMConfig(gamma=args.gamma, init_bits=args.qm_init_bits,
+                         lr=args.qm_lr),
+        bc=bitchop.BitChopConfig(),
+        num_microbatches=args.microbatches,
+        grad_compress_bits=args.grad_compress_bits,
+    )
+    return cfg, model, tc, batch, seq
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="tiny",
+                    choices=["tiny", "small", "full"])
+    ap.add_argument("--policy", default="qm",
+                    choices=["none", "qm", "bitchop", "static"])
+    ap.add_argument("--container", default="bit_exact",
+                    choices=["bit_exact", "sfp8", "sfp16"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--qm-init-bits", type=float, default=7.0)
+    ap.add_argument("--qm-lr", type=float, default=0.05)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress-bits", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, model, tc, batch, seq = build(args)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"policy={args.policy} container={args.container}")
+
+    train_step = jax.jit(step_mod.make_train_step(model, tc),
+                         donate_argnums=(0,))
+    state = step_mod.init_state(model, jax.random.PRNGKey(args.seed), tc)
+
+    dcfg = synthetic.SyntheticConfig(vocab=cfg.vocab, seq_len=seq,
+                                     global_batch=batch, seed=args.seed)
+
+    def batches(start):
+        it = synthetic.batches(dcfg, start)
+        def to_batch(b):
+            out = {k: jnp.asarray(v) for k, v in b.items()}
+            if cfg.prefix_tokens:
+                out["cond_embeddings"] = jnp.zeros(
+                    (batch, cfg.prefix_tokens, cfg.d_model),
+                    cfg.compute_dtype)
+            return out
+        return (to_batch(b) for b in it)
+
+    lc = loop_mod.LoopConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, metrics_file=args.metrics,
+        log_every=max(1, args.steps // 50))
+    res = loop_mod.run(train_step, state, batches, lc)
+    last = res.history[-1]
+    print(json.dumps({k: last[k] for k in
+                      ("step", "loss", "xent", "qm_act_mean", "qm_w_mean",
+                       "bc_bits") if k in last}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

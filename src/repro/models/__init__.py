@@ -1,0 +1,1 @@
+"""Model zoo: unified decoder (dense/MoE/SSM/hybrid/audio/vlm) + paper CNNs."""

@@ -1,0 +1,243 @@
+"""CNNs for the paper-faithful reproduction (ResNet18, MobileNetV3-Small).
+
+The paper's own evaluation targets (§VI). Training uses synthetic
+clusterable images (data-free environment, DESIGN.md D1); the benchmarks
+reproduce the *mechanism-level* claims: QM bitlength collapse, BitChop
+trajectories, Gecko ratios, Table I footprint breakdowns, and the Fig 13
+comparison against JS / GIST++ (which need the ReLU/pool structure CNNs
+provide).
+
+``forward(..., collect_stash=True)`` returns every stashed activation with
+its (signless, relu_pool) tags so core.footprint can account each tensor
+exactly as the paper's Table I does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantum_mantissa as qm, sfp
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "resnet18"
+    arch: str = "resnet"          # 'resnet' | 'mobilenetv3'
+    stages: Tuple[int, ...] = (2, 2, 2, 2)
+    widths: Tuple[int, ...] = (64, 128, 256, 512)
+    stem_width: int = 64
+    n_classes: int = 1000
+    img_size: int = 224
+    in_ch: int = 3
+    dtype: str = "float32"
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+RESNET18 = CNNConfig()
+RESNET8 = CNNConfig(name="resnet8", stages=(1, 1, 1), widths=(16, 32, 64),
+                    stem_width=16, n_classes=10, img_size=32)
+MOBILENETV3_SMALL = CNNConfig(
+    name="mobilenetv3-small", arch="mobilenetv3",
+    stages=(1, 2, 3, 2, 3), widths=(16, 24, 40, 96, 576),
+    stem_width=16, n_classes=1000, img_size=224)
+
+
+def conv_init(p: common.ParamFactory, kh, kw, cin, cout):
+    return p((kh, kw, cin, cout), (None, None, None, None),
+             scale=(kh * kw * cin) ** -0.5)
+
+
+def conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def norm_init(p, c):
+    return {"scale": p((c,), (None,), init="ones", dtype=jnp.float32),
+            "bias": p((c,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def norm(params, x):
+    # Group-less "batch-norm free" norm: per-channel affine over layer stats
+    # (synthetic-data training; avoids running-stat plumbing).
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=(1, 2), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2), keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def _hswish(x):
+    return x * jax.nn.relu6(x + 3.0) / 6.0
+
+
+class CNN:
+    def __init__(self, cfg: CNNConfig, policy: sfp.SFPPolicy = sfp.SFPPolicy()):
+        self.cfg = cfg
+        self.policy = policy
+
+    # -- init ----------------------------------------------------------
+
+    def init(self, key) -> Any:
+        p = common.ParamFactory(common.MODE_PARAMS, key,
+                                self.cfg.compute_dtype)
+        return (self._init_resnet(p) if self.cfg.arch == "resnet"
+                else self._init_mnv3(p))
+
+    def _init_resnet(self, p):
+        cfg = self.cfg
+        params = {"stem": {"w": conv_init(p, 3, 3, cfg.in_ch, cfg.stem_width),
+                           "n": norm_init(p, cfg.stem_width)}}
+        cin = cfg.stem_width
+        for si, (n_blocks, cout) in enumerate(zip(cfg.stages, cfg.widths)):
+            for bi in range(n_blocks):
+                stride = 2 if (bi == 0 and si > 0) else 1
+                blk = {
+                    "c1": conv_init(p, 3, 3, cin, cout),
+                    "n1": norm_init(p, cout),
+                    "c2": conv_init(p, 3, 3, cout, cout),
+                    "n2": norm_init(p, cout),
+                }
+                if stride != 1 or cin != cout:
+                    blk["proj"] = conv_init(p, 1, 1, cin, cout)
+                params[f"s{si}b{bi}"] = blk
+                cin = cout
+        params["fc"] = p((cin, cfg.n_classes), (None, None))
+        return params
+
+    def _init_mnv3(self, p):
+        cfg = self.cfg
+        params = {"stem": {"w": conv_init(p, 3, 3, cfg.in_ch, cfg.stem_width),
+                           "n": norm_init(p, cfg.stem_width)}}
+        cin = cfg.stem_width
+        for si, (n_blocks, cout) in enumerate(zip(cfg.stages, cfg.widths)):
+            for bi in range(n_blocks):
+                exp = max(cin * 3, cout)
+                blk = {
+                    "pw1": conv_init(p, 1, 1, cin, exp),
+                    "n1": norm_init(p, exp),
+                    "dw": conv_init(p, 3, 3, 1, exp),
+                    "n2": norm_init(p, exp),
+                    "se_r": p((exp, max(exp // 4, 8)), (None, None)),
+                    "se_e": p((max(exp // 4, 8), exp), (None, None)),
+                    "pw2": conv_init(p, 1, 1, exp, cout),
+                    "n3": norm_init(p, cout),
+                }
+                params[f"s{si}b{bi}"] = blk
+                cin = cout
+        params["fc"] = p((cin, cfg.n_classes), (None, None))
+        return params
+
+    # -- forward -------------------------------------------------------
+
+    def _quant(self, x, bits, key, stash, name, *, signless, relu_pool):
+        """Per-layer activation quantization + stash collection."""
+        pol = self.policy
+        if pol.enabled:
+            if pol.mode == sfp.MODE_QM and bits is not None:
+                x = qm.qm_quantize(x, bits[name] if isinstance(bits, dict)
+                                   else bits, key)
+            elif pol.mode == sfp.MODE_BITCHOP and bits is not None:
+                x = sfp._ste_truncate(x, bits)
+            elif pol.mode == sfp.MODE_STATIC:
+                x = sfp._ste_truncate(x, pol.static_act_bits)
+        if stash is not None:
+            stash.append({"name": name, "tensor": x, "signless": signless,
+                          "relu_pool": relu_pool})
+        return x
+
+    def forward(self, params, images, *, act_bits=None, key=None,
+                collect_stash: bool = False
+                ) -> Tuple[jax.Array, Optional[List[Dict]]]:
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        stash: Optional[List[Dict]] = [] if collect_stash else None
+        k_i = iter(jax.random.split(key, 256))
+
+        x = images.astype(cfg.compute_dtype)
+        x = conv(x, params["stem"]["w"], stride=1 if cfg.img_size <= 64 else 2)
+        x = jax.nn.relu(norm(params["stem"]["n"], x))
+        x = self._quant(x, act_bits, next(k_i), stash, "stem", signless=True,
+                        relu_pool=False)
+
+        if cfg.arch == "resnet":
+            for si in range(len(cfg.stages)):
+                for bi in range(cfg.stages[si]):
+                    blk = params[f"s{si}b{bi}"]
+                    stride = 2 if (bi == 0 and si > 0) else 1
+                    r = x
+                    y = jax.nn.relu(norm(blk["n1"], conv(x, blk["c1"], stride)))
+                    y = self._quant(y, act_bits, next(k_i), stash,
+                                    f"s{si}b{bi}.a1", signless=True,
+                                    relu_pool=False)
+                    y = norm(blk["n2"], conv(y, blk["c2"]))
+                    if "proj" in blk:
+                        r = conv(r, blk["proj"], stride)
+                    x = jax.nn.relu(y + r)
+                    x = self._quant(x, act_bits, next(k_i), stash,
+                                    f"s{si}b{bi}.out", signless=True,
+                                    relu_pool=False)
+        else:
+            for si in range(len(cfg.stages)):
+                for bi in range(cfg.stages[si]):
+                    blk = params[f"s{si}b{bi}"]
+                    stride = 2 if (bi == 0 and si > 0) else 1
+                    y = _hswish(norm(blk["n1"], conv(x, blk["pw1"])))
+                    y = self._quant(y, act_bits, next(k_i), stash,
+                                    f"s{si}b{bi}.exp", signless=False,
+                                    relu_pool=False)
+                    y = _hswish(norm(blk["n2"], conv(y, blk["dw"], stride,
+                                                     groups=y.shape[-1])))
+                    se = jnp.mean(y.astype(jnp.float32), axis=(1, 2))
+                    se = jax.nn.sigmoid(
+                        jax.nn.relu(se @ params[f"s{si}b{bi}"]["se_r"]
+                                    .astype(jnp.float32))
+                        @ params[f"s{si}b{bi}"]["se_e"].astype(jnp.float32))
+                    y = y * se[:, None, None, :].astype(y.dtype)
+                    y = norm(blk["n3"], conv(y, blk["pw2"]))
+                    x = y + x if y.shape == x.shape else y
+                    x = self._quant(x, act_bits, next(k_i), stash,
+                                    f"s{si}b{bi}.out", signless=False,
+                                    relu_pool=False)
+
+        # global average pool (a pooled-after-ReLU tensor for GIST++)
+        pooled = jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+        if stash is not None:
+            stash.append({"name": "pool", "tensor": pooled,
+                          "signless": True, "relu_pool": cfg.arch == "resnet"})
+        logits = pooled @ params["fc"].astype(jnp.float32)
+        return logits, stash
+
+    def loss(self, params, batch, *, act_bits=None, key=None):
+        logits, _ = self.forward(params, batch["images"], act_bits=act_bits,
+                                 key=key)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return nll, {"xent": nll, "acc": acc}
+
+
+def synthetic_images(key, n: int, cfg: CNNConfig):
+    """Clusterable images: class-conditional gaussian blobs + noise.
+
+    Class prototypes come from a FIXED seed (they define the task); the
+    per-call key only draws labels and noise.
+    """
+    k1, k3 = jax.random.split(key, 2)
+    labels = jax.random.randint(k1, (n,), 0, cfg.n_classes)
+    protos = jax.random.normal(
+        jax.random.PRNGKey(1234),
+        (cfg.n_classes, cfg.img_size, cfg.img_size, cfg.in_ch)) * 1.2
+    imgs = protos[labels] + 0.3 * jax.random.normal(
+        k3, (n, cfg.img_size, cfg.img_size, cfg.in_ch))
+    return {"images": imgs.astype(cfg.compute_dtype), "labels": labels}

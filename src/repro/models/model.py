@@ -1,0 +1,505 @@
+"""Unified decoder model over the assigned architecture families.
+
+One `DecoderModel` covers dense / MoE / SSM / hybrid / audio / vlm configs:
+the repeating layer-kind *period* (e.g. gemma3's 5xlocal+global) is scanned
+with stacked parameters via core.stash.sfp_scan, so (a) HLO size is
+depth-independent and (b) the cross-pass activation stash is exactly the
+SFP-compressed containers — the paper's technique as a first-class feature
+of the training step. Remainder layers (n_layers % len(period)) are
+unrolled.
+
+The same parameter tree supports three views (params / ShapeDtypeStruct /
+logical sharding axes) via common.ParamFactory — the dry-run lowers the
+full-size models without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, GLOBAL, LOCAL, RGLRU, SSD
+from repro.core import containers, quantum_mantissa as qm, sfp, stash
+from repro.distributed import sharding as shd
+from repro.kernels import ops
+from repro.models import attention, common, mamba2, moe, rglru
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+class RunState(NamedTuple):
+    """Per-step dynamic inputs controlling SFP behaviour."""
+
+    key: jax.Array       # PRNG key for this step
+    qm_act: jax.Array    # (n_periods,) fp32 learned activation bitlengths
+    qm_w: jax.Array      # (n_periods,) fp32 learned weight bitlengths
+    qm_act_rem: jax.Array  # (n_rem,) fp32
+    qm_w_rem: jax.Array    # (n_rem,) fp32
+    bc_bits: jax.Array   # () int32 network-wide BitChop bitlength
+
+
+def init_run_state(cfg: ArchConfig, key: jax.Array,
+                   init_bits: Optional[float] = None) -> RunState:
+    man = containers.spec_for(cfg.compute_dtype).man_bits
+    bits = float(man if init_bits is None else init_bits)
+    n_rem = len(cfg.remainder)
+    return RunState(
+        key=key,
+        qm_act=jnp.full((cfg.n_periods,), bits, jnp.float32),
+        qm_w=jnp.full((cfg.n_periods,), bits, jnp.float32),
+        qm_act_rem=jnp.full((n_rem,), bits, jnp.float32),
+        qm_w_rem=jnp.full((n_rem,), bits, jnp.float32),
+        bc_bits=jnp.asarray(man, jnp.int32),
+    )
+
+
+def _zero_moe_aux():
+    z = jnp.zeros((), jnp.float32)
+    return {"moe_lb_loss": z, "moe_z_loss": z, "moe_drop_frac": z}
+
+
+class DecoderModel:
+    def __init__(self, cfg: ArchConfig,
+                 policy: sfp.SFPPolicy = sfp.SFPPolicy(), mesh=None,
+                 rules=None):
+        self.cfg = cfg
+        self.policy = policy
+        self.mesh = mesh  # enables SPMD-manual paths (sharded embed lookup)
+        self.rules = rules
+        self.man_bits = containers.spec_for(cfg.compute_dtype).man_bits
+
+    # ------------------------------------------------------------------
+    # Parameter construction (params / shapes / axes share one code path)
+    # ------------------------------------------------------------------
+
+    def _slot_init(self, p: common.ParamFactory, kind: str):
+        cfg = self.cfg
+        slot: Dict[str, Any] = {"pre_norm": common.rmsnorm_init(p, cfg.d_model)}
+        if kind in (GLOBAL, LOCAL):
+            slot["attn"] = attention.attn_init(p, cfg)
+        elif kind == SSD:
+            slot["ssd"] = mamba2.ssd_init(p, cfg)
+            return slot  # mamba2 blocks carry no separate MLP
+        elif kind == RGLRU:
+            slot["rglru"] = rglru.rglru_init(p, cfg)
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        slot["mlp_norm"] = common.rmsnorm_init(p, cfg.d_model)
+        if cfg.is_moe:
+            slot["moe"] = moe.moe_init(p, cfg)
+        else:
+            slot["mlp"] = common.mlp_init(p, cfg.d_model, cfg.d_ff, cfg.glu)
+        return slot
+
+    def _build_period(self, p: common.ParamFactory):
+        return {f"slot{i}": self._slot_init(p, kind)
+                for i, kind in enumerate(self.cfg.period)}
+
+    def build(self, mode: str, key: Optional[jax.Array] = None):
+        cfg = self.cfg
+        dtype = cfg.compute_dtype
+
+        if mode == common.MODE_PARAMS:
+            pf = common.ParamFactory(mode, jax.random.fold_in(key, 0), dtype)
+            keys = jax.random.split(jax.random.fold_in(key, 1), cfg.n_periods)
+            periods = jax.vmap(
+                lambda k: self._build_period(
+                    common.ParamFactory(mode, k, dtype)))(keys)
+        else:
+            pf = common.ParamFactory(mode, dtype=dtype)
+            one = self._build_period(common.ParamFactory(mode, dtype=dtype))
+            if mode == common.MODE_SHAPE:
+                periods = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        (cfg.n_periods,) + tuple(s.shape), s.dtype), one)
+            else:  # axes
+                periods = jax.tree.map(
+                    lambda a: ("layers",) + tuple(a), one,
+                    is_leaf=lambda a: isinstance(a, tuple))
+
+        params: Dict[str, Any] = {
+            "embed": common.embed_init(pf, cfg.padded_vocab, cfg.d_model),
+            "final_norm": common.rmsnorm_init(pf, cfg.d_model),
+            "periods": periods,
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = pf((cfg.d_model, cfg.padded_vocab),
+                                ("embed_r", "vocab"))
+        if cfg.remainder:
+            rem_pf = (common.ParamFactory(mode, jax.random.fold_in(key, 2),
+                                          dtype)
+                      if mode == common.MODE_PARAMS
+                      else common.ParamFactory(mode, dtype=dtype))
+            params["rem"] = {f"slot{i}": self._slot_init(rem_pf, kind)
+                             for i, kind in enumerate(cfg.remainder)}
+        return params
+
+    def init(self, key: jax.Array):
+        return self.build(common.MODE_PARAMS, key)
+
+    def param_shapes(self):
+        return self.build(common.MODE_SHAPE)
+
+    def param_axes(self):
+        return self.build(common.MODE_AXES)
+
+    # ------------------------------------------------------------------
+    # Weight-side Quantum Mantissa (exact VJP, paper §IV-A)
+    # ------------------------------------------------------------------
+
+    def _quantize_weights(self, slot_params, n_w, key):
+        pol = self.policy
+        if not pol.enabled or not pol.quantize_weights or pol.mode == sfp.MODE_BITCHOP:
+            return slot_params
+
+        def quant(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            if pol.mode == sfp.MODE_QM:
+                salt = zlib.crc32(name.encode()) % (2 ** 31)
+                return qm.qm_quantize(leaf, n_w, jax.random.fold_in(key, salt))
+            return containers.truncate_mantissa(leaf, pol.static_weight_bits)
+
+        return jax.tree_util.tree_map_with_path(quant, slot_params)
+
+    # ------------------------------------------------------------------
+    # Layer application
+    # ------------------------------------------------------------------
+
+    def _apply_slot(self, slot_params, h, kind, *, positions, prefix_len,
+                    n_w, key):
+        cfg = self.cfg
+        sp = self._quantize_weights(slot_params, n_w, key)
+        aux = _zero_moe_aux()
+        extras_loss = jnp.zeros((), jnp.float32)
+
+        hn = common.rmsnorm(sp["pre_norm"], h)
+        if kind in (GLOBAL, LOCAL):
+            h = h + attention.attention_train(
+                sp["attn"], hn, cfg, kind=kind, positions=positions,
+                prefix_len=prefix_len)
+        elif kind == SSD:
+            h = h + mamba2.ssd_forward(sp["ssd"], hn, cfg)
+            return h, extras_loss, aux
+        elif kind == RGLRU:
+            h = h + rglru.rglru_forward(sp["rglru"], hn, cfg)
+
+        hm = common.rmsnorm(sp["mlp_norm"], h)
+        if cfg.is_moe:
+            out, moe_aux = moe.moe_forward(sp["moe"], hm, cfg)
+            h = h + out
+            aux = moe_aux
+            extras_loss = (MOE_LB_COEF * moe_aux["moe_lb_loss"]
+                           + MOE_Z_COEF * moe_aux["moe_z_loss"])
+        else:
+            h = h + common.mlp(sp["mlp"], hm, cfg.act, cfg.glu)
+        return h, extras_loss, aux
+
+    # ------------------------------------------------------------------
+    # Stash codec (compress/decompress at period boundaries)
+    # ------------------------------------------------------------------
+
+    def _make_codec(self, dtype):
+        pol = self.policy
+        man = self.man_bits
+
+        def act_bits(x):
+            if pol.mode == sfp.MODE_QM:
+                return containers.stochastic_bitlength(
+                    x["qm_act"], jax.random.fold_in(x["key"], 7), man)
+            if pol.mode == sfp.MODE_BITCHOP:
+                return x["bc_bits"]
+            if pol.mode == sfp.MODE_STATIC:
+                return jnp.asarray(pol.static_act_bits, jnp.int32)
+            return jnp.asarray(man, jnp.int32)
+
+        if not pol.enabled:
+            return stash.identity_compress, stash.identity_decompress, None
+
+        container = pol.container
+
+        def compress(h, x):
+            q = ops.mantissa_quantize(h, act_bits(x))
+            if container in ("sfp8", "sfp16"):
+                return ops.sfp_compress_nd(q, container)
+            return q  # 'bit_exact': fake-quant stash (accounting mode)
+
+        def decompress(c, x):
+            del x
+            if container in ("sfp8", "sfp16"):
+                return ops.sfp_decompress_nd(c, dtype, container)
+            return c
+
+        stash_grad = None
+        if pol.mode == sfp.MODE_QM:
+            def stash_grad(dh, c, x):  # noqa: F811
+                h_q = decompress(c, x)
+                nf = jnp.clip(x["qm_act"], 0.0, float(man))
+                floor_n = jnp.floor(nf).astype(jnp.int32)
+                frac = nf - floor_n.astype(jnp.float32)
+                q_lo = containers.truncate_mantissa(h_q, floor_n)
+                diff = (h_q - q_lo).astype(jnp.float32)
+                dn = jnp.sum(dh.astype(jnp.float32) * diff) / jnp.maximum(
+                    frac, 0.05)
+                return {"qm_act": dn}
+
+        return compress, decompress, stash_grad
+
+    # ------------------------------------------------------------------
+    # Training / prefill forward
+    # ------------------------------------------------------------------
+
+    def forward(self, params, tokens: jax.Array, run: RunState,
+                cond_embeddings: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Full-sequence forward. Returns (logits over token positions, metrics)."""
+        shd.set_active_mesh(self.mesh, self.rules)
+        cfg = self.cfg
+        B, S = tokens.shape
+        P = cfg.prefix_tokens if cond_embeddings is not None else 0
+
+        scale = (cfg.d_model ** 0.5) if cfg.emb_scale else None
+        h = common.embed(params["embed"], tokens, scale, mesh=self.mesh)
+        if P:
+            h = jnp.concatenate(
+                [cond_embeddings.astype(h.dtype), h], axis=1)
+        S_tot = h.shape[1]
+        positions = jnp.arange(S_tot)
+
+        compress, decompress, stash_grad = self._make_codec(
+            cfg.compute_dtype)
+
+        period = cfg.period
+
+        def period_fn(carry, x):
+            h, extras = carry
+            aux_sum = _zero_moe_aux()
+            for i, kind in enumerate(period):
+                h, eloss, aux = self._apply_slot(
+                    x["params"][f"slot{i}"], h, kind,
+                    positions=positions, prefix_len=P,
+                    n_w=x["qm_w"],
+                    key=jax.random.fold_in(x["key"], i))
+                extras = extras + eloss
+                aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
+            return (h, extras), aux_sum
+
+        keys = jax.random.split(run.key, cfg.n_periods)
+        xs = {"params": params["periods"], "key": keys,
+              "qm_act": run.qm_act, "qm_w": run.qm_w,
+              "bc_bits": jnp.broadcast_to(run.bc_bits, (cfg.n_periods,))}
+
+        extras0 = jnp.zeros((), jnp.float32)
+        (h, extras), aux = stash.sfp_scan(
+            period_fn, compress, decompress, (h, extras0), xs,
+            stash_grad=stash_grad)
+
+        # Remainder layers (unrolled, fake-quant stash boundary).
+        for i, kind in enumerate(cfg.remainder):
+            hx = {"qm_act": run.qm_act_rem[i], "key":
+                  jax.random.fold_in(run.key, 1000 + i),
+                  "bc_bits": run.bc_bits}
+            if self.policy.enabled:
+                nb = (containers.stochastic_bitlength(
+                    hx["qm_act"], jax.random.fold_in(hx["key"], 7),
+                    self.man_bits)
+                    if self.policy.mode == sfp.MODE_QM else
+                    run.bc_bits if self.policy.mode == sfp.MODE_BITCHOP
+                    else jnp.asarray(self.policy.static_act_bits, jnp.int32))
+                h = sfp._ste_truncate(h, nb)
+            h, eloss, _aux = self._apply_slot(
+                params["rem"][f"slot{i}"], h, kind, positions=positions,
+                prefix_len=P, n_w=run.qm_w_rem[i],
+                key=jax.random.fold_in(run.key, 2000 + i))
+            extras = extras + eloss
+
+        h = common.rmsnorm(params["final_norm"], h)
+        if P:
+            h = h[:, P:]
+        logits = common.unembed(params, h, tied=cfg.tie_embeddings,
+                                softcap=cfg.final_softcap,
+                                valid_vocab=cfg.vocab)
+        metrics = {"moe_aux_loss": extras}
+        for k in ("moe_lb_loss", "moe_z_loss", "moe_drop_frac"):
+            metrics[k] = aux[k].mean() if cfg.is_moe else jnp.zeros((), jnp.float32)
+        return logits, metrics
+
+    def loss(self, params, batch: Dict[str, jax.Array], run: RunState
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, metrics = self.forward(
+            params, batch["tokens"], run,
+            cond_embeddings=batch.get("cond_embeddings"))
+        xent = common.softmax_xent(logits, batch["labels"])
+        loss = xent + metrics["moe_aux_loss"]
+        metrics = dict(metrics, xent=xent)
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # Serving: cache init + prefill + decode
+    # ------------------------------------------------------------------
+
+    def _slot_cache(self, kind: str, batch: int, max_len: int, spec_only: bool):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        if kind in (GLOBAL, LOCAL):
+            f = attention.cache_spec if spec_only else attention.cache_init
+            return f(cfg, kind, batch, max_len, dt)
+        if kind == SSD:
+            f = mamba2.ssd_cache_spec if spec_only else mamba2.ssd_cache_init
+            return f(cfg, batch, dt)
+        f = rglru.lru_cache_spec if spec_only else rglru.lru_cache_init
+        return f(cfg, batch, dt)
+
+    def init_cache(self, batch: int, max_len: int, spec_only: bool = False):
+        cfg = self.cfg
+        per = {f"slot{i}": self._slot_cache(k, batch, max_len, spec_only)
+               for i, k in enumerate(cfg.period)}
+        if spec_only:
+            periods = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (cfg.n_periods,) + tuple(s.shape), s.dtype), per)
+        else:
+            periods = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), per)
+        cache = {"periods": periods}
+        if cfg.remainder:
+            cache["rem"] = {f"slot{i}": self._slot_cache(k, batch, max_len,
+                                                         spec_only)
+                            for i, k in enumerate(cfg.remainder)}
+        return cache
+
+    def _decode_slot(self, slot_params, h, slot_cache, pos, kind):
+        cfg = self.cfg
+        hn = common.rmsnorm(slot_params["pre_norm"], h)
+        if kind in (GLOBAL, LOCAL):
+            out, new_cache = attention.attention_decode(
+                slot_params["attn"], hn, slot_cache, pos, cfg, kind=kind)
+            h = h + out
+        elif kind == SSD:
+            out, new_cache = mamba2.ssd_decode(slot_params["ssd"], hn,
+                                               slot_cache, cfg)
+            return h + out, new_cache
+        else:
+            out, new_cache = rglru.rglru_decode(slot_params["rglru"], hn,
+                                                slot_cache, cfg)
+            h = h + out
+        hm = common.rmsnorm(slot_params["mlp_norm"], h)
+        if cfg.is_moe:
+            h = h + moe.moe_decode(slot_params["moe"], hm, cfg)
+        else:
+            h = h + common.mlp(slot_params["mlp"], hm, cfg.act, cfg.glu)
+        return h, new_cache
+
+    def _prefill_slot(self, slot_params, h, kind, *, positions, prefix_len,
+                      max_len):
+        cfg = self.cfg
+        hn = common.rmsnorm(slot_params["pre_norm"], h)
+        if kind in (GLOBAL, LOCAL):
+            out, (k, v) = attention.attention_train(
+                slot_params["attn"], hn, cfg, kind=kind, positions=positions,
+                prefix_len=prefix_len, return_kv=True)
+            h = h + out
+            L = min(max_len, cfg.window) if kind == LOCAL else max_len
+            if kind == LOCAL:
+                k, v = attention.ring_pack_kv(k, v, L)
+            else:
+                pad = L - k.shape[1]
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = attention.KVCache(k=k.astype(cfg.compute_dtype),
+                                          v=v.astype(cfg.compute_dtype))
+        elif kind == SSD:
+            out, new_cache = mamba2.ssd_forward(slot_params["ssd"], hn, cfg,
+                                                return_cache=True)
+            return h + out, new_cache
+        else:
+            out, new_cache = rglru.rglru_forward(slot_params["rglru"], hn,
+                                                 cfg, return_cache=True)
+            h = h + out
+        hm = common.rmsnorm(slot_params["mlp_norm"], h)
+        if cfg.is_moe:
+            out, _aux = moe.moe_forward(slot_params["moe"], hm, cfg)
+            h = h + out
+        else:
+            h = h + common.mlp(slot_params["mlp"], hm, cfg.act, cfg.glu)
+        return h, new_cache
+
+    def prefill(self, params, tokens: jax.Array, max_len: int,
+                cond_embeddings: Optional[jax.Array] = None):
+        """Process a full prompt, returning (last-position logits, cache).
+
+        ``max_len`` sizes the global-attention KV cache (prompt + decode
+        budget). The prompt (with any multimodal prefix) must fit max_len.
+        """
+        shd.set_active_mesh(self.mesh, self.rules)
+        cfg = self.cfg
+        B, S = tokens.shape
+        P = cfg.prefix_tokens if cond_embeddings is not None else 0
+        scale = (cfg.d_model ** 0.5) if cfg.emb_scale else None
+        h = common.embed(params["embed"], tokens, scale, mesh=self.mesh)
+        if P:
+            h = jnp.concatenate([cond_embeddings.astype(h.dtype), h], axis=1)
+        positions = jnp.arange(h.shape[1])
+        max_len = max(max_len, h.shape[1])  # prefix tokens extend the cache
+
+        def period_fn(h, p):
+            caches = {}
+            for i, kind in enumerate(cfg.period):
+                h, c = self._prefill_slot(p[f"slot{i}"], h, kind,
+                                          positions=positions, prefix_len=P,
+                                          max_len=max_len)
+                caches[f"slot{i}"] = c
+            return h, caches
+
+        h, period_caches = jax.lax.scan(period_fn, h, params["periods"])
+        cache = {"periods": period_caches}
+        if cfg.remainder:
+            cache["rem"] = {}
+            for i, kind in enumerate(cfg.remainder):
+                h, c = self._prefill_slot(params["rem"][f"slot{i}"], h, kind,
+                                          positions=positions, prefix_len=P,
+                                          max_len=max_len)
+                cache["rem"][f"slot{i}"] = c
+        h = common.rmsnorm(params["final_norm"], h)
+        logits = common.unembed(params, h[:, -1:], tied=cfg.tie_embeddings,
+                                softcap=cfg.final_softcap,
+                                valid_vocab=cfg.vocab)
+        return logits, cache
+
+    def decode_step(self, params, cache, token: jax.Array, pos: jax.Array
+                    ) -> Tuple[jax.Array, Any]:
+        """One decode step. token: (B, 1) int32; pos: scalar int32 absolute
+        position (prefix + generated so far). Returns (logits (B, 1, V), cache)."""
+        shd.set_active_mesh(self.mesh, self.rules)
+        cfg = self.cfg
+        scale = (cfg.d_model ** 0.5) if cfg.emb_scale else None
+        h = common.embed(params["embed"], token, scale, mesh=self.mesh)
+
+        def period_fn(h, x):
+            p, c = x
+            new_c = {}
+            for i, kind in enumerate(cfg.period):
+                h, nc = self._decode_slot(p[f"slot{i}"], h, c[f"slot{i}"],
+                                          pos, kind)
+                new_c[f"slot{i}"] = nc
+            return h, new_c
+
+        h, new_periods = jax.lax.scan(
+            period_fn, h, (params["periods"], cache["periods"]))
+        new_cache = {"periods": new_periods}
+        if cfg.remainder:
+            new_cache["rem"] = {}
+            for i, kind in enumerate(cfg.remainder):
+                h, nc = self._decode_slot(params["rem"][f"slot{i}"], h,
+                                          cache["rem"][f"slot{i}"], pos, kind)
+                new_cache["rem"][f"slot{i}"] = nc
+        h = common.rmsnorm(params["final_norm"], h)
+        logits = common.unembed(params, h, tied=cfg.tie_embeddings,
+                                softcap=cfg.final_softcap,
+                                valid_vocab=cfg.vocab)
+        return logits, new_cache

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity + scatter dispatch.
+
+Dispatch is segment-sum scatter into an (E, C, d) buffer grouped per batch
+row (T5X-style groups): positions within an expert come from a cumulative
+sum over the (tokens x slots) one-hot assignment, tokens past capacity are
+dropped (tracked in aux metrics). Expert weights shard over the `model`
+mesh axis (expert parallelism); XLA inserts the token all-to-alls from the
+sharding annotations. An explicit shard_map all-to-all variant is the
+collective-bound hillclimb candidate (EXPERIMENTS.md §Perf).
+
+Aux losses: Switch-style load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+
+
+def moe_init(p: common.ParamFactory, cfg: ArchConfig):
+    d, E, ffe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    params = {
+        "router": p((d, E), ("embed", "experts"), dtype=jnp.float32),
+        "w_in": p((E, d, ffe), ("experts", "embed", "expert_ff")),
+        "w_out": p((E, ffe, d), ("experts", "expert_ff", "embed")),
+    }
+    if cfg.glu:
+        params["w_gate"] = p((E, d, ffe), ("experts", "embed", "expert_ff"))
+    return params
+
+
+def capacity_for(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(c, cfg.top_k)
+
+
+def moe_forward(params, h: jax.Array, cfg: ArchConfig
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """h: (B, S, d) -> (B, S, d), aux metrics/losses."""
+    B, S, d = h.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity_for(cfg, S)
+
+    logits = (h.astype(jnp.float32) @ params["router"])  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)      # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Position of each (token, slot) within its expert, slot-major order.
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (B, S, K, E)
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # exclusive
+    pos = jnp.sum(pos.reshape(B, S, K, E) * onehot, axis=-1)  # (B, S, K)
+    keep = pos < C
+
+    # Scatter tokens into the (E*C, d) buffer per batch row.
+    seg_ids = jnp.where(keep, expert_idx * C + pos, E * C)   # overflow -> drop
+    data = jnp.broadcast_to(h[:, :, None, :], (B, S, K, d)).reshape(B, S * K, d)
+    seg_flat = seg_ids.reshape(B, S * K)
+
+    def scatter_row(row_data, row_ids):
+        return jax.ops.segment_sum(row_data, row_ids, num_segments=E * C + 1)
+
+    buf = jax.vmap(scatter_row)(data, seg_flat)[:, : E * C, :]
+    buf = buf.reshape(B, E, C, d).astype(h.dtype)
+
+    # Expert FFN (E sharded over `model`).
+    inner = jnp.einsum("becd,edf->becf", buf, params["w_in"])
+    a = common.activation(cfg.act)(inner.astype(jnp.float32)).astype(h.dtype)
+    if cfg.glu:
+        a = a * jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    out_buf = jnp.einsum("becf,efd->becd", a, params["w_out"])
+
+    # Gather back and combine with gate weights.
+    out_flat = out_buf.reshape(B, E * C, d)
+    gathered = jnp.take_along_axis(
+        out_flat, jnp.minimum(seg_flat, E * C - 1)[..., None], axis=1)
+    gathered = gathered.reshape(B, S, K, d) * (
+        gate_vals * keep.astype(jnp.float32))[..., None].astype(h.dtype)
+    out = jnp.sum(gathered, axis=2)
+
+    # Aux losses (fp32): Switch load-balance + z-loss.
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32).reshape(-1, E),
+        axis=0)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped}
+    return out, aux
+
+
+def moe_decode(params, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Single-token MoE: run the dispatch path with the whole batch as one
+    group — capacity becomes ceil(B*K/E*cf), tiny, and no full expert-weight
+    gathers ever materialize."""
+    B, S, d = h.shape
+    assert S == 1, "moe_decode is the single-token path"
+    out, _aux = moe_forward(params, h.reshape(1, B, d), cfg)
+    return out.reshape(B, S, d)

@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(w_r . x_t + b_r)            (recurrence gate)
+    i_t = sigmoid(w_i . x_t + b_i)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence training uses an associative scan (log-space decays carried
+in fp32); decode is the one-step recurrence with a (B, lru_width) state.
+Gates here are diagonal (per-channel) rather than Griffin's block-diagonal
+— a documented simplification (DESIGN.md §9) that preserves the memory/
+compute structure the paper's technique interacts with.
+
+Block layout: in-proj -> [x branch: causal conv(4) -> RG-LRU] * gelu(gate
+branch) -> out-proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.mamba2 import _causal_conv
+
+C_FACTOR = 8.0
+
+
+def rglru_init(p: common.ParamFactory, cfg: ArchConfig):
+    d, lw, cw = cfg.d_model, cfg.lru_width_, cfg.conv_width
+    return {
+        "w_x": p((d, lw), ("embed", "lru")),
+        "w_gate": p((d, lw), ("embed", "lru")),
+        "conv": p((cw, lw), ("conv", "lru"), scale=cw ** -0.5),
+        "w_r": p((lw,), ("lru",), init="zeros", dtype=jnp.float32),
+        "b_r": p((lw,), ("lru",), init="zeros", dtype=jnp.float32),
+        "w_i": p((lw,), ("lru",), init="zeros", dtype=jnp.float32),
+        "b_i": p((lw,), ("lru",), init="zeros", dtype=jnp.float32),
+        "lam": p((lw,), ("lru",), init="ones", dtype=jnp.float32),
+        "w_out": p((lw, d), ("lru", "embed")),
+    }
+
+
+def _gates(params, xb: jax.Array):
+    """xb: (B, S, lru) conv output (fp32). Returns log_a, gated input."""
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["w_r"] * xf + params["b_r"])
+    i = jax.nn.sigmoid(params["w_i"] * xf + params["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"]) * r  # <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9))
+    b = beta * (i * xf)
+    return log_a, b
+
+
+def rglru_forward(params, h: jax.Array, cfg: ArchConfig,
+                  return_cache: bool = False):
+    """Full-sequence recurrent block. h: (B, S, d)."""
+    B, S, d = h.shape
+    xb_raw = h @ params["w_x"]
+    gate = h @ params["w_gate"]
+    xb, _ = _causal_conv(xb_raw, params["conv"])
+
+    log_a, b = _gates(params, xb)  # (B, S, lw) fp32
+
+    def combine(e1, e2):
+        la1, b1 = e1
+        la2, b2 = e2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    y = hseq.astype(h.dtype) * jax.nn.gelu(gate.astype(jnp.float32)
+                                           ).astype(h.dtype)
+    out = y @ params["w_out"]
+    if return_cache:
+        cache = LRUCache(conv=xb_raw[:, -(cfg.conv_width - 1):],
+                         state=hseq[:, -1])
+        return out, cache
+    return out
+
+
+class LRUCache(NamedTuple):
+    conv: jax.Array   # (B, cw-1, lru)
+    state: jax.Array  # (B, lru) fp32
+
+
+def lru_cache_init(cfg: ArchConfig, batch: int, dtype) -> LRUCache:
+    return LRUCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width_), dtype),
+        state=jnp.zeros((batch, cfg.lru_width_), jnp.float32),
+    )
+
+
+def lru_cache_spec(cfg: ArchConfig, batch: int, dtype) -> LRUCache:
+    return LRUCache(
+        conv=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.lru_width_),
+                                  dtype),
+        state=jax.ShapeDtypeStruct((batch, cfg.lru_width_), jnp.float32),
+    )
+
+
+def rglru_decode(params, h_tok: jax.Array, cache: LRUCache, cfg: ArchConfig
+                 ) -> Tuple[jax.Array, LRUCache]:
+    B = h_tok.shape[0]
+    xb = h_tok @ params["w_x"]
+    gate = h_tok @ params["w_gate"]
+    xb, new_conv = _causal_conv(xb, params["conv"], cache.conv)
+
+    log_a, b = _gates(params, xb)  # (B, 1, lw)
+    state = jnp.exp(log_a[:, 0]) * cache.state + b[:, 0]
+    y = state[:, None, :].astype(h_tok.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32)).astype(h_tok.dtype)
+    return y @ params["w_out"], LRUCache(conv=new_conv, state=state)

@@ -1,0 +1,87 @@
+"""AdamW with decoupled weight decay, fp32 moments, global-norm clipping.
+
+Pure-JAX (no optax in this environment). Moments are fp32 regardless of
+param dtype; the update is computed in fp32 and cast back — standard mixed
+precision for bf16 training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig,
+           lr: jax.Array) -> Tuple[Any, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = pf - lr * (step + decay * pf)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, AdamWState(m=new_m, v=new_v, count=count), gnorm
+
+
+def sgd_update(grads, params, lr: float, clip: Optional[float] = None):
+    """Plain SGD (used for Quantum Mantissa bitlength parameters)."""
+    if clip is not None:
+        grads, _ = clip_by_global_norm(grads, clip)
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)

@@ -1,0 +1,45 @@
+"""LR schedules. Step-decay boundaries are exposed so BitChop can hold full
+precision around LR changes (paper §IV-B: "Full precision is used during LR
+changes")."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    kind: str = "cosine"            # 'cosine' | 'step' | 'constant'
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    boundaries: Tuple[int, ...] = ()  # step-decay drop points (x0.1)
+    min_lr_frac: float = 0.1
+
+    def __call__(self, step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(self.warmup_steps, 1), 1.0)
+        if self.kind == "constant":
+            lr = jnp.asarray(self.base_lr, jnp.float32)
+        elif self.kind == "step":
+            lr = jnp.asarray(self.base_lr, jnp.float32)
+            for b in self.boundaries:
+                lr = jnp.where(step >= b, lr * 0.1, lr)
+        else:  # cosine
+            frac = jnp.clip((s - self.warmup_steps)
+                            / max(self.total_steps - self.warmup_steps, 1),
+                            0.0, 1.0)
+            cos = 0.5 * (1 + jnp.cos(math.pi * frac))
+            lr = self.base_lr * (self.min_lr_frac + (1 - self.min_lr_frac) * cos)
+        return lr * warm
+
+    def lr_changed(self, step: jax.Array) -> jax.Array:
+        """True at step-decay boundaries (drives BitChop's precision hold)."""
+        if not self.boundaries:
+            return jnp.zeros((), bool)
+        b = jnp.asarray(self.boundaries, jnp.int32)
+        return jnp.any(step == b)

@@ -1,0 +1,186 @@
+"""Roofline aggregation: dry-run artifacts -> EXPERIMENTS.md §Roofline table.
+
+Three terms per (arch x shape), single-pod mesh (256 chips):
+
+  compute    = jaxpr_FLOPs / (chips * 197 TF/s)
+  memory     = jaxpr_HBM_bytes / (chips * 819 GB/s)
+  collective = trip-weighted per-device collective bytes / 50 GB/s/link
+
+FLOPs/bytes come from the jaxpr cost model (repro.roofline.jaxpr_cost):
+the CPU backend's compiled.cost_analysis() counts scan bodies once
+(validated in tests/test_roofline.py), so it cannot see >90% of the work
+in a scan-based program; both numbers are recorded in the dry-run JSON.
+
+MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill) /
+2*N_active*B (decode), plus the attention window/context term; the ratio
+MODEL_FLOPS / jaxpr_FLOPs exposes remat & bookkeeping waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro import configs
+from repro.configs.base import SHAPES, ArchConfig, GLOBAL, LOCAL, ShapeConfig
+from repro.roofline import hw
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def attention_flops(cfg: ArchConfig, shape: ShapeConfig, fwd_mult: float
+                    ) -> float:
+    """Score/value matmul FLOPs (4*B*H*hd per q-k pair), window-aware."""
+    B, S = shape.global_batch, shape.seq_len
+    H, hd = cfg.n_heads, cfg.head_dim_
+    if H == 0:
+        return 0.0
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.period[i % len(cfg.period)]
+        if kind == GLOBAL:
+            pairs = (S * (S + 1) / 2 if shape.kind != "decode" else S)
+        elif kind == LOCAL:
+            w = min(cfg.window, S)
+            pairs = (S * w - w * w / 2 if shape.kind != "decode"
+                     else min(cfg.window, S))
+        else:
+            continue
+        total += 4.0 * B * H * hd * pairs
+    return total * fwd_mult
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    n = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * B * S + attention_flops(cfg, shape, 3.0)
+    if shape.kind == "prefill":
+        return 2.0 * n * B * S + attention_flops(cfg, shape, 1.0)
+    return 2.0 * n * B + attention_flops(cfg, shape, 1.0)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    policy: str
+    ok: bool
+    layout: str = "tp"
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_flops: float = 0.0
+    jaxpr_flops: float = 0.0
+    useful_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+    dominant: str = ""
+    hbm_gb_per_dev: float = 0.0
+    temp_gb_per_dev: float = 0.0
+    args_gb_per_dev: float = 0.0
+    collective_breakdown: Optional[Dict] = None
+    compile_s: float = 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def load_cell(path: Path) -> Optional[Cell]:
+    d = json.loads(path.read_text())
+    cell = Cell(arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+                policy=d["policy"], ok=d.get("ok", False),
+                layout=d.get("layout", "tp"))
+    if not cell.ok:
+        return cell
+    chips = d.get("n_devices", 256)
+    jc = d.get("jaxpr_cost", {})
+    cw = d.get("collectives_trip_weighted", d.get("collectives", {}))
+    cell.jaxpr_flops = jc.get("flops", 0.0)
+    cell.compute_s = cell.jaxpr_flops / chips / hw.PEAK_FLOPS_BF16
+    cell.memory_s = jc.get("hbm_bytes", 0.0) / chips / hw.HBM_BW
+    cell.collective_s = cw.get("total_bytes", 0.0) / hw.ICI_BW_PER_LINK
+    cell.collective_breakdown = {
+        k: v.get("bytes", 0.0) for k, v in cw.items() if isinstance(v, dict)}
+    cfg = configs.get(d["arch"])
+    cell.model_flops = model_flops(cfg, SHAPES[d["shape"]])
+    cell.useful_ratio = (cell.model_flops / cell.jaxpr_flops
+                         if cell.jaxpr_flops else 0.0)
+    terms = {"compute": cell.compute_s, "memory": cell.memory_s,
+             "collective": cell.collective_s}
+    cell.dominant = max(terms, key=terms.get)
+    ideal = cell.model_flops / chips / hw.PEAK_FLOPS_BF16
+    cell.roofline_fraction = ideal / cell.bound_s if cell.bound_s else 0.0
+    ma = d.get("memory_analysis", {})
+    cell.temp_gb_per_dev = ma.get("temp_size_in_bytes", 0) / 1e9
+    cell.args_gb_per_dev = ma.get("argument_size_in_bytes", 0) / 1e9
+    cell.hbm_gb_per_dev = cell.temp_gb_per_dev + cell.args_gb_per_dev
+    cell.compile_s = d.get("compile_s", 0.0)
+    return cell
+
+
+def load_all(dry_dir: Path = DRYRUN_DIR, mesh: str = "single",
+             policy: Optional[str] = None) -> List[Cell]:
+    cells = []
+    for p in sorted(dry_dir.glob("*.json")):
+        c = load_cell(p)
+        if c is None or c.mesh != mesh:
+            continue
+        if policy and c.policy != policy:
+            continue
+        cells.append(c)
+    return cells
+
+
+def markdown_table(cells: List[Cell]) -> str:
+    rows = ["| arch | shape | layout | compute s | memory s | collective s |"
+            " dominant | MODEL/HLO flops | roofline frac | HBM GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape, c.layout)):
+        if not c.ok:
+            rows.append(f"| {c.arch} | {c.shape} | {c.layout} | FAILED |"
+                        " | | | | | |")
+            continue
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.layout} | {c.compute_s:.4f} |"
+            f" {c.memory_s:.4f} | {c.collective_s:.4f} | {c.dominant} |"
+            f" {c.useful_ratio:.2f} | {c.roofline_fraction:.3f} |"
+            f" {c.hbm_gb_per_dev:.1f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells: List[Cell]) -> Dict[str, Cell]:
+    """Worst roofline fraction, most collective-bound, most representative
+    of the paper's technique (the train cell with the largest stash =
+    largest memory term among train shapes)."""
+    ok = [c for c in cells if c.ok]
+    worst = min(ok, key=lambda c: c.roofline_fraction)
+    coll = max(ok, key=lambda c: c.collective_s / max(c.bound_s, 1e-12))
+    train = [c for c in ok if SHAPES[c.shape].kind == "train"]
+    rep = max(train, key=lambda c: c.memory_s)
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--dir", default=str(DRYRUN_DIR))
+    args = ap.parse_args()
+    cells = load_all(Path(args.dir), args.mesh, args.policy)
+    print(markdown_table(cells))
+    ok = [c for c in cells if c.ok]
+    if ok:
+        picks = pick_hillclimb(cells)
+        print("\nHillclimb candidates:")
+        for label, c in picks.items():
+            print(f"  {label}: {c.arch} x {c.shape} "
+                  f"(frac={c.roofline_fraction:.3f}, dom={c.dominant})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Trip-count-aware collective accounting from post-SPMD HLO text.
+
+The flat parse (launch/dryrun.parse_collectives) counts each collective
+once, but collectives inside scanned layer bodies execute once per
+iteration. XLA annotates its while loops with
+``backend_config={..."known_trip_count":{"n":"13"}...}`` — this module
+builds the computation call graph (while bodies/conditions, fusions,
+calls, conditionals) and multiplies each computation's collective bytes by
+the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_CALL_SINGLE_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_CALL_LIST_RE = re.compile(
+    r"(?:calls|branch_computations)=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)\\?"')
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse(hlo_text: str) -> Dict[str, Dict]:
+    """Returns {kind: {count, bytes}} with trip-count weighting, plus
+    {'total_bytes': ...}. Counts are trip-weighted executions."""
+    # --- split into computations ---
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line.strip())
+        if m and (line.endswith("{") or "->" in line):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if current is not None:
+            comps[current].append(line.strip())
+    entry = None
+    for raw in hlo_text.splitlines():
+        if raw.strip().startswith("ENTRY"):
+            m = _COMP_RE.match(raw.strip()[len("ENTRY"):].strip())
+            if m:
+                entry = m.group(1)
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    # --- per-computation: local collectives + weighted calls ---
+    local: Dict[str, Dict[str, Tuple[int, int]]] = {}
+    calls: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        stats = {k: [0, 0] for k in COLLECTIVES}
+        for line in lines:
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(",
+                         line)
+            if m:
+                type_str, op = m.groups()
+                base = op
+                for suffix in ("-start", "-done"):
+                    if base.endswith(suffix):
+                        base = base[: -len(suffix)]
+                if base in COLLECTIVES and not op.endswith("-done"):
+                    stats[base][0] += 1
+                    stats[base][1] += _shape_bytes(type_str)
+            callees = [m.group(1) for m in _CALL_SINGLE_RE.finditer(line)]
+            for m in _CALL_LIST_RE.finditer(line):
+                callees += [c.lstrip("%") for c in
+                            re.split(r",\s*", m.group(1)) if c]
+            if callees:
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                for callee in callees:
+                    calls[name].append((callee.lstrip("%"), trip))
+        local[name] = {k: tuple(v) for k, v in stats.items()}
+
+    # --- weighted DFS from entry ---
+    memo: Dict[str, Dict[str, Tuple[float, float]]] = {}
+
+    def total(name: str, depth=0) -> Dict[str, Tuple[float, float]]:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in local:
+            return {k: (0.0, 0.0) for k in COLLECTIVES}
+        acc = {k: [float(local[name][k][0]), float(local[name][k][1])]
+               for k in COLLECTIVES}
+        for callee, trip in calls.get(name, ()):  # noqa: B020
+            sub = total(callee, depth + 1)
+            for k in COLLECTIVES:
+                acc[k][0] += trip * sub[k][0]
+                acc[k][1] += trip * sub[k][1]
+        memo[name] = {k: tuple(v) for k, v in acc.items()}
+        return memo[name]
+
+    agg = total(entry) if entry else {k: (0.0, 0.0) for k in COLLECTIVES}
+    out = {k: {"count": agg[k][0], "bytes": agg[k][1]} for k in COLLECTIVES}
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out

@@ -1,0 +1,9 @@
+"""Target hardware constants: TPU v5e (per assignment)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW_PER_LINK = 50e9        # bytes/s per link
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+HBM_PER_CHIP = 16 * 2 ** 30   # 16 GiB

@@ -1,0 +1,91 @@
+"""Serving engine: prefill + decode with (optionally compressed) KV cache.
+
+`cache_axes` mirrors DecoderModel.init_cache structurally and assigns the
+logical sharding: batch over (pod, data), the KV sequence dim over `model`
+(flash-decoding style — XLA's softmax reductions over the sharded dim
+become exact all-reduces), recurrent-state widths over `model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, GLOBAL, LOCAL, SSD
+from repro.models import attention, mamba2, rglru
+from repro.models.model import DecoderModel
+
+
+def _slot_axes(kind: str):
+    if kind in (GLOBAL, LOCAL):
+        return attention.KVCache(k=("batch", "cache_seq", "kv", None),
+                                 v=("batch", "cache_seq", "kv", None))
+    if kind == SSD:
+        return mamba2.SSDCache(conv_x=("batch", None, "ssm_inner"),
+                               conv_B=("batch", None, "state"),
+                               conv_C=("batch", None, "state"),
+                               state=("batch", "heads", None, None))
+    return rglru.LRUCache(conv=("batch", None, "lru"),
+                          state=("batch", "lru"))
+
+
+def cache_axes(model: DecoderModel):
+    cfg = model.cfg
+    is_tuple = lambda a: isinstance(a, tuple) and all(
+        x is None or isinstance(x, str) for x in a)
+    per = {f"slot{i}": _slot_axes(k) for i, k in enumerate(cfg.period)}
+    periods = jax.tree.map(lambda a: ("layers",) + tuple(a), per,
+                           is_leaf=is_tuple)
+    axes = {"periods": periods}
+    if cfg.remainder:
+        axes["rem"] = {f"slot{i}": _slot_axes(k)
+                       for i, k in enumerate(cfg.remainder)}
+    return axes
+
+
+def make_serve_step(model: DecoderModel, greedy: bool = True):
+    """(params, cache, token, pos) -> (next_token, cache). One decode step."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step
+
+
+def make_prefill_step(model: DecoderModel, max_len: int):
+    def prefill_step(params, tokens, cond_embeddings=None):
+        return model.prefill(params, tokens, max_len,
+                             cond_embeddings=cond_embeddings)
+
+    return prefill_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Any
+    steps: int
+
+
+def generate(model: DecoderModel, params, prompt: jax.Array, max_new: int,
+             max_len: Optional[int] = None,
+             cond_embeddings: Optional[jax.Array] = None) -> GenerationResult:
+    """Greedy batched generation (host loop; used by examples + tests)."""
+    B, S = prompt.shape
+    P = model.cfg.prefix_tokens if cond_embeddings is not None else 0
+    max_len = max_len or (P + S + max_new)
+    prefill = jax.jit(make_prefill_step(model, max_len))
+    step = jax.jit(make_serve_step(model))
+    logits, cache = prefill(params, prompt, cond_embeddings)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    pos = P + S
+    for i in range(max_new - 1):
+        tok, cache = step(params, cache, tok, jnp.asarray(pos, jnp.int32))
+        out.append(tok)
+        pos += 1
+    return GenerationResult(tokens=jnp.concatenate(out, axis=1),
+                            steps=max_new)

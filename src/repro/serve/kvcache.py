@@ -1,0 +1,115 @@
+"""SFP-compressed KV cache (beyond-paper application of the containers).
+
+Decode is memory-bandwidth-bound by the KV cache read — exactly the regime
+the paper targets at the DRAM interface. The cache stores SFP8 payloads
+(1 sign + 4 delta-exp + 3 mantissa per value, one shared base exponent per
+128 lanes — kernels/sfp_pack layout) and decompresses on read; each decode
+step packs only the new token's K/V row. Cache bytes drop ~2x vs bf16 at
+<= 3 mantissa bits of precision, matching where Quantum Mantissa lands
+(paper Fig 4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LOCAL
+from repro.kernels import ops
+from repro.models import attention
+
+
+class PackedKV(NamedTuple):
+    k_payload: jax.Array  # (B, L, D) uint8|uint16, D = KH * head_dim
+    k_bases: jax.Array    # (B, L, D // 128) uint8
+    v_payload: jax.Array
+    v_bases: jax.Array
+
+
+def _dims(cfg: ArchConfig, kind: str, max_len: int):
+    D = cfg.n_kv_heads * cfg.head_dim_
+    assert D % 128 == 0, (D, "KV feature dim must align to 128 lanes")
+    L = min(max_len, cfg.window) if kind == LOCAL else max_len
+    return D, L
+
+
+def packed_cache_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      container: str = "sfp8") -> PackedKV:
+    D, L = _dims(cfg, kind, max_len)
+    pdt = jnp.uint8 if container == "sfp8" else jnp.uint16
+    return PackedKV(
+        k_payload=jnp.zeros((batch, L, D), pdt),
+        k_bases=jnp.zeros((batch, L, D // 128), jnp.uint8),
+        v_payload=jnp.zeros((batch, L, D), pdt),
+        v_bases=jnp.zeros((batch, L, D // 128), jnp.uint8),
+    )
+
+
+def packed_cache_spec(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      container: str = "sfp8") -> PackedKV:
+    D, L = _dims(cfg, kind, max_len)
+    pdt = jnp.uint8 if container == "sfp8" else jnp.uint16
+    return PackedKV(
+        k_payload=jax.ShapeDtypeStruct((batch, L, D), pdt),
+        k_bases=jax.ShapeDtypeStruct((batch, L, D // 128), jnp.uint8),
+        v_payload=jax.ShapeDtypeStruct((batch, L, D), pdt),
+        v_bases=jax.ShapeDtypeStruct((batch, L, D // 128), jnp.uint8),
+    )
+
+
+def packed_cache_axes() -> PackedKV:
+    return PackedKV(
+        k_payload=("batch", "cache_seq", None),
+        k_bases=("batch", "cache_seq", None),
+        v_payload=("batch", "cache_seq", None),
+        v_bases=("batch", "cache_seq", None),
+    )
+
+
+def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
+                            pos: jax.Array, cfg: ArchConfig, *, kind: str,
+                            container: str = "sfp8"
+                            ) -> Tuple[jax.Array, PackedKV]:
+    """One-token decode over the compressed cache."""
+    B = h_tok.shape[0]
+    hd, H, KH = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    D = KH * hd
+    L = cache.k_payload.shape[1]
+    dtype = h_tok.dtype
+
+    q, k_new, v_new = attention._project_qkv(
+        params, h_tok, cfg, jnp.full((1,), pos, jnp.int32))
+    slot = attention.decode_slot_index(pos, L, kind)
+
+    # Pack only the new token's row and splice it in.
+    def splice(payload, bases, new):
+        p_new = ops.sfp_compress_nd(new.reshape(B, 1, D).astype(dtype),
+                                    container)
+        payload = jax.lax.dynamic_update_slice_in_dim(
+            payload, p_new.payload, slot, axis=1)
+        bases = jax.lax.dynamic_update_slice_in_dim(
+            bases, p_new.bases, slot, axis=1)
+        return payload, bases
+
+    k_payload, k_bases = splice(cache.k_payload, cache.k_bases, k_new)
+    v_payload, v_bases = splice(cache.v_payload, cache.v_bases, v_new)
+
+    # Decompress-on-read (fused into the attention contraction on TPU).
+    k_c = ops.sfp_decompress_nd(ops.Packed(k_payload, k_bases), dtype,
+                                container).reshape(B, L, KH, hd)
+    v_c = ops.sfp_decompress_nd(ops.Packed(v_payload, v_bases), dtype,
+                                container).reshape(B, L, KH, hd)
+    o = attention.decode_attend(q, k_c, v_c, pos, cfg, kind)
+    out = o.reshape(B, 1, H * hd) @ params["wo"]
+    return out, PackedKV(k_payload, k_bases, v_payload, v_bases)
+
+
+def pack_prefill_cache(cache_kv: attention.KVCache,
+                       container: str = "sfp8") -> PackedKV:
+    """Compress a prefill-produced bf16 cache in one shot."""
+    B, L, KH, hd = cache_kv.k.shape
+    k = ops.sfp_compress_nd(cache_kv.k.reshape(B, L, KH * hd), container)
+    v = ops.sfp_compress_nd(cache_kv.v.reshape(B, L, KH * hd), container)
+    return PackedKV(k_payload=k.payload, k_bases=k.bases,
+                    v_payload=v.payload, v_bases=v.bases)

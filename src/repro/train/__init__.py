@@ -1,0 +1,1 @@
+"""Training substrate: state, step builder, loop, gradient compression."""

@@ -1,0 +1,59 @@
+"""Compressed gradient synchronization (beyond-paper application).
+
+The paper compresses tensors crossing the DRAM boundary; at multi-pod scale
+the analogous expensive boundary is the cross-pod (DCN) gradient
+all-reduce. We apply the same recipe: truncate gradient mantissas to a
+small bitlength before the reduction and keep the truncation error in a
+local *error-feedback* residual that is re-injected next step — the
+standard convergence-preserving trick for biased compressors.
+
+Two entry points:
+  * compress_grads / error feedback — used inside the big pjit train step
+    (XLA owns the actual collective; the entitlement is the truncated
+    payload).
+  * psum_compressed — explicit shard_map collective for the tested
+    multi-device harness (tests/spmd/).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+
+
+def compress_grads(grads: Any, residual: Any, bits: int) -> Tuple[Any, Any]:
+    """Error-feedback mantissa truncation: returns (compressed, new_residual)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q = containers.truncate_mantissa(gf, bits)
+        return q, gf - q
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def psum_compressed(grads: Any, residual: Any, bits: int, axis_name: str
+                    ) -> Tuple[Any, Any]:
+    """shard_map building block: truncate -> bf16 -> psum -> mean.
+
+    Payload on the wire: bf16 containers with ``bits``-bit mantissas (the
+    Gecko exponent packing applies on top in the hardware realization; the
+    bit-exact accounting lives in core.footprint).
+    """
+    q, new_res = compress_grads(grads, residual, bits)
+    n = jax.lax.psum(1, axis_name)
+    summed = jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_name)
+        .astype(jnp.float32) / n, q)
+    return summed, new_res

@@ -1,0 +1,113 @@
+"""Fault-tolerant host training loop.
+
+Responsibilities:
+  * periodic async checkpoints (atomic; rollback-safe);
+  * automatic restore-and-continue after a step failure (simulated node
+    failure in tests): the loop re-places the last good checkpoint and
+    replays the data stream from that step (deterministic corpus);
+  * straggler watchdog: per-step wall-time deadline; breaches are logged
+    and surfaced in metrics (on a real fleet this triggers hot-spare
+    swap-in — see DESIGN.md §4);
+  * metrics emission (JSONL) for the benchmark/figure scripts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    log_every: int = 10
+    metrics_file: Optional[str] = None
+    step_deadline_s: Optional[float] = None  # straggler watchdog
+    max_restarts: int = 3
+
+
+@dataclasses.dataclass
+class LoopResult:
+    state: Any
+    history: list
+    restarts: int
+    straggler_steps: int
+
+
+def run(train_step: Callable, state: Any, batch_iter_factory:
+        Callable[[int], Iterator[Dict[str, Any]]], cfg: LoopConfig,
+        fault_hook: Optional[Callable[[int], None]] = None) -> LoopResult:
+    """Run the loop. ``batch_iter_factory(start_step)`` must restart the
+    stream at an arbitrary step (deterministic data). ``fault_hook`` lets
+    tests inject failures at chosen steps."""
+    mgr = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+           if cfg.ckpt_dir else None)
+    history = []
+    restarts = 0
+    stragglers = 0
+    mfile = Path(cfg.metrics_file) if cfg.metrics_file else None
+    if mfile:
+        mfile.parent.mkdir(parents=True, exist_ok=True)
+        mfile.write_text("")
+
+    step = int(np.asarray(state.step))
+    if mgr is not None and mgr.latest_step() is not None:
+        latest = mgr.latest_step()
+        state = mgr.restore(latest, state)
+        step = int(np.asarray(state.step))
+
+    while step < cfg.total_steps:
+        batches = batch_iter_factory(step)
+        try:
+            for batch in batches:
+                if step >= cfg.total_steps:
+                    break
+                if fault_hook is not None:
+                    fault_hook(step)
+                t0 = time.time()
+                state, metrics = train_step(state, batch)
+                metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                dt = time.time() - t0
+                metrics["step"] = step
+                metrics["step_time_s"] = dt
+                if cfg.step_deadline_s and dt > cfg.step_deadline_s:
+                    stragglers += 1
+                    metrics["straggler"] = True
+                history.append(metrics)
+                if mfile and (step % cfg.log_every == 0
+                              or step == cfg.total_steps - 1):
+                    with mfile.open("a") as f:
+                        f.write(json.dumps(metrics) + "\n")
+                step += 1
+                if mgr is not None and step % cfg.ckpt_every == 0:
+                    mgr.save(step, state, blocking=False)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:
+            restarts += 1
+            if mgr is None or restarts > cfg.max_restarts:
+                raise
+            mgr.wait()
+            latest = mgr.latest_step()
+            if latest is None:
+                raise RuntimeError("step failed before first checkpoint") from e
+            print(f"[loop] step {step} failed ({type(e).__name__}: {e}); "
+                  f"restoring step {latest} (restart {restarts})")
+            state = mgr.restore(latest, state)
+            step = int(np.asarray(state.step))
+            continue
+
+    if mgr is not None:
+        mgr.save(step, state, blocking=True)
+    return LoopResult(state=state, history=history, restarts=restarts,
+                      straggler_steps=stragglers)

@@ -1,0 +1,73 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitchop
+
+
+def run(losses, cfg, lr_changes=()):
+    st = bitchop.init(cfg)
+    ns = []
+    for i, L in enumerate(losses):
+        st = bitchop.update(st, L, cfg, lr_changed=i in lr_changes)
+        ns.append(int(st.n))
+    return st, ns
+
+
+def test_improving_loss_shrinks_bits():
+    cfg = bitchop.BitChopConfig(warmup_steps=2, max_bits=7)
+    losses = [10.0 - 0.5 * i for i in range(16)]
+    st, ns = run(losses, cfg)
+    assert ns[-1] < 7
+
+
+def test_regressing_loss_grows_bits():
+    cfg = bitchop.BitChopConfig(warmup_steps=2, max_bits=7, min_bits=0)
+    st = bitchop.init(cfg)._replace(n=jnp.asarray(2, jnp.int32))
+    losses = [1.0 + 0.5 * i for i in range(16)]
+    for L in losses:
+        st = bitchop.update(st, L, cfg)
+    assert int(st.n) > 2
+
+
+def test_epsilon_threshold_gates_decisions():
+    """With a huge noise threshold no decision ever fires; with a small one
+    the controller moves. (Under pure iid noise the walk itself is
+    unbiased — the stabilizing feedback is the loss reacting to n, which
+    test_train.py::test_bitchop_mode_runs_and_adjusts covers end-to-end.)"""
+    rng = np.random.RandomState(0)
+    losses = list(3.0 + 0.05 * rng.randn(64))
+    cfg_hi = bitchop.BitChopConfig(warmup_steps=4, max_bits=7, eps_scale=50.0)
+    st_hi, ns_hi = run(losses, cfg_hi)
+    assert int(st_hi.n) == 7 and set(ns_hi) == {7}
+    cfg_lo = bitchop.BitChopConfig(warmup_steps=4, max_bits=7, eps_scale=0.2)
+    st_lo, ns_lo = run(losses, cfg_lo)
+    assert len(set(ns_lo)) > 1  # decisions actually fire
+
+
+def test_clipping_bounds():
+    cfg = bitchop.BitChopConfig(warmup_steps=0, max_bits=7, min_bits=1)
+    losses = [10.0 - 0.4 * i for i in range(64)]
+    st, ns = run(losses, cfg)
+    assert min(ns) >= 1 and max(ns) <= 7
+
+
+def test_lr_change_forces_full_precision_hold():
+    cfg = bitchop.BitChopConfig(warmup_steps=0, max_bits=7,
+                                lr_change_hold=5)
+    st = bitchop.init(cfg)._replace(n=jnp.asarray(3, jnp.int32))
+    st = bitchop.update(st, 2.0, cfg, lr_changed=True)
+    for L in (1.9, 1.8, 1.7):
+        st = bitchop.update(st, L, cfg)
+        assert int(bitchop.effective_bits(st, cfg)) == 7
+    for L in [1.6] * 8:
+        st = bitchop.update(st, L, cfg)
+    assert int(bitchop.effective_bits(st, cfg)) < 7  # hold expired
+
+
+def test_eq8_ema_update():
+    cfg = bitchop.BitChopConfig(alpha=0.25, warmup_steps=100)
+    st = bitchop.init(cfg)
+    st = bitchop.update(st, 4.0, cfg)      # first step: mavg = L
+    assert abs(float(st.mavg) - 4.0) < 1e-6
+    st = bitchop.update(st, 8.0, cfg)      # mavg + 0.25*(8-4) = 5
+    assert abs(float(st.mavg) - 5.0) < 1e-6

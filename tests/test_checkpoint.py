@@ -1,0 +1,68 @@
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.ones((4,), jnp.bfloat16)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(3, t)
+    back = mgr.restore(3, jax.tree.map(lambda x: jnp.zeros_like(x), t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(1)
+    mgr.save(1, t, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_gc_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree(2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, _tree(3))
+    names = [p.name for p in tmp_path.iterdir()]
+    assert names == ["step_00000007"]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"a": jnp.zeros((5,))})
+
+
+def test_compressed_checkpoint_truncates_mantissas(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), compress_bits=4)
+    t = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 32))}
+    mgr.save(1, t)
+    back = mgr.restore(1, t)
+    from repro.core import containers as C
+    np.testing.assert_array_equal(
+        np.asarray(back["w"]), np.asarray(C.truncate_mantissa(t["w"], 4)))
+    err = float(jnp.max(jnp.abs(back["w"] - t["w"])))
+    assert 0 < err < 0.25

@@ -1,0 +1,87 @@
+"""Paper-model (CNN) tests: shapes, stash collection, short training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import footprint, sfp
+from repro.models import cnn
+from repro.optim import adamw
+
+
+def test_resnet8_forward_shapes_and_stash():
+    m = cnn.CNN(cnn.RESNET8)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = cnn.synthetic_images(jax.random.PRNGKey(1), 4, cnn.RESNET8)
+    logits, stash = m.forward(params, batch["images"], collect_stash=True)
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert len(stash) >= 6
+    assert all(s["signless"] for s in stash[:-1])  # post-ReLU tensors
+
+
+def test_resnet18_full_config_builds():
+    m = cnn.CNN(cnn.RESNET18)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    import math
+    n = sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+    assert 10e6 < n < 13e6  # ~11.7M params
+
+
+def test_mobilenetv3_small_builds_and_runs():
+    cfg = cnn.MOBILENETV3_SMALL
+    import dataclasses
+    small = dataclasses.replace(cfg, img_size=32, n_classes=10)
+    m = cnn.CNN(small)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = cnn.synthetic_images(jax.random.PRNGKey(1), 2, small)
+    logits, stash = m.forward(params, batch["images"], collect_stash=True)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_cnn_trains_on_synthetic_blobs():
+    m = cnn.CNN(cnn.RESNET8)
+    params = m.init(jax.random.PRNGKey(0))
+    st = adamw.init(params)
+    cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0)
+    key = jax.random.PRNGKey(42)
+
+    @jax.jit
+    def step(params, st, batch):
+        (l, aux), g = jax.value_and_grad(m.loss, has_aux=True)(params, batch)
+        params, st, _ = adamw.update(g, st, params, cfg,
+                                     jnp.asarray(1e-2, jnp.float32))
+        return params, st, l
+
+    losses = []
+    for i in range(50):
+        batch = cnn.synthetic_images(jax.random.fold_in(key, i), 16,
+                                     cnn.RESNET8)
+        params, st, l = step(params, st, batch)
+        losses.append(float(l))
+    assert np.mean(losses[-8:]) < np.mean(losses[:8]) - 0.3, losses[::8]
+
+
+def test_cnn_qm_quantized_forward_close():
+    pol = sfp.SFPPolicy(mode=sfp.MODE_QM, container="bit_exact")
+    m = cnn.CNN(cnn.RESNET8, pol)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = cnn.synthetic_images(jax.random.PRNGKey(1), 4, cnn.RESNET8)
+    full, _ = m.forward(params, batch["images"])
+    q, _ = m.forward(params, batch["images"],
+                     act_bits=jnp.asarray(4.0, jnp.float32),
+                     key=jax.random.PRNGKey(2))
+    rel = float(jnp.max(jnp.abs(q - full)) / (jnp.max(jnp.abs(full)) + 1e-9))
+    assert rel < 0.5
+
+
+def test_footprint_on_cnn_stash():
+    m = cnn.CNN(cnn.RESNET8)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = cnn.synthetic_images(jax.random.PRNGKey(1), 2, cnn.RESNET8)
+    _, stash = m.forward(params, batch["images"], collect_stash=True)
+    t = stash[0]["tensor"]
+    rep = footprint.sfp_footprint(t, 2, signless=stash[0]["signless"])
+    assert rep.vs_fp32() < 0.5  # 2-bit mantissa + gecko + no sign << fp32
+    js = footprint.js_bits(t)
+    assert js > 0

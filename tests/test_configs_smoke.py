@@ -1,0 +1,105 @@
+"""Per-architecture smoke: a reduced same-family config runs one forward +
+train step on CPU with finite outputs and the right shapes (the full
+configs are exercised only via the dry-run)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.core import sfp
+from repro.models.model import DecoderModel, init_run_state
+from repro.optim.schedule import Schedule
+from repro.train import step as step_mod
+
+ARCHS = [c.name for c in configs.ASSIGNED]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(configs.get(arch))
+    model = DecoderModel(cfg, sfp.SFPPolicy(mode=sfp.MODE_QM,
+                                            container="sfp8"))
+    tc = step_mod.TrainConfig(
+        schedule=Schedule(total_steps=10, warmup_steps=1),
+        num_microbatches=2)
+    state = step_mod.init_state(model, jax.random.PRNGKey(0), tc)
+
+    B, S = 4, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    if cfg.prefix_tokens:
+        batch["cond_embeddings"] = jnp.zeros(
+            (B, cfg.prefix_tokens, cfg.d_model), cfg.compute_dtype)
+
+    # forward shapes
+    run = init_run_state(cfg, jax.random.PRNGKey(2))
+    logits, _ = model.forward(state.params, tokens, run,
+                              cond_embeddings=batch.get("cond_embeddings"))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one jitted train step
+    train_step = jax.jit(step_mod.make_train_step(model, tc))
+    state2, metrics = train_step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state2.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = reduced(configs.get(arch))
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    cache = model.init_cache(B, 96)
+    logits, cache2 = jax.jit(model.decode_step)(
+        params, cache, jnp.zeros((B, 1), jnp.int32),
+        jnp.asarray(cfg.prefix_tokens, jnp.int32))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+def test_param_counts_match_configs():
+    """Sanity: constructed parameter trees match ArchConfig.param_count."""
+    for arch in ("gemma2-2b", "olmoe-1b-7b", "mamba2-370m"):
+        cfg = configs.get(arch)
+        model = DecoderModel(cfg)
+        shapes = model.param_shapes()
+        import math
+        n = sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+        approx = cfg.param_count()
+        assert abs(n - approx) / approx < 0.05, (arch, n, approx)
+
+
+def test_full_config_values():
+    """The assigned table's exact numbers."""
+    g = configs.get("gemma3-12b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab) == (48, 3840, 16, 8, 15360, 262144)
+    assert g.period == ("local",) * 5 + ("global",)
+    m = configs.get("mistral-large-123b")
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_ff,
+            m.vocab) == (88, 12288, 96, 8, 28672, 32768)
+    o = configs.get("olmoe-1b-7b")
+    assert (o.n_experts, o.top_k) == (64, 8)
+    p = configs.get("phi3.5-moe-42b-a6.6b")
+    assert (p.n_experts, p.top_k) == (16, 2)
+    r = configs.get("recurrentgemma-9b")
+    assert r.period == ("rglru", "rglru", "local") and r.n_layers == 38
+    assert len(r.remainder) == 2
+    mm = configs.get("mamba2-370m")
+    assert mm.ssm_state == 128 and mm.period == ("ssd",)
+
+
+def test_cells_matrix():
+    from repro.configs.base import cells_for
+    total = sum(len(cells_for(c)) for c in configs.ASSIGNED)
+    # 10 archs x 3 shapes + 2 long-context cells
+    assert total == 32

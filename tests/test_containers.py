@@ -1,0 +1,89 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import containers as C
+
+
+@pytest.mark.parametrize("dtype,spec", [(jnp.float32, C.FP32),
+                                        (jnp.bfloat16, C.BF16)])
+def test_split_combine_roundtrip(dtype, spec):
+    x = (jax.random.normal(jax.random.PRNGKey(0), (128,), jnp.float32) * 100
+         ).astype(dtype)
+    y = C.combine_fields(*C.split_fields(x), spec)
+    np.testing.assert_array_equal(
+        np.asarray(C.bitcast_to_int(x)), np.asarray(C.bitcast_to_int(y)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_truncate_full_bits_is_identity(dtype):
+    spec = C.spec_for(jnp.dtype(dtype))
+    x = (jax.random.normal(jax.random.PRNGKey(1), (257,), jnp.float32)
+         ).astype(dtype)
+    y = C.truncate_mantissa(x, spec.man_bits)
+    np.testing.assert_array_equal(np.asarray(C.bitcast_to_int(x)),
+                                  np.asarray(C.bitcast_to_int(y)))
+
+
+def test_truncate_zero_bits_keeps_sign_exponent():
+    x = jnp.asarray([1.75, -3.5, 0.0, 100.25], jnp.float32)
+    y = C.truncate_mantissa(x, 0)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray([1.0, -2.0, 0.0, 64.0]))
+
+
+def test_truncate_monotone_in_bits():
+    """More bits always means error no larger (nested truncation)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (1000,), jnp.float32) * 7
+    prev_err = None
+    for n in range(24):
+        err = float(jnp.max(jnp.abs(x - C.truncate_mantissa(x, n))))
+        if prev_err is not None:
+            assert err <= prev_err + 1e-12
+        prev_err = err
+
+
+def test_truncate_nested():
+    x = jax.random.normal(jax.random.PRNGKey(3), (512,), jnp.float32)
+    a = C.truncate_mantissa(C.truncate_mantissa(x, 7), 3)
+    b = C.truncate_mantissa(x, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_truncate_traced_n():
+    x = jax.random.normal(jax.random.PRNGKey(4), (64,), jnp.float32)
+    f = jax.jit(lambda x, n: C.truncate_mantissa(x, n))
+    np.testing.assert_array_equal(np.asarray(f(x, jnp.int32(5))),
+                                  np.asarray(C.truncate_mantissa(x, 5)))
+
+
+def test_round_mantissa_error_le_truncate():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4096,), jnp.float32)
+    for n in (2, 5, 9):
+        e_r = float(jnp.mean(jnp.abs(x - C.round_mantissa(x, n))))
+        e_t = float(jnp.mean(jnp.abs(x - C.truncate_mantissa(x, n))))
+        assert e_r <= e_t
+
+
+def test_round_mantissa_preserves_inf_nan():
+    x = jnp.asarray([jnp.inf, -jnp.inf, jnp.nan, 1.5], jnp.float32)
+    y = C.round_mantissa(x, 3)
+    assert np.isinf(np.asarray(y)[0]) and np.isinf(np.asarray(y)[1])
+    assert np.isnan(np.asarray(y)[2])
+
+
+def test_stochastic_bitlength_expectation():
+    n = jnp.asarray(3.3, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2000)
+    draws = jax.vmap(lambda k: C.stochastic_bitlength(n, k, 7))(keys)
+    mean = float(jnp.mean(draws.astype(jnp.float32)))
+    assert abs(mean - 3.3) < 0.08
+    assert set(np.unique(np.asarray(draws))) <= {3, 4}
+
+
+def test_exponent_field_matches_numpy():
+    x = jax.random.normal(jax.random.PRNGKey(6), (100,), jnp.float32) * 1e3
+    e = np.asarray(C.exponent_field(x))
+    expect = (np.asarray(x).view(np.uint32) >> 23) & 0xFF
+    np.testing.assert_array_equal(e, expect.astype(np.uint8))

@@ -1,0 +1,37 @@
+import pytest
+
+from repro import configs
+from repro.distributed import elastic
+
+
+def test_valid_tp_degrees_respect_divisibility():
+    cfg = configs.get("gemma3-12b")
+    degs = elastic.valid_tp_degrees(cfg, 64)
+    assert 1 in degs and 16 in degs
+    for t in degs:
+        assert (cfg.n_heads * cfg.head_dim_) % t == 0
+        assert cfg.d_ff % t == 0
+        assert cfg.padded_vocab % t == 0
+
+
+def test_plan_remesh_uses_survivors():
+    cfg = configs.get("gemma2-2b")
+    plan = elastic.plan_remesh(256, cfg, global_batch=256, prefer_tp=16)
+    assert plan.shape[0] * plan.shape[1] == 256
+    assert plan.dropped_devices == 0
+
+
+def test_plan_remesh_after_losing_nodes():
+    cfg = configs.get("gemma2-2b")
+    # lost 3 of 256 -> best mesh with 253 survivors
+    plan = elastic.plan_remesh(253, cfg, global_batch=256, prefer_tp=16)
+    used = plan.shape[0] * plan.shape[1]
+    assert used <= 253
+    assert 256 % plan.shape[0] == 0  # batch still divides data axis
+    assert plan.dropped_devices == 253 - used
+
+
+def test_plan_remesh_moe_keeps_expert_divisibility():
+    cfg = configs.get("olmoe-1b-7b")
+    plan = elastic.plan_remesh(48, cfg, global_batch=64, prefer_tp=8)
+    assert cfg.n_experts % plan.shape[1] == 0

@@ -1,0 +1,93 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import containers as C, gecko
+
+
+def _rand_exponents(n, seed=0, spread=3):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(
+        np.clip(rng.normal(127, spread, n).round(), 0, 255).astype(np.uint8))
+
+
+@pytest.mark.parametrize("n", [1, 7, 8, 63, 64, 65, 1000])
+def test_delta_roundtrip_exact(n):
+    e = _rand_exponents(n)
+    enc = gecko.encode_delta(e)
+    np.testing.assert_array_equal(np.asarray(gecko.decode_delta(enc)),
+                                  np.asarray(e))
+
+
+@pytest.mark.parametrize("n", [1, 8, 9, 801])
+def test_bias_roundtrip_exact(n):
+    e = _rand_exponents(n, seed=1)
+    enc = gecko.encode_bias(e)
+    np.testing.assert_array_equal(np.asarray(gecko.decode_bias(enc)),
+                                  np.asarray(e))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=300))
+def test_delta_roundtrip_lossless_property(vals):
+    e = jnp.asarray(np.asarray(vals, np.uint8))
+    enc = gecko.encode_delta(e)
+    np.testing.assert_array_equal(np.asarray(gecko.decode_delta(enc)),
+                                  np.asarray(e))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=300))
+def test_bias_roundtrip_lossless_property(vals):
+    e = jnp.asarray(np.asarray(vals, np.uint8))
+    enc = gecko.encode_bias(e)
+    np.testing.assert_array_equal(np.asarray(gecko.decode_bias(enc)),
+                                  np.asarray(e))
+
+
+def test_constant_stream_compresses_hard():
+    e = jnp.full((64 * 16,), 127, jnp.uint8)
+    r = float(gecko.compression_ratio(e, "delta"))
+    # per group: 64 bases bits + 7 rows x 3b = 85 bits vs 512 original
+    assert r < 0.2
+
+
+def test_uniform_random_does_not_win():
+    rng = np.random.RandomState(3)
+    e = jnp.asarray(rng.randint(0, 256, 4096).astype(np.uint8))
+    assert float(gecko.compression_ratio(e, "delta")) > 0.9
+
+
+def test_trained_like_distribution_hits_paper_range():
+    """Paper: ~0.52-0.56 ratio on training exponent streams."""
+    e = _rand_exponents(1 << 16, seed=4, spread=4)
+    r = float(gecko.compression_ratio(e, "delta"))
+    assert 0.3 < r < 0.75
+
+
+def test_ratio_bits_consistency():
+    e = _rand_exponents(4096, seed=5)
+    bits = float(gecko.compressed_bits(e, "delta"))
+    r = float(gecko.compression_ratio(e, "delta"))
+    assert abs(bits / (e.size * 8) - r) < 1e-6
+
+
+def test_per_value_bits_delta():
+    e = _rand_exponents(256, seed=6)
+    pv = gecko.per_value_bits(e, "delta")
+    assert pv.shape == (256,)
+    # row-0 bases are always 8 bits
+    assert all(int(b) == 8 for b in np.asarray(pv).reshape(-1, 8, 8)[:, 0, :]
+               .reshape(-1))
+    assert int(jnp.max(pv)) <= 9  # sign + <=8 magnitude bits
+
+
+def test_real_tensor_exponents():
+    import jax
+    x = jax.random.normal(jax.random.PRNGKey(0), (1 << 14,), jnp.float32)
+    e = C.exponent_field(x)
+    enc = gecko.encode_delta(e)
+    np.testing.assert_array_equal(np.asarray(gecko.decode_delta(enc)),
+                                  np.asarray(e))
+    assert float(gecko.compression_ratio(e, "delta")) < 1.0

@@ -1,0 +1,119 @@
+"""Per-kernel allclose vs the pure-jnp oracles, sweeping shapes and dtypes
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import containers as C
+from repro.kernels import flash_attention as fa
+from repro.kernels import mantissa_quant as mq
+from repro.kernels import ops, ref
+from repro.kernels import sfp_pack as sp
+
+
+@pytest.mark.parametrize("shape", [(128,), (3, 100), (5, 7, 64), (2, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [0, 1, 4, 7])
+def test_mantissa_quant_kernel_matches_oracle(shape, dtype, n):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32) * 10
+         ).astype(dtype)
+    got = mq.mantissa_quantize(x, jnp.int32(n), interpret=True, block_rows=8)
+    want = ref.mantissa_truncate(x, n)
+    np.testing.assert_array_equal(
+        np.asarray(C.bitcast_to_int(got)), np.asarray(C.bitcast_to_int(want)))
+
+
+@pytest.mark.parametrize("rows", [1, 3, 64, 130])
+@pytest.mark.parametrize("container,dtype", [("sfp8", jnp.bfloat16),
+                                             ("sfp16", jnp.bfloat16),
+                                             ("sfp16", jnp.float32)])
+def test_sfp_pack_kernel_matches_oracle(rows, container, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(1), (rows, 128), jnp.float32)
+         * 5).astype(dtype)
+    pk, bk = sp.sfp_pack(x, container=container, interpret=True, block_rows=16)
+    pr, br = ref.sfp_pack(x, container)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
+    uk = sp.sfp_unpack(pk, bk, shape=x.shape, dtype=dtype,
+                       container=container, interpret=True, block_rows=16)
+    ur = ref.sfp_unpack(pr, br, x.shape, dtype, container)
+    np.testing.assert_array_equal(np.asarray(C.bitcast_to_int(uk)),
+                                  np.asarray(C.bitcast_to_int(ur)))
+
+
+@pytest.mark.parametrize("container,man_keep", [("sfp8", 3), ("sfp16", 7)])
+def test_sfp_roundtrip_exact_when_within_budget(container, man_keep):
+    """Values pre-truncated to the container's mantissa budget and within
+    the delta-exponent range round-trip bit-exactly."""
+    x = (jax.random.normal(jax.random.PRNGKey(2), (4, 256), jnp.float32)
+         ).astype(jnp.bfloat16)
+    x = C.truncate_mantissa(x, man_keep)
+    p, b, = ref.sfp_pack_nd(x, container)
+    back = ref.sfp_unpack_nd(p, b, jnp.bfloat16, container)
+    np.testing.assert_array_equal(np.asarray(x).view(np.uint16),
+                                  np.asarray(back).view(np.uint16))
+
+
+def test_sfp8_bounded_error_out_of_budget():
+    x = (jax.random.normal(jax.random.PRNGKey(3), (8, 512), jnp.float32)
+         ).astype(jnp.bfloat16)
+    back = ops.sfp_decompress_nd(ops.sfp_compress_nd(x, "sfp8"),
+                                 jnp.bfloat16, "sfp8")
+    err = np.abs(np.asarray(back, np.float32) - np.asarray(x, np.float32))
+    group_max = np.abs(np.asarray(x, np.float32)).reshape(8, 4, 128).max(-1)
+    rel = err.reshape(8, 4, 128) / group_max[..., None]
+    assert rel.max() < 0.13  # 3 mantissa bits -> <= 2^-3 rel; + flush margin
+
+
+def test_sfp_nd_matches_flat():
+    x = (jax.random.normal(jax.random.PRNGKey(4), (2, 3, 256), jnp.float32)
+         ).astype(jnp.bfloat16)
+    pn, bn = ref.sfp_pack_nd(x, "sfp8")
+    pf, bf = ref.sfp_pack(x, "sfp8")
+    np.testing.assert_array_equal(np.asarray(pn).reshape(-1, 128),
+                                  np.asarray(pf))
+    np.testing.assert_array_equal(np.asarray(bn).reshape(-1, 1),
+                                  np.asarray(bf))
+
+
+def test_sfp_preserves_exact_zeros():
+    x = jnp.zeros((1, 128), jnp.bfloat16).at[0, 3].set(1.5)
+    back = ref.sfp_unpack_nd(*ref.sfp_pack_nd(x, "sfp8"), jnp.bfloat16, "sfp8")
+    assert float(back[0, 0]) == 0.0 and float(back[0, 3]) == 1.5
+
+
+@pytest.mark.parametrize("S,window,softcap", [
+    (256, None, None), (256, 64, None), (256, None, 50.0), (192, 50, 30.0)])
+def test_flash_attention_matches_oracle(S, window, softcap):
+    B, H, D = 2, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    got = fa.flash_attention(q, k, v, causal=True, window=window,
+                             softcap=softcap, block_q=64, block_k=64,
+                             interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, S, H, D = 1, 128, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, D), jnp.float32
+                                 ).astype(jnp.bfloat16) for kk in ks)
+    got = fa.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_ops_dispatch_ref_backend():
+    ops.force_backend("ref")
+    try:
+        x = jnp.ones((4, 128), jnp.bfloat16) * 1.5
+        q = ops.mantissa_quantize(x, 2)
+        assert q.dtype == jnp.bfloat16
+    finally:
+        ops.force_backend(None)

@@ -1,0 +1,92 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import containers as C, footprint, gecko
+from repro.kernels import ref
+
+floats = st.lists(
+    st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+              allow_infinity=False, width=32),
+    min_size=1, max_size=200)
+
+
+@settings(max_examples=40, deadline=None)
+@given(floats, st.integers(0, 23))
+def test_truncation_never_increases_magnitude(vals, n):
+    x = jnp.asarray(vals, jnp.float32)
+    q = C.truncate_mantissa(x, n)
+    assert (np.abs(np.asarray(q)) <= np.abs(np.asarray(x)) + 0.0).all()
+    # sign preserved (or value zeroed)
+    same_sign = np.sign(np.asarray(q)) == np.sign(np.asarray(x))
+    assert (same_sign | (np.asarray(q) == 0)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(floats, st.integers(0, 23))
+def test_truncation_idempotent(vals, n):
+    x = jnp.asarray(vals, jnp.float32)
+    q1 = C.truncate_mantissa(x, n)
+    q2 = C.truncate_mantissa(q1, n)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(floats, st.integers(0, 22))
+def test_truncation_relative_error_bound(vals, n):
+    """|x - Q(x,n)| < 2^-n * |x| for normal x (ulp bound)."""
+    x = jnp.asarray(vals, jnp.float32)
+    x = jnp.where(jnp.abs(x) < 1e-30, 1.0, x)  # skip denormals
+    q = C.truncate_mantissa(x, n)
+    rel = np.abs(np.asarray(x - q)) / np.abs(np.asarray(x))
+    assert (rel < 2.0 ** (-n)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=256))
+def test_gecko_bits_at_least_metadata(vals):
+    e = jnp.asarray(np.asarray(vals, np.uint8))
+    bits = float(gecko.compressed_bits(e, "delta"))
+    n_groups = -(-len(vals) // 64)
+    assert bits >= n_groups * (64 + 21)  # 8 bases x 8b + 7 rows x 3b
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=-100, max_value=100, allow_nan=False,
+                          width=32), min_size=128, max_size=128))
+def test_sfp8_roundtrip_closure(vals):
+    """decode(encode(x)) is a fixed point: encoding it again is identity."""
+    x = jnp.asarray(vals, jnp.float32).astype(jnp.bfloat16).reshape(1, 128)
+    once = ref.sfp_unpack_nd(*ref.sfp_pack_nd(x, "sfp8"), jnp.bfloat16, "sfp8")
+    twice = ref.sfp_unpack_nd(*ref.sfp_pack_nd(once, "sfp8"), jnp.bfloat16,
+                              "sfp8")
+    np.testing.assert_array_equal(np.asarray(once).view(np.uint16),
+                                  np.asarray(twice).view(np.uint16))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 7), st.integers(1, 400))
+def test_footprint_accounting_bounds(bits, n):
+    x = (jax.random.normal(jax.random.PRNGKey(n), (n,), jnp.float32)
+         ).astype(jnp.bfloat16)
+    rep = footprint.sfp_footprint(x, bits)
+    assert rep.total_bits > 0
+    assert rep.mantissa_bits == bits * n
+    assert rep.sign_bits == n
+    # never worse than ~9 extra bits/value of exponent+metadata
+    assert rep.total_bits <= n * (1 + bits + 10) + 64 * 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6))
+def test_bitchop_never_leaves_bounds(seed):
+    from repro.core import bitchop
+    rng = np.random.RandomState(seed)
+    cfg = bitchop.BitChopConfig(warmup_steps=1, max_bits=7, min_bits=0)
+    stt = bitchop.init(cfg)
+    for i in range(50):
+        stt = bitchop.update(stt, float(3 + rng.randn()), cfg,
+                             lr_changed=(i % 17 == 0))
+        assert 0 <= int(stt.n) <= 7

@@ -1,0 +1,75 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import containers as C, quantum_mantissa as qm
+
+
+def test_qm_quantize_values_are_truncations():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,), jnp.float32)
+    q = qm.qm_quantize(x, jnp.asarray(4.5, jnp.float32), jax.random.PRNGKey(1))
+    q4 = C.truncate_mantissa(x, 4)
+    q5 = C.truncate_mantissa(x, 5)
+    match = (np.asarray(q) == np.asarray(q4)).all() or (
+        np.asarray(q) == np.asarray(q5)).all()
+    assert match  # per-tensor draw: all elements share the same bitlength
+
+
+def test_qm_ste_gradient_wrt_x():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(
+        qm.qm_quantize(x, jnp.asarray(3.0), jax.random.PRNGKey(1)) * 2.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 2.0)
+
+
+def test_qm_bitlength_gradient_matches_expectation_slope():
+    """dL/dn must equal sum(g * (Q(x, floor+1) - Q(x, floor)))."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (128,), jnp.float32) * 3
+    w = jax.random.normal(jax.random.PRNGKey(3), (128,), jnp.float32)
+    n = jnp.asarray(3.4, jnp.float32)
+
+    def loss(n):
+        return jnp.sum(w * qm.qm_quantize(x, n, jax.random.PRNGKey(4)))
+
+    dn = jax.grad(loss)(n)
+    expect = jnp.sum(w * (C.truncate_mantissa(x, 4) - C.truncate_mantissa(x, 3)))
+    np.testing.assert_allclose(float(dn), float(expect), rtol=1e-5)
+
+
+def test_qm_bitlength_gradient_zero_at_max_bits():
+    x = jax.random.normal(jax.random.PRNGKey(5), (64,), jnp.float32)
+    dn = jax.grad(lambda n: jnp.sum(
+        qm.qm_quantize(x, n, jax.random.PRNGKey(6)) ** 2))(jnp.asarray(23.0))
+    assert float(dn) == 0.0
+
+
+def test_penalty_and_lambdas():
+    lams = qm.footprint_lambdas({"a": 100, "b": 300})
+    assert abs(lams["a"] - 0.25) < 1e-9 and abs(lams["b"] - 0.75) < 1e-9
+    bits = {"a": jnp.asarray(4.0), "b": jnp.asarray(2.0)}
+    pen = qm.qm_penalty(bits, lams, gamma=0.1)
+    np.testing.assert_allclose(float(pen), 0.1 * (0.25 * 4 + 0.75 * 2),
+                               rtol=1e-6)
+
+
+def test_gamma_decay_schedule():
+    cfg = qm.QMConfig(gamma=0.1, gamma_decay_steps=(10, 20))
+    assert abs(float(qm.gamma_at(cfg, jnp.asarray(0))) - 0.1) < 1e-6
+    assert abs(float(qm.gamma_at(cfg, jnp.asarray(15))) - 0.01) < 1e-6
+    assert abs(float(qm.gamma_at(cfg, jnp.asarray(25))) - 0.001) < 1e-6
+
+
+def test_qm_quantize_bf16():
+    x = (jax.random.normal(jax.random.PRNGKey(7), (128,), jnp.float32)
+         ).astype(jnp.bfloat16)
+    q = qm.qm_quantize(x, jnp.asarray(2.0, jnp.float32), jax.random.PRNGKey(8))
+    expect = C.truncate_mantissa(x, 2)
+    np.testing.assert_array_equal(
+        np.asarray(q).view(np.uint16), np.asarray(expect).view(np.uint16))
+
+
+def test_deterministic_rounds_up():
+    x = jax.random.normal(jax.random.PRNGKey(9), (32,), jnp.float32)
+    q = qm.qm_quantize_deterministic(x, jnp.asarray(2.3))
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.asarray(C.truncate_mantissa(x, 3)))

@@ -1,0 +1,116 @@
+"""Prefill + decode must reproduce the full-sequence forward logits, for
+every layer family; the compressed KV cache must stay close."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models.model import DecoderModel, init_run_state
+from repro.serve import engine, kvcache
+
+FAMS = ["gemma3-12b", "mistral-large-123b", "mamba2-370m",
+        "recurrentgemma-9b", "olmoe-1b-7b", "paligemma-3b"]
+
+
+def _model(name):
+    cfg = dataclasses.replace(reduced(configs.get(name)), dtype="float32")
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # droplessness
+    return cfg, DecoderModel(cfg)
+
+
+@pytest.mark.parametrize("name", FAMS)
+def test_prefill_decode_matches_forward(name):
+    cfg, model = _model(name)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S0, n_new = 2, 24, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S0 + n_new),
+                                0, cfg.vocab)
+    cond = (0.1 * jax.random.normal(
+        jax.random.PRNGKey(2), (B, cfg.prefix_tokens, cfg.d_model))
+        if cfg.prefix_tokens else None)
+    P = cfg.prefix_tokens if cond is not None else 0
+
+    run = init_run_state(cfg, jax.random.PRNGKey(3))
+    full_logits, _ = model.forward(params, tokens, run, cond_embeddings=cond)
+
+    logits, cache = model.prefill(params, tokens[:, :S0], P + S0 + n_new,
+                                  cond_embeddings=cond)
+    np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                               np.asarray(full_logits[:, S0 - 1]),
+                               atol=2e-2, rtol=2e-3)
+    pos = P + S0
+    for t in range(n_new):
+        step_logits, cache = model.decode_step(
+            params, cache, tokens[:, S0 + t: S0 + t + 1],
+            jnp.asarray(pos + t, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0]),
+            np.asarray(full_logits[:, S0 + t]), atol=2e-2, rtol=2e-3)
+
+
+def test_local_ring_cache_decode_matches_forward_long():
+    """Decode past the window: ring buffer must stay correct."""
+    cfg, model = _model("gemma3-12b")
+    cfg = dataclasses.replace(cfg, window=16)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 48
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    run = init_run_state(cfg, jax.random.PRNGKey(3))
+    full_logits, _ = model.forward(params, tokens, run)
+    S0 = 8
+    logits, cache = model.prefill(params, tokens[:, :S0], S)
+    for t in range(S0, S):
+        step_logits, cache = model.decode_step(
+            params, cache, tokens[:, t:t + 1], jnp.asarray(t, jnp.int32))
+        if t >= S - 3:
+            np.testing.assert_allclose(
+                np.asarray(step_logits[:, 0]), np.asarray(full_logits[:, t]),
+                atol=3e-2, rtol=3e-3)
+
+
+def test_generate_greedy_deterministic():
+    cfg, model = _model("mistral-large-123b")
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    r1 = engine.generate(model, params, prompt, max_new=6)
+    r2 = engine.generate(model, params, prompt, max_new=6)
+    np.testing.assert_array_equal(np.asarray(r1.tokens), np.asarray(r2.tokens))
+    assert r1.tokens.shape == (2, 6)
+    assert int(jnp.max(r1.tokens)) < cfg.vocab
+
+
+def test_packed_kv_decode_close_to_exact():
+    cfg, model = _model("mistral-large-123b")
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 32
+    from repro.models import attention, common
+    slot_p = params["periods"]
+    p0 = jax.tree.map(lambda a: a[0], slot_p)["slot0"]["attn"]
+    h_tok = 0.3 * jax.random.normal(jax.random.PRNGKey(4),
+                                    (B, 1, cfg.d_model), jnp.float32)
+    raw = attention.cache_init(cfg, "global", B, L, jnp.float32)
+    packed = kvcache.packed_cache_init(cfg, "global", B, L)
+    pos = jnp.asarray(0, jnp.int32)
+    out_raw, raw = attention.attention_decode(p0, h_tok, raw, pos, cfg,
+                                              kind="global")
+    out_pk, packed = kvcache.attention_decode_packed(p0, h_tok, packed, pos,
+                                                     cfg, kind="global")
+    # sfp8 KV: 3 mantissa bits -> outputs agree to ~1e-1 relative
+    denom = float(jnp.max(jnp.abs(out_raw))) + 1e-9
+    assert float(jnp.max(jnp.abs(out_pk - out_raw))) / denom < 0.15
+
+
+def test_pack_prefill_cache_shapes():
+    cfg, model = _model("gemma3-12b")
+    from repro.models import attention
+    raw = attention.cache_init(cfg, "global", 2, 16, jnp.float32)
+    pk = kvcache.pack_prefill_cache(raw)
+    D = cfg.n_kv_heads * cfg.head_dim_
+    assert pk.k_payload.shape == (2, 16, D)
+    assert pk.k_bases.shape == (2, 16, D // 128)

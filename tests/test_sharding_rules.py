@@ -1,0 +1,55 @@
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def _mesh():
+    dev = np.asarray(jax.devices()[:1] * 4).reshape(2, 2) \
+        if len(jax.devices()) < 4 else np.asarray(jax.devices()[:4]).reshape(2, 2)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_spec_from_axes_basic():
+    rules = {"embed": ("data",), "ff": ("model",), "batch": ("data",)}
+    spec = shd.spec_from_axes(("embed", "ff"), rules)
+    assert spec == P("data", "model")
+
+
+def test_spec_axis_used_once():
+    rules = {"a": ("model",), "b": ("model",)}
+    spec = shd.spec_from_axes(("a", "b"), rules)
+    assert spec == P("model", None)  # later dim falls back to replicated
+
+
+def test_tp_layout_shards_expected_dims():
+    mesh = _mesh()
+    rules = shd.rules_for(mesh, layout="tp")
+    assert rules["heads"] == ("model",)
+    assert rules["vocab"] == ("model",)
+    assert rules["batch"] == ("data",)
+
+
+def test_fsdp_layout_moves_weights_to_both_axes():
+    mesh = _mesh()
+    rules = shd.rules_for(mesh, layout="fsdp")
+    assert rules["heads"] is None
+    assert rules["embed"] == ("data", "model")
+    assert rules["batch"] == ("data", "model")
+    assert rules["experts"] == ("model",)  # EP survives the layout switch
+
+
+def test_refine_drops_indivisible_dims():
+    mesh = _mesh()
+    shapes = jax.ShapeDtypeStruct((3, 8), jax.numpy.float32)
+    sh = jax.sharding.NamedSharding(mesh, P("data", "model"))
+    out = shd.refine_shardings(shapes, sh, mesh)
+    assert out.spec == P(None, "model")  # 3 % 2 != 0 -> dropped
+
+
+def test_hint_noop_without_mesh():
+    shd.set_active_mesh(None)
+    x = jax.numpy.ones((4, 4))
+    assert shd.hint(x, "data") is x
