@@ -1,0 +1,87 @@
+"""Codec subsystem benchmark: fused quantize+pack vs the two-kernel
+sequence, plus realized footprints of every registered container.
+
+The paper's hardware compressor fuses the mantissa quantizer with the
+container packer so a tensor crosses the memory boundary once. The TPU
+realization is kernels/sfp_pack.py's ``sfp_quantize_pack``; this benchmark
+measures the same fusion on the reference backend — two separately
+compiled executables (the old ops.mantissa_quantize -> ops.sfp_compress_nd
+sequence, which materializes the quantized intermediate) against the
+single-pass fused pack.
+
+Emitted as BENCH_codecs.json by benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+SHAPE = (8192, 8192)   # 128 MB of bf16 activations: memory-bound regime
+BITS = 3               # where Quantum Mantissa lands (paper Fig 4)
+ITERS = 10
+
+
+def _median_ms(fn, iters=ITERS) -> float:
+    fn()  # compile + warm caches
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e3
+
+
+def run() -> dict:
+    from repro import codecs
+    from repro.kernels import ops, ref
+
+    ops.force_backend("ref")
+    try:
+        x = (jax.random.normal(jax.random.PRNGKey(0), SHAPE, jnp.float32)
+             ).astype(jnp.bfloat16)
+        fields = codecs.fields_for(codecs.SFP8, x.dtype)
+        n = jnp.int32(BITS)
+
+        quant = jax.jit(lambda x, n: ref.mantissa_truncate(x, n))
+        pack = jax.jit(lambda q: ref.sfp_pack_nd(q, fields))
+        fused = jax.jit(lambda x, n: ref.sfp_pack_nd(x, fields, n=n))
+
+        two_ms = _median_ms(
+            lambda: jax.block_until_ready(pack(quant(x, n))))
+        fused_ms = _median_ms(
+            lambda: jax.block_until_ready(fused(x, n)))
+
+        # Bit-exactness of the fusion (same payload, same bases).
+        p2, b2 = pack(quant(x, n))
+        p1, b1 = fused(x, n)
+        exact = bool(jnp.all(p1 == p2)) and bool(jnp.all(b1 == b2))
+
+        # Realized footprint of each registered container on a small probe.
+        probe = x[:64]
+        footprints = {
+            name: float(codecs.get(name).packed_bits(probe)) / probe.size
+            for name in codecs.names()
+        }
+    finally:
+        ops.force_backend(None)
+
+    return {
+        "backend": "ref",
+        "container": codecs.SFP8,
+        "shape": list(SHAPE),
+        "dtype": "bfloat16",
+        "bits": BITS,
+        "two_kernel_ms": two_ms,
+        "fused_ms": fused_ms,
+        "speedup": two_ms / fused_ms,
+        "bit_exact_fusion": exact,
+        "bits_per_value": footprints,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -14,9 +14,9 @@ OUT = Path(__file__).resolve().parent.parent / "experiments"
 
 
 def main() -> None:
-    from benchmarks import (fig_bitchop, fig_gecko, fig_qm_bitlengths,
-                            fig_relative_compression, table1_footprint,
-                            table2_perf_energy)
+    from benchmarks import (bench_codecs, fig_bitchop, fig_gecko,
+                            fig_qm_bitlengths, fig_relative_compression,
+                            table1_footprint, table2_perf_energy)
 
     rows = []
     results = {}
@@ -48,10 +48,16 @@ def main() -> None:
     bench("fig_relative_compression", fig_relative_compression.run,
           lambda r: f"sfp_qm_vs_bf16={r['sfp_qm']:.3f};"
                     f"gist_vs_bf16={r['gist']:.3f}")
+    bench("bench_codecs", bench_codecs.run,
+          lambda r: f"fused_speedup={r['speedup']:.2f}x;"
+                    f"bit_exact={r['bit_exact_fusion']}")
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=2,
                                                        default=str))
+    # Headline artifact for the codec subsystem (fused quantize+pack win).
+    (OUT.parent / "BENCH_codecs.json").write_text(
+        json.dumps(results["bench_codecs"], indent=2, default=str))
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

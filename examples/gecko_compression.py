@@ -1,6 +1,6 @@
 """Gecko on real trained tensors: distributions and ratios (Fig 9/10).
 
-  PYTHONPATH=src python examples/gecko_compression.py
+  PYTHONPATH=src:. python examples/gecko_compression.py
 """
 import jax
 import jax.numpy as jnp

@@ -40,6 +40,7 @@ o_pk, _ = kvcache.attention_decode_packed(p0, h, packed, jnp.asarray(0),
 rel = float(jnp.max(jnp.abs((o_pk - o_raw).astype(jnp.float32)))
             / (float(jnp.max(jnp.abs(o_raw.astype(jnp.float32)))) + 1e-9))
 bytes_raw = raw.k.size * 2 * 2
-bytes_pk = (packed.k_payload.size + packed.k_bases.size) * 2
+bytes_pk = sum(a.size * a.dtype.itemsize
+               for a in jax.tree.leaves(packed.k)) * 2
 print(f"compressed KV: {bytes_raw} B -> {bytes_pk} B "
       f"({bytes_pk/bytes_raw:.2%}), relative decode error {rel:.3f}")

@@ -12,8 +12,12 @@ Fault-tolerance contract:
   * restore() accepts a different mesh/sharding than save() used — leaves
     are host-loaded and re-placed with the new shardings (elastic restart
     after losing nodes);
-  * optional SFP compression of checkpoint payloads (bf16 + truncated
-    mantissas via the paper's containers) for non-optimizer leaves.
+  * optional codec compression of checkpoint payloads for non-optimizer
+    leaves: any registry container (repro.codecs). ``bit_exact`` (default
+    when only ``compress_bits`` is given) truncates mantissas like the
+    paper's quantizer; ``gecko8`` additionally materializes the Gecko
+    exponent stream, so the bytes on disk really shrink (lossless for
+    bf16 leaves).
 
 The async writer snapshots to host (blocking only on device->host copy)
 and serializes on a background thread.
@@ -32,7 +36,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core import containers
+from repro import codecs
+
+_COMPRESSIBLE_DTYPES = {"float32", "bfloat16", "float16"}
 
 _NATIVE_DTYPES = {
     "float64", "float32", "float16", "int64", "int32", "int16", "int8",
@@ -51,11 +57,22 @@ def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
-                 compress_bits: Optional[int] = None):
+                 compress_bits: Optional[int] = None,
+                 compress_codec: Optional[str] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.compress_bits = compress_bits
+        # Registry container realizing the on-disk payload. Legacy
+        # compress_bits-only callers get the historical behaviour exactly:
+        # bit_exact mantissa truncation applied to float32 leaves only
+        # (bf16/fp16 leaves stayed raw before the registry existed).
+        if compress_codec is None and compress_bits is not None:
+            compress_codec = codecs.BIT_EXACT
+            self._compress_dtypes = {"float32"}
+        else:
+            self._compress_dtypes = _COMPRESSIBLE_DTYPES
+        self.compress_codec = compress_codec
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -105,17 +122,26 @@ class CheckpointManager:
         tmp = self.dir / f"{final.name}.tmp-{uuid.uuid4().hex[:8]}"
         tmp.mkdir(parents=True)
         manifest = {"step": step, "time": time.time(), "leaves": []}
+        codec = (codecs.get(self.compress_codec)
+                 if self.compress_codec is not None else None)
         for i, (name, arr) in enumerate(host):
             fname = f"arr_{i:05d}.npy"
             entry = {"name": name, "file": fname, "dtype": str(arr.dtype),
                      "shape": list(arr.shape)}
-            if (self.compress_bits is not None
-                    and arr.dtype in (np.float32,)
-                    and arr.ndim >= 2 and "opt" not in name):
-                q = np.asarray(containers.truncate_mantissa(
-                    jax.numpy.asarray(arr), self.compress_bits))
-                entry["sfp_mantissa_bits"] = self.compress_bits
-                arr = q
+            # A leaf is compressed only when the user asked for lossy
+            # quantization explicitly (compress_bits) or the codec is
+            # bit-exact for this dtype — never silently degrade data
+            # (e.g. gecko8 keeps 7 mantissa bits: lossless bf16, lossy
+            # fp32, so fp32 leaves stay raw unless bits are requested).
+            if (codec is not None
+                    and arr.dtype.name in self._compress_dtypes
+                    and arr.ndim >= 2 and "opt" not in name
+                    and (self.compress_bits is not None
+                         or codec.lossless_for(arr.dtype))):
+                stream, meta = codec.encode_host(arr, self.compress_bits)
+                entry["codec"] = codec.name
+                entry["codec_meta"] = meta
+                arr = stream
             if arr.dtype.name not in _NATIVE_DTYPES:
                 # ml_dtypes (bf16/fp8) need pickle under np.save; store the
                 # raw bits in a same-width uint container instead.
@@ -179,7 +205,11 @@ class CheckpointManager:
         for (name, leaf), sh in zip(leaves, sh_leaves):
             entry = by_name[name]
             arr = np.load(d / entry["file"])
-            if "stored_as" in entry:
+            if "codec" in entry:
+                arr = codecs.get(entry["codec"]).decode_host(
+                    arr, entry["codec_meta"], tuple(entry["shape"]),
+                    jax.numpy.dtype(entry["dtype"]))
+            elif "stored_as" in entry:
                 arr = arr.view(jax.numpy.dtype(entry["dtype"]))
             expect = tuple(getattr(leaf, "shape", arr.shape))
             if tuple(arr.shape) != expect:

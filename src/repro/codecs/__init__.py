@@ -1,0 +1,41 @@
+"""Unified container-codec subsystem (see base.py for the contract).
+
+Every compressed-tensor path in the system — activation stash, KV cache,
+gradient wire format, checkpoint payloads — resolves its container here:
+
+    codec = codecs.get("sfp8")
+    packed = codec.pack(x, bits=n)       # fused quantize+pack
+    x_q = codecs.unpack(packed)          # or codec.unpack(packed)
+    codec.packed_bits(x)                 # exact realized footprint
+
+Registered containers:
+  bit_exact — fake-quant accounting mode (payload is the quantized tensor;
+              footprint is the paper's idealized variable-length encoding)
+  sfp8      — 1s + 4 delta-exp + 3 mantissa byte, shared base per 128 lanes
+  sfp16     — 1s + 5 delta-exp + 10/7 mantissa word, shared base per group
+  gecko8    — sign+mantissa byte + *realized* Gecko delta-mode exponent
+              stream (paper §IV-C), byte-aligned; lossless for bf16
+
+New containers register via codecs.register() and become available to all
+call sites at once.
+"""
+from repro.codecs.base import (Codec, PackedTensor, get, names, register,
+                               unpack)
+from repro.codecs.bit_exact import BIT_EXACT, BitExactCodec
+from repro.codecs.gecko import GECKO8, Gecko8Codec
+from repro.codecs.sfp import SFP8, SFP16, SFPCodec, fields_for
+
+# The paper's default realized container (and the KV-cache default).
+DEFAULT_CONTAINER = SFP8
+
+register(BitExactCodec())
+register(SFPCodec(SFP8))
+register(SFPCodec(SFP16))
+register(Gecko8Codec())
+
+__all__ = [
+    "Codec", "PackedTensor", "get", "names", "register", "unpack",
+    "fields_for", "DEFAULT_CONTAINER",
+    "BIT_EXACT", "SFP8", "SFP16", "GECKO8",
+    "BitExactCodec", "SFPCodec", "Gecko8Codec",
+]

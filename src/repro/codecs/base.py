@@ -1,0 +1,165 @@
+"""Container-codec registry: the one place container names mean something.
+
+The paper's central mechanism is a single adaptive container pipeline that
+serves every tensor crossing the memory boundary. This module is that
+mechanism as a subsystem: a ``Codec`` packs a float tensor into a
+``PackedTensor`` (a scan/jit-friendly pytree of payload arrays plus static
+metadata), unpacks it back, and accounts for its exact compressed
+footprint. All compressed-tensor paths — the activation stash
+(models/model.py), the compressed KV cache (serve/kvcache.py), gradient
+compression (train/grad_compress.py), and checkpoint compression
+(checkpoint/manager.py) — resolve their container through ``get()``;
+nothing outside this package dispatches on container strings.
+
+Backends follow the existing ``kernels.ops.force_backend`` mechanism:
+codecs call through ops wrappers, which pick the Pallas kernel on TPU (or
+in interpret mode) and the jnp oracle elsewhere.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedTensor:
+    """A compressed tensor: named payload arrays + static reconstruction meta.
+
+    ``data`` maps part names (e.g. "payload", "bases") to arrays; ``codec``,
+    ``shape`` and ``dtype`` ride along as static pytree aux data, so a
+    PackedTensor flows through jit/scan/vmap and ``unpack`` needs no side
+    channel to reconstruct the original tensor.
+    """
+
+    __slots__ = ("codec", "shape", "dtype", "data")
+
+    def __init__(self, codec: str, shape: Tuple[int, ...], dtype,
+                 data: Dict[str, Any]):
+        self.codec = codec
+        self.shape = tuple(shape)
+        self.dtype = jnp.dtype(dtype)
+        self.data = dict(data)
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.data))
+        children = tuple(self.data[k] for k in keys)
+        return children, (self.codec, self.shape, str(self.dtype), keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codec, shape, dtype, keys = aux
+        return cls(codec, shape, dtype, dict(zip(keys, children)))
+
+    def __repr__(self):
+        parts = ", ".join(f"{k}:{getattr(v, 'shape', '?')}"
+                          for k, v in sorted(self.data.items()))
+        return (f"PackedTensor({self.codec}, shape={self.shape}, "
+                f"dtype={self.dtype}, {parts})")
+
+
+class Codec(abc.ABC):
+    """Uniform interface for every compressed-tensor representation.
+
+    ``bits`` is the mantissa bitlength signal from Quantum Mantissa /
+    BitChop / a static policy — a possibly-traced int32 scalar, or None for
+    the codec's full native precision.
+    """
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def pack(self, x: jax.Array, bits=None) -> PackedTensor:
+        """Compress ``x`` (optionally quantizing mantissas to ``bits``)."""
+
+    @abc.abstractmethod
+    def unpack(self, packed: PackedTensor) -> jax.Array:
+        """Reconstruct the tensor (shape/dtype from the packed metadata)."""
+
+    @abc.abstractmethod
+    def packed_bits(self, x: jax.Array, bits=None) -> float:
+        """Exact realized footprint of pack(x, bits), in bits."""
+
+    def packed_spec(self, shape: Tuple[int, ...], dtype) -> PackedTensor:
+        """ShapeDtypeStruct skeleton of pack()'s output — for cache/buffer
+        init and checkpoint planning without materializing anything."""
+        spec = jax.eval_shape(
+            lambda: self.pack(jnp.zeros(shape, dtype)))
+        return spec
+
+    def roundtrip(self, x: jax.Array, bits=None) -> jax.Array:
+        """pack->unpack: the fake-quant view of the realized container."""
+        return self.unpack(self.pack(x, bits))
+
+    def lossless_for(self, dtype) -> bool:
+        """True iff pack(x)->unpack is bit-exact for every ``dtype`` tensor
+        (with bits=None). Consumers that must not silently degrade data
+        (checkpoint compression) gate on this when no quantization was
+        explicitly requested."""
+        return False
+
+    # -- host-side serialization (checkpoint compression) ------------------
+
+    def encode_host(self, arr: np.ndarray, bits: Optional[int] = None
+                    ) -> Tuple[np.ndarray, Dict[str, Any]]:
+        """Serialize ``arr`` into a flat uint8 stream + JSON-able meta.
+
+        Default: concatenate the packed parts' raw bytes in sorted-name
+        order (fixed-width codecs). Variable-length codecs override.
+        """
+        packed = self.pack(jnp.asarray(arr), bits)
+        parts = {k: np.asarray(v) for k, v in sorted(packed.data.items())}
+        stream = np.concatenate([p.reshape(-1).view(np.uint8) for p in
+                                 parts.values()]) if parts else np.zeros(
+                                     0, np.uint8)
+        meta = {
+            "parts": {k: {"shape": list(p.shape), "dtype": p.dtype.name,
+                          "nbytes": int(p.nbytes)}
+                      for k, p in parts.items()},
+        }
+        if bits is not None:
+            meta["bits"] = int(bits)
+        return stream, meta
+
+    def decode_host(self, stream: np.ndarray, meta: Dict[str, Any],
+                    shape: Tuple[int, ...], dtype) -> np.ndarray:
+        data = {}
+        off = 0
+        for k, p in meta["parts"].items():
+            nb = int(p["nbytes"])
+            data[k] = (stream[off: off + nb].view(np.dtype(p["dtype"]))
+                       .reshape(p["shape"]))
+            off += nb
+        packed = PackedTensor(self.name, shape, dtype,
+                              {k: jnp.asarray(v) for k, v in data.items()})
+        return np.asarray(self.unpack(packed))
+
+
+_REGISTRY: Dict[str, Codec] = {}
+
+
+def register(codec: Codec) -> Codec:
+    """Register a codec instance under its name (last registration wins)."""
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown container codec {name!r}; registered: {names()}"
+        ) from None
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+def unpack(packed: PackedTensor) -> jax.Array:
+    """Module-level convenience: dispatch unpack on the packed metadata."""
+    return get(packed.codec).unpack(packed)

@@ -1,0 +1,36 @@
+"""bit_exact codec: fake-quant accounting mode.
+
+The payload *is* the (mantissa-truncated) tensor in its native dtype — no
+byte-level repacking happens on device. This is the paper's accounting
+configuration: the quantizer runs for real (so accuracy effects are
+faithful) while the footprint is what the paper's variable-length encoding
+*would* write — sign + kept mantissa + Gecko-compressed exponents
+(core/footprint.py's bit-exact model).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.codecs import base
+from repro.kernels import ops
+
+BIT_EXACT = "bit_exact"
+
+
+class BitExactCodec(base.Codec):
+    name = BIT_EXACT
+
+    def pack(self, x: jax.Array, bits=None) -> base.PackedTensor:
+        q = x if bits is None else ops.mantissa_quantize(x, bits)
+        return base.PackedTensor(self.name, x.shape, x.dtype, {"payload": q})
+
+    def unpack(self, packed: base.PackedTensor) -> jax.Array:
+        return packed.data["payload"]
+
+    def lossless_for(self, dtype) -> bool:
+        return True  # bits=None pack is the identity
+
+    def packed_bits(self, x: jax.Array, bits=None) -> float:
+        from repro.core import containers, footprint
+        n = (containers.spec_for(x).man_bits if bits is None else bits)
+        return float(footprint.sfp_footprint(x, n).total_bits)

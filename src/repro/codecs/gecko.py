@@ -1,0 +1,219 @@
+"""gecko8: the paper's delta-mode exponent compression, actually realized.
+
+core/gecko.py proves the 8x8 delta scheme is losslessly invertible and
+counts its bits; this codec *materializes* it. A float tensor becomes
+
+  signman  — one byte per value: sign<<7 | top-7 mantissa bits (after the
+             Q(M, n) truncation signal, fused into the byte build);
+  bases    — (G, 8) uint8 Gecko column bases (row 0 of each 8x8 group);
+  widths   — (G, 7) uint8 per-delta-row magnitude bitwidths (== the
+             reference encoder's row_widths);
+  planes   — (G, 63) uint8 dense sign+magnitude bit planes (row r of width
+             w has exactly w + 1 meaningful plane bytes; the rest are 0).
+
+The device representation keeps planes dense (static shapes for jit/scan);
+``stream_from_parts`` compacts them into the actual byte-aligned stream:
+
+  [bases: 8G bytes][widths: 2-per-byte nibbles, 4G bytes]
+  [row payload in (group, row, plane) order: (w+1) bytes per row, rows
+   with w == 0 elided]
+
+which costs exactly core/gecko.py's ``delta_bits`` plus 11 bits/group
+(width fields byte-aligned to 4-bit nibbles instead of the idealized 3
+bits). bf16 tensors with bits >= 7 round-trip losslessly — sign and all 7
+mantissa bits live in signman, exponents are Gecko-lossless.
+
+Pack/unpack of the exponent planes run through the Pallas kernel pair in
+kernels/gecko_pack.py (jnp oracle: kernels/ref.py), dispatched by the
+standard ops.force_backend mechanism.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import containers
+from repro.codecs import base
+from repro.kernels import ops
+from repro.kernels.ref import GECKO_GROUP, GECKO_PLANES, GECKO_ROWS
+
+GECKO8 = "gecko8"
+_SIGNMAN_BITS = 8           # 1 sign + 7 mantissa bits per value
+_WIDTH_BYTES = 4            # 7 x 4-bit width nibbles, byte-aligned
+_HEADER_BYTES = 8 + _WIDTH_BYTES  # per-group bases + widths
+
+
+def _exponent_groups(e: jax.Array) -> jax.Array:
+    """Flatten a uint8 exponent stream into edge-padded (G, 64) groups
+    (edge replication keeps padded deltas at zero cost, like core/gecko)."""
+    flat = e.reshape(-1)
+    pad = (-flat.size) % GECKO_GROUP
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.broadcast_to(flat[-1:], (pad,))])
+    return flat.reshape(-1, GECKO_GROUP)
+
+
+class Gecko8Codec(base.Codec):
+    name = GECKO8
+
+    def pack(self, x: jax.Array, bits=None) -> base.PackedTensor:
+        spec = containers.spec_for(x)
+        sign, e, man = containers.split_fields(x)
+        man = man.astype(jnp.int32)
+        if bits is not None:
+            keep = containers._mantissa_keep_mask(bits, spec)
+            man = man & keep.astype(jnp.int32)
+        man_top = man >> (spec.man_bits - 7)
+        signman = ((sign.astype(jnp.int32) << 7) | man_top).astype(jnp.uint8)
+        bases, widths, planes = ops.gecko_encode(
+            _exponent_groups(e.astype(jnp.uint8)))
+        return base.PackedTensor(self.name, x.shape, x.dtype, {
+            "signman": signman, "bases": bases, "widths": widths,
+            "planes": planes})
+
+    def unpack(self, packed: base.PackedTensor) -> jax.Array:
+        spec = containers.spec_for(packed.dtype)
+        n = 1
+        for s in packed.shape:
+            n *= s
+        e = ops.gecko_decode(packed.data["bases"], packed.data["planes"])
+        e = e.reshape(-1)[:n].reshape(packed.shape).astype(spec.int_dtype)
+        b = packed.data["signman"].astype(jnp.int32)
+        sign = (b >> 7) & 1
+        man = (b & 0x7F) << (spec.man_bits - 7)
+        return containers.combine_fields(
+            sign.astype(spec.int_dtype), e,
+            man.astype(spec.int_dtype), spec)
+
+    def lossless_for(self, dtype) -> bool:
+        # Sign + 7 mantissa bits in signman, exponents Gecko-lossless:
+        # bit-exact exactly when the source mantissa fits in 7 bits.
+        return containers.spec_for(jnp.dtype(dtype)).man_bits <= 7
+
+    def packed_bits(self, x: jax.Array, bits=None) -> float:
+        _, e, _ = containers.split_fields(x)
+        _, widths, _ = ops.gecko_encode(_exponent_groups(e.astype(jnp.uint8)))
+        return float(int(x.size) * _SIGNMAN_BITS + _stream_bits(widths))
+
+    # -- host-side byte-aligned stream --------------------------------------
+
+    def encode_host(self, arr: np.ndarray, bits: Optional[int] = None
+                    ) -> Tuple[np.ndarray, Dict[str, Any]]:
+        packed = self.pack(jnp.asarray(arr), bits)
+        signman = np.asarray(packed.data["signman"]).reshape(-1)
+        gecko_stream = stream_from_parts(
+            np.asarray(packed.data["bases"]),
+            np.asarray(packed.data["widths"]),
+            np.asarray(packed.data["planes"]))
+        meta = {"n_values": int(signman.size),
+                "n_groups": int(packed.data["bases"].shape[0])}
+        if bits is not None:
+            meta["bits"] = int(bits)
+        return np.concatenate([signman, gecko_stream]), meta
+
+    def decode_host(self, stream: np.ndarray, meta: Dict[str, Any],
+                    shape: Tuple[int, ...], dtype) -> np.ndarray:
+        n = int(meta["n_values"])
+        g = int(meta["n_groups"])
+        signman = stream[:n]
+        bases, widths, planes = parts_from_stream(stream[n:], g)
+        packed = base.PackedTensor(self.name, shape, dtype, {
+            "signman": jnp.asarray(signman).reshape(shape),
+            "bases": jnp.asarray(bases),
+            "widths": jnp.asarray(widths),
+            "planes": jnp.asarray(planes)})
+        return np.asarray(self.unpack(packed))
+
+
+# ---------------------------------------------------------------------------
+# Exponent-stream entry points (the §IV-C mechanism itself; the float codec
+# above composes these with the signman byte).
+# ---------------------------------------------------------------------------
+
+
+def pack_exponent_stream(e: jax.Array) -> Tuple[np.ndarray, int]:
+    """uint8 exponent stream -> (byte-aligned packed stream, n_values)."""
+    bases, widths, planes = ops.gecko_encode(_exponent_groups(e))
+    return (stream_from_parts(np.asarray(bases), np.asarray(widths),
+                              np.asarray(planes)), int(e.size))
+
+
+def unpack_exponent_stream(stream: np.ndarray, n_values: int) -> np.ndarray:
+    """Invert pack_exponent_stream (bit-exact)."""
+    n_groups = -(-n_values // GECKO_GROUP)
+    bases, widths, planes = parts_from_stream(np.asarray(stream), n_groups)
+    e = np.asarray(ops.gecko_decode(jnp.asarray(bases), jnp.asarray(planes)))
+    return e.reshape(-1)[:n_values]
+
+
+def _row_lengths(widths: np.ndarray) -> np.ndarray:
+    """Payload bytes per delta row: w + 1 plane bytes, 0 for all-zero rows."""
+    w = widths.astype(np.int64)
+    return np.where(w > 0, w + 1, 0)
+
+
+def _stream_bits(widths) -> int:
+    lengths = _row_lengths(np.asarray(widths))
+    g = lengths.shape[0]
+    return int(8 * (g * _HEADER_BYTES + lengths.sum()))
+
+
+def stream_bytes(widths) -> int:
+    """Exact size of the byte-aligned stream for the given row widths."""
+    return _stream_bits(widths) // 8
+
+
+def _pack_width_nibbles(widths: np.ndarray) -> np.ndarray:
+    """(G, 7) widths (0..8) -> (G, 4) bytes, two 4-bit nibbles per byte."""
+    w = np.concatenate([widths.astype(np.uint8),
+                        np.zeros((widths.shape[0], 1), np.uint8)], axis=1)
+    return (w[:, 0::2] | (w[:, 1::2] << 4)).astype(np.uint8)
+
+
+def _unpack_width_nibbles(nib: np.ndarray) -> np.ndarray:
+    w = np.zeros((nib.shape[0], 8), np.uint8)
+    w[:, 0::2] = nib & 0x0F
+    w[:, 1::2] = nib >> 4
+    return w[:, :GECKO_ROWS]
+
+
+def _plane_mask(widths: np.ndarray) -> np.ndarray:
+    """(G, 7) -> (G, 7, 9) bool: which dense plane bytes the stream keeps.
+
+    True exactly for the first (w + 1) planes of each row with w > 0. The
+    flattened mask order (group-major, then row, then plane) matches the
+    stream's payload byte order, so compaction is a single boolean gather.
+    """
+    lengths = _row_lengths(widths)
+    p = np.arange(GECKO_PLANES)
+    return p[None, None, :] < lengths[..., None]
+
+
+def stream_from_parts(bases: np.ndarray, widths: np.ndarray,
+                      planes: np.ndarray) -> np.ndarray:
+    """Compact dense kernel outputs into the byte-aligned stream."""
+    mask = _plane_mask(widths).reshape(-1)
+    payload = planes.reshape(-1)[mask]
+    return np.concatenate([
+        bases.reshape(-1).astype(np.uint8),
+        _pack_width_nibbles(widths).reshape(-1),
+        payload.astype(np.uint8)])
+
+
+def parts_from_stream(stream: np.ndarray, n_groups: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Expand a byte-aligned stream back into dense (bases, widths, planes)."""
+    g = n_groups
+    bases = stream[: 8 * g].reshape(g, 8)
+    nib = stream[8 * g: 8 * g + _WIDTH_BYTES * g].reshape(g, _WIDTH_BYTES)
+    widths = _unpack_width_nibbles(nib)
+    payload = stream[(8 + _WIDTH_BYTES) * g:]
+    mask = _plane_mask(widths).reshape(-1)
+    planes = np.zeros(g * GECKO_ROWS * GECKO_PLANES, np.uint8)
+    planes[np.flatnonzero(mask)] = payload[: int(mask.sum())]
+    return (bases.astype(np.uint8), widths,
+            planes.reshape(g, GECKO_ROWS * GECKO_PLANES))

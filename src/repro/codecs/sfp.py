@@ -1,0 +1,92 @@
+"""Fixed-width SFP container codecs (sfp8 / sfp16).
+
+Owns the container-name -> payload-geometry mapping (kernels are
+format-agnostic bit machines taking a ``PackFields``):
+
+  sfp8  byte = sign<<7 | dexp4<<3 | man3           (bf16-range payload)
+  sfp16 word = sign<<15 | dexp5<<10 | manK<<(10-K) (K=10 fp32 / 7 bf16)
+
+One shared 8-bit base exponent per 128-lane group (a Gecko column base).
+``pack(x, bits)`` uses the *fused* quantize+pack kernel — the Quantum
+Mantissa / BitChop truncation and the container encoding happen in a
+single pass over the tensor (one HBM read instead of the old
+mantissa_quantize -> sfp_compress two-kernel sequence).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+from repro.codecs import base
+from repro.kernels import ops
+from repro.kernels.ref import GROUP, PackFields
+
+SFP8 = "sfp8"
+SFP16 = "sfp16"
+
+
+def fields_for(name: str, dtype_or_spec) -> PackFields:
+    """Resolve a container name + source dtype to its payload geometry."""
+    spec = (dtype_or_spec if isinstance(dtype_or_spec, containers.FloatSpec)
+            else containers.spec_for(jnp.dtype(dtype_or_spec)))
+    if name == SFP8:
+        return PackFields(man_keep=3, dexp_bits=4, payload_bits=8)
+    if name == SFP16:
+        man_keep = 10 if spec.man_bits == 23 else 7
+        return PackFields(man_keep=man_keep, dexp_bits=5, payload_bits=16)
+    raise ValueError(f"not an SFP container: {name!r}")
+
+
+def _nd_layout(shape) -> bool:
+    """Rank-preserving (sharding-friendly) layout when lanes align."""
+    return len(shape) >= 1 and shape[-1] % GROUP == 0 and shape[-1] > 0
+
+
+class SFPCodec(base.Codec):
+    def __init__(self, name: str):
+        self.name = name
+
+    def _fields(self, dtype) -> PackFields:
+        return fields_for(self.name, dtype)
+
+    def pack(self, x: jax.Array, bits=None) -> base.PackedTensor:
+        f = self._fields(x.dtype)
+        if _nd_layout(x.shape):
+            packed = ops.sfp_compress_nd(x, f, n=bits)
+        elif bits is not None:
+            packed = ops.sfp_quantize_compress(x, bits, f)
+        else:
+            packed = ops.sfp_compress(x, f)
+        return base.PackedTensor(self.name, x.shape, x.dtype,
+                                 {"payload": packed.payload,
+                                  "bases": packed.bases})
+
+    def unpack(self, packed: base.PackedTensor) -> jax.Array:
+        f = self._fields(packed.dtype)
+        raw = ops.Packed(payload=packed.data["payload"],
+                         bases=packed.data["bases"])
+        if _nd_layout(packed.shape):
+            return ops.sfp_decompress_nd(raw, packed.dtype, f)
+        return ops.sfp_decompress(raw, packed.shape, packed.dtype, f)
+
+    def packed_bits(self, x: jax.Array, bits=None) -> float:
+        """Realized byte-aligned footprint; fixed-width, so independent of
+        the quantization signal ``bits`` (that's what makes SFP a
+        *container*: the mantissa signal changes accuracy, not bytes).
+
+        Matches pack()'s materialized arrays exactly: the flat layout
+        zero-pads the tail to a full 128-lane row, and those pad lanes
+        occupy real payload bytes.
+        """
+        f = self._fields(x.dtype)
+        n = int(math.prod(x.shape)) if x.shape else 1
+        if _nd_layout(x.shape):
+            groups = n // GROUP
+            payload_vals = n
+        else:
+            groups = -(-n // GROUP)
+            payload_vals = groups * GROUP  # tail row padded to 128 lanes
+        return float(payload_vals * f.payload_bits + groups * 8)

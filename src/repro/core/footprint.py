@@ -119,11 +119,17 @@ def gist_bits(x: jax.Array, base_bits: int = 16, *, relu_pool: bool = False) -> 
 
 
 def container_realized_bits(x: jax.Array, container: str) -> int:
-    """Byte-aligned on-TPU container sizes (DESIGN.md D3)."""
+    """Byte-aligned on-TPU container sizes (DESIGN.md D3).
+
+    Uncompressed baselines are priced here; realized containers delegate
+    to the codec registry (the one owner of container layouts).
+    """
     n = int(x.size)
-    per = {"sfp8": 8, "sfp16": 16, "bf16": 16, "fp32": 32}[container]
-    group_overhead = {"sfp8": 8 / 128, "sfp16": 8 / 128}.get(container, 0.0)
-    return int(n * (per + group_overhead))
+    baseline = {"bf16": 16, "fp16": 16, "fp32": 32}
+    if container in baseline:
+        return n * baseline[container]
+    from repro import codecs  # local import: codecs accounts via footprint
+    return int(codecs.get(container).packed_bits(x))
 
 
 def tensor_group_numels(tree) -> Dict[str, int]:

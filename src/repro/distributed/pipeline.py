@@ -76,7 +76,8 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
         return outs
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    from repro.distributed import sharding as _shd
+    return _shd.shard_map(
         local, mesh=mesh,
         in_specs=(spec_params, P()), out_specs=P(),
         check_vma=False)(stage_params, x_micro)

@@ -4,6 +4,12 @@ All model/runtime code calls through these so the same program runs on the
 CPU test/dry-run environment (reference path; identical FLOP/byte shape)
 and on real TPUs (Pallas path). ``force_backend()`` is the test hook.
 
+These wrappers are format-agnostic: SFP entry points take a
+``kernels.ref.PackFields`` payload geometry and the Gecko entry points take
+raw exponent groups. Container *names* resolve to geometries in exactly
+one place — the codec registry (``repro.codecs``) — which is also the only
+API most callers should use.
+
 The SFP packed representation is a plain (payload, bases) array pair —
 array-only so it can ride through lax.scan as the compressed stash.
 """
@@ -15,9 +21,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import gecko_pack as _gp
 from repro.kernels import mantissa_quant as _mq
 from repro.kernels import ref as _ref
 from repro.kernels import sfp_pack as _sp
+
+PackFields = _ref.PackFields  # re-export: the kernel-facing format descriptor
 
 _FORCED: Optional[str] = None  # None | 'pallas' | 'ref' | 'interpret'
 
@@ -35,9 +44,9 @@ def backend() -> str:
 
 
 class Packed(NamedTuple):
-    """SFP-compressed tensor: uint8/uint16 payload + per-128-group bases."""
+    """SFP-compressed tensor: uint8/uint16 payload + per-group bases."""
 
-    payload: jax.Array  # (R, 128) uint8 (sfp8) or uint16 (sfp16)
+    payload: jax.Array  # (R, 128) uint8 or uint16 payload words
     bases: jax.Array    # (R, 1) uint8 shared base exponents
 
 
@@ -54,61 +63,98 @@ def mantissa_quantize(x: jax.Array, n) -> jax.Array:
 
 # -- SFP containers ----------------------------------------------------------
 
-def sfp_compress(x: jax.Array, container: str = "sfp8") -> Packed:
+def sfp_compress(x: jax.Array, fields: PackFields) -> Packed:
     b = backend()
     if b in ("pallas", "interpret"):
-        payload, bases = _sp.sfp_pack(x, container=container,
+        payload, bases = _sp.sfp_pack(x, fields=fields,
                                       interpret=(b == "interpret"))
     else:
-        payload, bases = _ref.sfp_pack(x, container)
+        payload, bases = _ref.sfp_pack(x, fields)
     return Packed(payload=payload, bases=bases)
 
 
 def sfp_decompress(packed: Packed, shape: tuple, dtype,
-                   container: str = "sfp8") -> jax.Array:
+                   fields: PackFields) -> jax.Array:
     b = backend()
     if b in ("pallas", "interpret"):
         return _sp.sfp_unpack(packed.payload, packed.bases, shape=tuple(shape),
-                              dtype=jnp.dtype(dtype), container=container,
+                              dtype=jnp.dtype(dtype), fields=fields,
                               interpret=(b != "pallas"))
     return _ref.sfp_unpack(packed.payload, packed.bases, tuple(shape),
-                           jnp.dtype(dtype), container)
+                           jnp.dtype(dtype), fields)
 
 
-def sfp_compress_nd(x: jax.Array, container: str = "sfp8") -> Packed:
-    """Rank-preserving pack (sharding-friendly; last dim % 128 == 0)."""
+def sfp_compress_nd(x: jax.Array, fields: PackFields, n=None) -> Packed:
+    """Rank-preserving pack (sharding-friendly; last dim % 128 == 0).
+
+    ``n`` (optional traced scalar) fuses Q(M, n) mantissa truncation into
+    the pack — a single HBM read instead of the mantissa_quantize ->
+    sfp_compress_nd two-kernel sequence.
+    """
     b = backend()
     if b in ("pallas", "interpret"):
         # TPU path: the kernel operates on 128-lane rows; the reshape is a
         # no-op relayout on device. Interpret mode mirrors it for tests.
         rows = x.reshape(-1, _ref.GROUP)
-        payload, bases = _sp.sfp_pack(rows, container=container,
-                                      interpret=(b == "interpret"))
+        interp = (b == "interpret")
+        if n is None:
+            payload, bases = _sp.sfp_pack(rows, fields=fields,
+                                          interpret=interp)
+        else:
+            payload, bases = _sp.sfp_quantize_pack(rows, n, fields=fields,
+                                                   interpret=interp)
         return Packed(payload=payload.reshape(x.shape),
                       bases=bases.reshape(*x.shape[:-1],
                                           x.shape[-1] // _ref.GROUP))
-    payload, bases = _ref.sfp_pack_nd(x, container)
+    payload, bases = _ref.sfp_pack_nd(x, fields, n=n)
     return Packed(payload=payload, bases=bases)
 
 
-def sfp_decompress_nd(packed: Packed, dtype, container: str = "sfp8"
-                      ) -> jax.Array:
+def sfp_decompress_nd(packed: Packed, dtype, fields: PackFields) -> jax.Array:
     b = backend()
     if b in ("pallas", "interpret"):
         shape = packed.payload.shape
         rows = packed.payload.reshape(-1, _ref.GROUP)
         bases = packed.bases.reshape(-1, 1)
         out = _sp.sfp_unpack(rows, bases, shape=shape, dtype=jnp.dtype(dtype),
-                             container=container, interpret=(b != "pallas"))
+                             fields=fields, interpret=(b != "pallas"))
         return out
     return _ref.sfp_unpack_nd(packed.payload, packed.bases, jnp.dtype(dtype),
-                              container)
+                              fields)
 
 
-def sfp_roundtrip(x: jax.Array, container: str = "sfp8") -> jax.Array:
+def sfp_quantize_compress(x: jax.Array, n, fields: PackFields) -> Packed:
+    """Fused Q(M, n) + flat pack: one pass over ``x`` (single HBM read)."""
+    b = backend()
+    if b in ("pallas", "interpret"):
+        payload, bases = _sp.sfp_quantize_pack(x, n, fields=fields,
+                                               interpret=(b == "interpret"))
+        return Packed(payload=payload, bases=bases)
+    payload, bases = _ref.sfp_pack(x, fields, n=n)
+    return Packed(payload=payload, bases=bases)
+
+
+def sfp_roundtrip(x: jax.Array, fields: PackFields) -> jax.Array:
     """compress->decompress (fake-quant view of the realized container)."""
-    return sfp_decompress(sfp_compress(x, container), x.shape, x.dtype,
-                          container)
+    return sfp_decompress(sfp_compress(x, fields), x.shape, x.dtype, fields)
+
+
+# -- Gecko exponent compression ---------------------------------------------
+
+def gecko_encode(groups: jax.Array):
+    """(G, 64) uint8 exponent groups -> (bases, widths, planes)."""
+    b = backend()
+    if b in ("pallas", "interpret"):
+        return _gp.gecko_pack(groups, interpret=(b == "interpret"))
+    return _ref.gecko_plane_encode(groups)
+
+
+def gecko_decode(bases: jax.Array, planes: jax.Array) -> jax.Array:
+    """(bases (G, 8), planes (G, 63)) -> (G, 64) uint8 exponents."""
+    b = backend()
+    if b in ("pallas", "interpret"):
+        return _gp.gecko_unpack(bases, planes, interpret=(b == "interpret"))
+    return _ref.gecko_plane_decode(bases, planes)
 
 
 # -- attention ---------------------------------------------------------------

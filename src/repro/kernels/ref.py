@@ -4,10 +4,16 @@ These are the ground truth for the kernel allclose tests, the CPU execution
 path, and the lowering path used by the multi-pod dry-run (Pallas TPU
 kernels cannot lower on the CPU backend; the FLOP/byte structure of these
 references matches the kernels').
+
+Kernels here are *format-agnostic bit machines*: SFP pack/unpack take a
+``PackFields`` describing the payload word geometry, and the Gecko plane
+codec works on raw uint8 exponent groups. The mapping from container
+*names* (sfp8, sfp16, gecko8, ...) to bit geometries lives in one place —
+the codec registry (``repro.codecs``).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,26 +31,48 @@ def mantissa_truncate(x: jax.Array, n) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# SFP8 / SFP16 containers — oracles for kernels/sfp_pack.py
+# SFP fixed-width containers — oracles for kernels/sfp_pack.py
 #
 # Layouts (DESIGN.md D3). One shared 8-bit base exponent per group of 128
 # lanes (Gecko column-base in spirit; max-exponent base so deltas are >= 0):
-#   SFP8  byte  = sign<<7 | dexp4<<3 | man3        (bf16 payload)
-#   SFP16 word  = sign<<15 | dexp5<<10 | man10|man7<<3   (fp32|bf16 payload)
+#   payload word = sign<<(P-1) | dexp<<(P-1-E) | man_top<<(P-1-E-K)
+# with P = payload bits, E = delta-exponent bits, K = kept mantissa bits.
 # dexp saturates; (dexp == max, man == 0) encodes exact zero.
 # ---------------------------------------------------------------------------
 
 GROUP = 128
 
 
-def _sfp_fields(container: str, spec: containers.FloatSpec):
-    if container == "sfp8":
-        man_keep, dexp_bits = 3, 4
-    elif container == "sfp16":
-        man_keep, dexp_bits = (10, 5) if spec.man_bits == 23 else (7, 5)
-    else:
-        raise ValueError(container)
-    return man_keep, dexp_bits
+class PackFields(NamedTuple):
+    """Payload word geometry of a fixed-width SFP container.
+
+    Kernels receive this instead of a container-name string; the registry
+    in ``repro.codecs`` owns the name -> PackFields mapping.
+    """
+
+    man_keep: int      # mantissa bits kept in the payload
+    dexp_bits: int     # delta-exponent field width
+    payload_bits: int  # total payload word width: 8 or 16
+
+    @property
+    def payload_dtype(self):
+        return jnp.uint8 if self.payload_bits == 8 else jnp.uint16
+
+    @property
+    def sign_shift(self) -> int:
+        return self.payload_bits - 1
+
+    @property
+    def dexp_shift(self) -> int:
+        return self.payload_bits - 1 - self.dexp_bits
+
+    @property
+    def man_shift(self) -> int:
+        return self.payload_bits - 1 - self.dexp_bits - self.man_keep
+
+    @property
+    def dexp_max(self) -> int:
+        return (1 << self.dexp_bits) - 1
 
 
 def _to_rows(x: jax.Array) -> jax.Array:
@@ -56,40 +84,64 @@ def _to_rows(x: jax.Array) -> jax.Array:
     return flat.reshape(-1, GROUP)
 
 
-def sfp_pack(x: jax.Array, container: str = "sfp8"):
-    """Pack a float tensor into (payload (R, 128), bases (R, 1) uint8).
+def _pack_words(x: jax.Array, f: PackFields, spec: containers.FloatSpec,
+                n=None) -> Tuple[jax.Array, jax.Array]:
+    """Shared pack body over the last (128-lane) axis.
 
-    Rows are consecutive 128-lane groups of the flattened tensor (Gecko
-    columns); identical layout to kernels/sfp_pack.py.
+    ``n`` (optional, traced ok) fuses Q(M, n) mantissa truncation into the
+    same pass — the quantize+pack fusion of the hardware compressor.
     """
-    spec = containers.spec_for(x)
-    man_keep, dexp_bits = _sfp_fields(container, spec)
-    dexp_max = (1 << dexp_bits) - 1
-
-    xg = _to_rows(x)
-    sign, e, man = containers.split_fields(xg)
+    sign, e, man = containers.split_fields(x)
     sign = sign.astype(jnp.int32)
     e = e.astype(jnp.int32)
     man = man.astype(jnp.int32)
+    if n is not None:
+        keep = containers._mantissa_keep_mask(n, spec).astype(jnp.int32)
+        man = man & keep
 
     base = jnp.max(e, axis=-1, keepdims=True)  # max-exponent base: deltas >= 0
     dexp = base - e
-    man_top = man >> (spec.man_bits - man_keep)
-
-    flush = (e == 0) | (dexp > dexp_max)  # exact zeros + magnitudes below range
-    dexp = jnp.where(flush, dexp_max, jnp.minimum(dexp, dexp_max))
+    man_top = man >> (spec.man_bits - f.man_keep)
+    flush = (e == 0) | (dexp > f.dexp_max)  # exact zeros + below-range values
+    dexp = jnp.where(flush, f.dexp_max, jnp.minimum(dexp, f.dexp_max))
     man_top = jnp.where(flush, 0, man_top)
     sign = jnp.where(e == 0, 0, sign)
 
-    if container == "sfp8":
-        payload = ((sign << 7) | (dexp << 3) | man_top).astype(jnp.uint8)
-    else:
-        payload = ((sign << 15) | (dexp << (15 - dexp_bits)) | (
-            man_top << (15 - dexp_bits - man_keep))).astype(jnp.uint16)
+    word = ((sign << f.sign_shift) | (dexp << f.dexp_shift)
+            | (man_top << f.man_shift))
+    return word.astype(f.payload_dtype), base
+
+
+def _unpack_words(p: jax.Array, base: jax.Array, f: PackFields,
+                  spec: containers.FloatSpec) -> jax.Array:
+    p = p.astype(jnp.int32)
+    sign = (p >> f.sign_shift) & 1
+    dexp = (p >> f.dexp_shift) & f.dexp_max
+    man_top = (p >> f.man_shift) & ((1 << f.man_keep) - 1)
+    e = jnp.maximum(base.astype(jnp.int32) - dexp, 0)
+    man = man_top << (spec.man_bits - f.man_keep)
+    flush = (dexp == f.dexp_max) & (man_top == 0)
+    e = jnp.where(flush, 0, e)
+    man = jnp.where(flush, 0, man)
+    sign = jnp.where(flush, 0, sign)
+    return containers.combine_fields(
+        sign.astype(spec.int_dtype), e.astype(spec.int_dtype),
+        man.astype(spec.int_dtype), spec)
+
+
+def sfp_pack(x: jax.Array, fields: PackFields, n=None):
+    """Pack a float tensor into (payload (R, 128), bases (R, 1) uint8).
+
+    Rows are consecutive 128-lane groups of the flattened tensor (Gecko
+    columns); identical layout to kernels/sfp_pack.py. ``n`` optionally
+    fuses mantissa truncation Q(M, n) into the same pass.
+    """
+    spec = containers.spec_for(x)
+    payload, base = _pack_words(_to_rows(x), fields, spec, n)
     return payload, base.astype(jnp.uint8)
 
 
-def sfp_pack_nd(x: jax.Array, container: str = "sfp8"):
+def sfp_pack_nd(x: jax.Array, fields: PackFields, n=None):
     """Rank-preserving pack: groups along the last dim (must be %128 == 0).
 
     Keeps the leading dims (batch, seq, ...) intact so GSPMD shardings
@@ -99,88 +151,106 @@ def sfp_pack_nd(x: jax.Array, container: str = "sfp8"):
     D = x.shape[-1]
     assert D % GROUP == 0, (x.shape,)
     spec = containers.spec_for(x)
-    man_keep, dexp_bits = _sfp_fields(container, spec)
-    dexp_max = (1 << dexp_bits) - 1
-
     xg = x.reshape(*x.shape[:-1], D // GROUP, GROUP)
-    sign, e, man = containers.split_fields(xg)
-    sign = sign.astype(jnp.int32)
-    e = e.astype(jnp.int32)
-    man = man.astype(jnp.int32)
-    base = jnp.max(e, axis=-1, keepdims=True)
-    dexp = base - e
-    man_top = man >> (spec.man_bits - man_keep)
-    flush = (e == 0) | (dexp > dexp_max)
-    dexp = jnp.where(flush, dexp_max, jnp.minimum(dexp, dexp_max))
-    man_top = jnp.where(flush, 0, man_top)
-    sign = jnp.where(e == 0, 0, sign)
-    if container == "sfp8":
-        payload = ((sign << 7) | (dexp << 3) | man_top).astype(jnp.uint8)
-    else:
-        payload = ((sign << 15) | (dexp << (15 - dexp_bits)) | (
-            man_top << (15 - dexp_bits - man_keep))).astype(jnp.uint16)
+    payload, base = _pack_words(xg, fields, spec, n)
     return payload.reshape(x.shape), base[..., 0].astype(jnp.uint8)
 
 
 def sfp_unpack_nd(payload: jax.Array, bases: jax.Array, dtype,
-                  container: str = "sfp8") -> jax.Array:
+                  fields: PackFields) -> jax.Array:
     spec = containers.spec_for(jnp.dtype(dtype))
-    man_keep, dexp_bits = _sfp_fields(container, spec)
-    dexp_max = (1 << dexp_bits) - 1
-
     D = payload.shape[-1]
-    p = payload.reshape(*payload.shape[:-1], D // GROUP, GROUP).astype(jnp.int32)
-    if container == "sfp8":
-        sign = (p >> 7) & 1
-        dexp = (p >> 3) & dexp_max
-        man_top = p & ((1 << man_keep) - 1)
-    else:
-        sign = (p >> 15) & 1
-        dexp = (p >> (15 - dexp_bits)) & dexp_max
-        man_top = (p >> (15 - dexp_bits - man_keep)) & ((1 << man_keep) - 1)
-    base = bases.astype(jnp.int32)[..., None]
-    e = jnp.maximum(base - dexp, 0)
-    man = man_top << (spec.man_bits - man_keep)
-    flush = (dexp == dexp_max) & (man_top == 0)
-    e = jnp.where(flush, 0, e)
-    man = jnp.where(flush, 0, man)
-    sign = jnp.where(flush, 0, sign)
-    out = containers.combine_fields(
-        sign.astype(spec.int_dtype), e.astype(spec.int_dtype),
-        man.astype(spec.int_dtype), spec)
+    p = payload.reshape(*payload.shape[:-1], D // GROUP, GROUP)
+    out = _unpack_words(p, bases.astype(jnp.int32)[..., None], fields, spec)
     return out.reshape(payload.shape)
 
 
 def sfp_unpack(payload: jax.Array, bases: jax.Array, shape: tuple,
-               dtype, container: str = "sfp8") -> jax.Array:
+               dtype, fields: PackFields) -> jax.Array:
     spec = containers.spec_for(jnp.dtype(dtype))
-    man_keep, dexp_bits = _sfp_fields(container, spec)
-    dexp_max = (1 << dexp_bits) - 1
-
-    p = payload.astype(jnp.int32)
-    if container == "sfp8":
-        sign = (p >> 7) & 1
-        dexp = (p >> 3) & dexp_max
-        man_top = p & ((1 << man_keep) - 1)
-    else:
-        sign = (p >> 15) & 1
-        dexp = (p >> (15 - dexp_bits)) & dexp_max
-        man_top = (p >> (15 - dexp_bits - man_keep)) & ((1 << man_keep) - 1)
-
-    base = bases.astype(jnp.int32)
-    e = jnp.maximum(base - dexp, 0)
-    man = man_top << (spec.man_bits - man_keep)
-    flush = (dexp == dexp_max) & (man_top == 0)
-    e = jnp.where(flush, 0, e)
-    man = jnp.where(flush, 0, man)
-    sign = jnp.where(flush, 0, sign)
-    out = containers.combine_fields(
-        sign.astype(spec.int_dtype), e.astype(spec.int_dtype),
-        man.astype(spec.int_dtype), spec)
+    out = _unpack_words(payload, bases, fields, spec)
     n = 1
     for s in shape:
         n *= s
     return out.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Gecko delta-mode exponent compression — oracle for kernels/gecko_pack.py
+#
+# Byte-aligned bit-plane realization of core/gecko.py's 8x8 delta scheme:
+# each 64-exponent group is an 8x8 matrix; row 0 holds the 8 column bases;
+# rows 1..7 store sign+magnitude deltas against the bases as *bit planes* —
+# one byte per plane holds that bit for all 8 columns, so a row whose max
+# |delta| needs w bits occupies exactly (w + 1) bytes (sign plane + w
+# magnitude planes). The dense (G, 63)-byte form below is the jit-friendly
+# device representation; repro.codecs.gecko compacts it into the actual
+# variable-length byte stream (and proves bit-exactness vs core/gecko.py).
+# ---------------------------------------------------------------------------
+
+GECKO_GROUP = 64   # exponents per group (8 rows x 8 cols)
+GECKO_ROWS = 7     # delta rows (row 0 is the bases)
+GECKO_PLANES = 9   # sign plane + 8 magnitude bit planes
+GECKO_PLANE_BYTES = GECKO_ROWS * GECKO_PLANES  # 63 dense bytes per group
+
+
+def gecko_encode_block(g: jax.Array):
+    """Shared encode body: (B, 64) int32 groups -> int32 (bases (B, 8),
+    widths (B, 7), planes (B, 63)). Called by both the jnp oracle below
+    and the Pallas kernel in kernels/gecko_pack.py, so the plane layout
+    has exactly one definition."""
+    g = g.reshape(-1, 8, 8)
+    bases = g[:, 0, :]
+    d = g[:, 1:, :] - bases[:, None, :]          # (B, 7, 8)
+    sign = (d < 0).astype(jnp.int32)
+    mag = jnp.abs(d)
+
+    width = jnp.zeros(mag.shape[:2], jnp.int32)  # (B, 7)
+    row_max = jnp.max(mag, axis=2)
+    for b in range(8, -1, -1):                   # 255 needs 8 bits
+        width = jnp.where((row_max >> b) > 0, jnp.maximum(width, b + 1),
+                          width)
+
+    col = jnp.arange(8, dtype=jnp.int32)
+    plane_list = [jnp.sum(sign << col, axis=2)]  # sign plane
+    for b in range(8):
+        plane_list.append(jnp.sum(((mag >> b) & 1) << col, axis=2))
+    planes = jnp.stack(plane_list, axis=2)       # (B, 7, 9)
+    return bases, width, planes.reshape(-1, GECKO_PLANE_BYTES)
+
+
+def gecko_decode_block(bases: jax.Array, planes: jax.Array) -> jax.Array:
+    """Shared decode body (int32 in/out): invert gecko_encode_block."""
+    pl = planes.reshape(-1, GECKO_ROWS, GECKO_PLANES)
+    col = jnp.arange(8, dtype=jnp.int32)
+    sign = (pl[:, :, 0:1] >> col[None, None, :]) & 1        # (B, 7, 8)
+    mag = jnp.zeros_like(sign)
+    for b in range(8):
+        mag = mag | (((pl[:, :, b + 1: b + 2] >> col[None, None, :]) & 1)
+                     << b)
+    d = jnp.where(sign == 1, -mag, mag)
+    b0 = bases[:, None, :]
+    full = jnp.concatenate([b0, b0 + d], axis=1)            # (B, 8, 8)
+    return full.reshape(-1, GECKO_GROUP)
+
+
+def gecko_plane_encode(groups: jax.Array):
+    """Encode (G, 64) uint8 exponent groups into dense plane form.
+
+    Returns (bases (G, 8) uint8, widths (G, 7) uint8, planes (G, 63) uint8).
+    ``widths[g, r]`` is the magnitude bitwidth of delta row r+1 — identical
+    to core/gecko.py's ``row_widths``; planes above a row's width are zero.
+    """
+    bases, width, planes = gecko_encode_block(groups.astype(jnp.int32))
+    return (bases.astype(jnp.uint8), width.astype(jnp.uint8),
+            planes.astype(jnp.uint8))
+
+
+def gecko_plane_decode(bases: jax.Array, planes: jax.Array) -> jax.Array:
+    """Invert gecko_plane_encode: (G, 8), (G, 63) -> (G, 64) uint8."""
+    out = gecko_decode_block(bases.astype(jnp.int32),
+                             planes.astype(jnp.int32))
+    return out.astype(jnp.uint8)
 
 
 # ---------------------------------------------------------------------------

@@ -1,18 +1,26 @@
-"""Pallas TPU kernels: SFP8/SFP16 container pack/unpack.
+"""Pallas TPU kernels: fixed-width SFP container pack/unpack (+ fused
+quantize+pack).
 
 The paper's compressor/decompressor (§V) adapted to the TPU memory
 hierarchy (DESIGN.md §2): instead of a bit-serial packer at the DRAM pins,
 values are re-containered in 8/16-bit lanes on the HBM<->VMEM path with one
-shared 8-bit base exponent per 128-lane group (a Gecko column base). The
-mantissa width signal from Quantum Mantissa / BitChop decides which
-container a tensor gets; the pack kernel fuses the mantissa truncation with
-the exponent delta encoding — exactly the fusion the hardware packers do.
+shared 8-bit base exponent per 128-lane group (a Gecko column base).
+
+Kernels are format-agnostic: the payload word geometry arrives as a
+``kernels.ref.PackFields`` (mantissa bits kept, delta-exponent bits,
+payload width); the container-name -> geometry mapping lives in the codec
+registry (``repro.codecs``). The primary entry point is
+``sfp_quantize_pack``: it fuses the mantissa truncation Q(M, n) from
+Quantum Mantissa / BitChop with the exponent delta encoding in a single
+VMEM pass — one HBM read of the activation instead of two (the separate
+``mantissa_quant`` kernel followed by ``sfp_pack``), exactly the fusion the
+paper's hardware packers do.
 
 Layouts (see kernels/ref.py for the bit-level oracle):
-  SFP8  byte = sign<<7 | dexp4<<3 | man3          (bf16 payload)
-  SFP16 word = sign<<15 | dexp5<<10 | manK<<(10-K) (K=10 fp32 / 7 bf16)
+  payload word = sign<<(P-1) | dexp<<(P-1-E) | man_top<<(P-1-E-K)
 (dexp == max, man == 0) encodes exact zero; dexp saturates (values more
-than 2^-15 below the group max flush — bounded error, see tests).
+than 2^-dexp_max below the group max flush — bounded error, see tests).
+Bases are per-128-lane-group shared exponents, stored as (R, 1) uint8.
 """
 from __future__ import annotations
 
@@ -30,48 +38,54 @@ LANES = kref.GROUP  # 128
 DEFAULT_BLOCK_ROWS = 64
 
 
-def _pack_kernel(x_ref, payload_ref, base_ref, *, spec, man_keep, dexp_bits,
-                 out_int):
-    x = x_ref[...]
+def _pack_body(x, fields: kref.PackFields, spec, n=None):
+    """Shared kernel body: (block, 128) floats -> (payload, base) words.
+
+    ``n`` (optional traced scalar) fuses Q(M, n) into the same pass.
+    """
     u = jax.lax.bitcast_convert_type(x, spec.int_dtype).astype(jnp.int32)
     sign = (u >> spec.sign_shift) & 1
     e = (u >> spec.exp_shift) & spec.exp_mask
     man = u & spec.man_mask
+    if n is not None:
+        nn = jnp.clip(n, 0, spec.man_bits)
+        drop = spec.man_bits - nn
+        man = man & (spec.man_mask ^ ((1 << drop) - 1))
 
-    dexp_max = (1 << dexp_bits) - 1
     base = jnp.max(e, axis=-1, keepdims=True)
     dexp = base - e
-    man_top = man >> (spec.man_bits - man_keep)
-    flush = (e == 0) | (dexp > dexp_max)
-    dexp = jnp.where(flush, dexp_max, jnp.minimum(dexp, dexp_max))
+    man_top = man >> (spec.man_bits - fields.man_keep)
+    flush = (e == 0) | (dexp > fields.dexp_max)
+    dexp = jnp.where(flush, fields.dexp_max, jnp.minimum(dexp,
+                                                         fields.dexp_max))
     man_top = jnp.where(flush, 0, man_top)
     sign = jnp.where(e == 0, 0, sign)
 
-    if out_int == jnp.uint8:
-        word = (sign << 7) | (dexp << 3) | man_top
-    else:
-        word = (sign << 15) | (dexp << (15 - dexp_bits)) | (
-            man_top << (15 - dexp_bits - man_keep))
-    payload_ref[...] = word.astype(out_int)
-    base_ref[...] = base.astype(jnp.uint8)
+    word = ((sign << fields.sign_shift) | (dexp << fields.dexp_shift)
+            | (man_top << fields.man_shift))
+    return word.astype(fields.payload_dtype), base.astype(jnp.uint8)
 
 
-def _unpack_kernel(payload_ref, base_ref, o_ref, *, spec, man_keep,
-                   dexp_bits):
+def _pack_kernel(x_ref, payload_ref, base_ref, *, spec, fields):
+    payload_ref[...], base_ref[...] = _pack_body(x_ref[...], fields, spec)
+
+
+def _quantize_pack_kernel(n_ref, x_ref, payload_ref, base_ref, *, spec,
+                          fields):
+    payload_ref[...], base_ref[...] = _pack_body(
+        x_ref[...], fields, spec, n=n_ref[0, 0])
+
+
+def _unpack_kernel(payload_ref, base_ref, o_ref, *, spec,
+                   fields: kref.PackFields):
     p = payload_ref[...].astype(jnp.int32)
-    dexp_max = (1 << dexp_bits) - 1
-    if payload_ref.dtype == jnp.uint8:
-        sign = (p >> 7) & 1
-        dexp = (p >> 3) & dexp_max
-        man_top = p & ((1 << man_keep) - 1)
-    else:
-        sign = (p >> 15) & 1
-        dexp = (p >> (15 - dexp_bits)) & dexp_max
-        man_top = (p >> (15 - dexp_bits - man_keep)) & ((1 << man_keep) - 1)
+    sign = (p >> fields.sign_shift) & 1
+    dexp = (p >> fields.dexp_shift) & fields.dexp_max
+    man_top = (p >> fields.man_shift) & ((1 << fields.man_keep) - 1)
     base = base_ref[...].astype(jnp.int32)
     e = jnp.maximum(base - dexp, 0)
-    man = man_top << (spec.man_bits - man_keep)
-    flush = (dexp == dexp_max) & (man_top == 0)
+    man = man_top << (spec.man_bits - fields.man_keep)
+    flush = (dexp == fields.dexp_max) & (man_top == 0)
     e = jnp.where(flush, 0, e)
     man = jnp.where(flush, 0, man)
     sign = jnp.where(flush, 0, sign)
@@ -89,30 +103,31 @@ def _to_rows(x: jax.Array) -> Tuple[jax.Array, int]:
     return flat.reshape(-1, LANES), pad
 
 
-@functools.partial(jax.jit, static_argnames=("container", "block_rows",
-                                             "interpret"))
-def sfp_pack(x: jax.Array, *, container: str = "sfp8",
-             block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
-    """Pack ``x`` into (payload rows, per-row base exponents).
-
-    Returns (payload (R, 128) uint8|uint16, bases (R, 1) int32). Rows are
-    128-lane groups of the flattened tensor (Gecko columns).
-    """
-    spec = containers.spec_for(x)
-    man_keep, dexp_bits = kref._sfp_fields(container, spec)
-    out_int = jnp.uint8 if container == "sfp8" else jnp.uint16
-
-    rows2d, _pad = _to_rows(x)
+def _row_grid(rows2d: jax.Array, block_rows: int):
     rows = rows2d.shape[0]
     block_rows = min(block_rows, rows)
     rpad = (-rows) % block_rows
     if rpad:
         rows2d = jnp.pad(rows2d, ((0, rpad), (0, 0)))
+    return rows2d, rows, rpad, block_rows
+
+
+@functools.partial(jax.jit, static_argnames=("fields", "block_rows",
+                                             "interpret"))
+def sfp_pack(x: jax.Array, *, fields: kref.PackFields,
+             block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """Pack ``x`` into (payload rows, per-row base exponents).
+
+    Returns (payload (R, 128) uint8|uint16, bases (R, 1) uint8). Rows are
+    128-lane groups of the flattened tensor (Gecko columns).
+    """
+    spec = containers.spec_for(x)
+    rows2d, _pad = _to_rows(x)
+    rows2d, rows, rpad, block_rows = _row_grid(rows2d, block_rows)
     grid = (rows2d.shape[0] // block_rows,)
 
     payload, bases = pl.pallas_call(
-        functools.partial(_pack_kernel, spec=spec, man_keep=man_keep,
-                          dexp_bits=dexp_bits, out_int=out_int),
+        functools.partial(_pack_kernel, spec=spec, fields=fields),
         grid=grid,
         in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
         out_specs=[
@@ -120,7 +135,7 @@ def sfp_pack(x: jax.Array, *, container: str = "sfp8",
             pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct(rows2d.shape, out_int),
+            jax.ShapeDtypeStruct(rows2d.shape, fields.payload_dtype),
             jax.ShapeDtypeStruct((rows2d.shape[0], 1), jnp.uint8),
         ],
         interpret=interpret,
@@ -130,14 +145,51 @@ def sfp_pack(x: jax.Array, *, container: str = "sfp8",
     return payload, bases
 
 
-@functools.partial(jax.jit, static_argnames=("shape", "dtype", "container",
+@functools.partial(jax.jit, static_argnames=("fields", "block_rows",
+                                             "interpret"))
+def sfp_quantize_pack(x: jax.Array, n: jax.Array, *, fields: kref.PackFields,
+                      block_rows: int = DEFAULT_BLOCK_ROWS,
+                      interpret: bool = True):
+    """Fused Q(M, n) + pack: one VMEM pass, one HBM read of ``x``.
+
+    Bit-exact against mantissa_quant.mantissa_quantize followed by
+    sfp_pack; ``n`` is a traced scalar carried in SMEM (updated per step by
+    Quantum Mantissa / BitChop).
+    """
+    spec = containers.spec_for(x)
+    rows2d, _pad = _to_rows(x)
+    rows2d, rows, rpad, block_rows = _row_grid(rows2d, block_rows)
+    grid = (rows2d.shape[0] // block_rows,)
+
+    payload, bases = pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, spec=spec, fields=fields),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # scalar n
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(rows2d.shape, fields.payload_dtype),
+            jax.ShapeDtypeStruct((rows2d.shape[0], 1), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(n, jnp.int32).reshape(1, 1), rows2d)
+    if rpad:
+        payload, bases = payload[:rows], bases[:rows]
+    return payload, bases
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "fields",
                                              "block_rows", "interpret"))
 def sfp_unpack(payload: jax.Array, bases: jax.Array, *, shape: tuple,
-               dtype, container: str = "sfp8",
+               dtype, fields: kref.PackFields,
                block_rows: int = DEFAULT_BLOCK_ROWS,
                interpret: bool = True) -> jax.Array:
     spec = containers.spec_for(jnp.dtype(dtype))
-    man_keep, dexp_bits = kref._sfp_fields(container, spec)
 
     rows = payload.shape[0]
     block_rows = min(block_rows, rows)
@@ -148,8 +200,7 @@ def sfp_unpack(payload: jax.Array, bases: jax.Array, *, shape: tuple,
     grid = (payload.shape[0] // block_rows,)
 
     out = pl.pallas_call(
-        functools.partial(_unpack_kernel, spec=spec, man_keep=man_keep,
-                          dexp_bits=dexp_bits),
+        functools.partial(_unpack_kernel, spec=spec, fields=fields),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),

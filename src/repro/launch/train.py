@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import codecs, configs
 from repro.configs.base import reduced
 from repro.core import bitchop, quantum_mantissa as qmod, sfp
 from repro.data import pipeline, synthetic
@@ -72,7 +72,7 @@ def main():
     ap.add_argument("--policy", default="qm",
                     choices=["none", "qm", "bitchop", "static"])
     ap.add_argument("--container", default="bit_exact",
-                    choices=["bit_exact", "sfp8", "sfp16"])
+                    choices=codecs.names())  # every registered codec
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

@@ -21,10 +21,10 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import codecs
 from repro.configs.base import ArchConfig, GLOBAL, LOCAL, RGLRU, SSD
 from repro.core import containers, quantum_mantissa as qm, sfp, stash
 from repro.distributed import sharding as shd
-from repro.kernels import ops
 from repro.models import attention, common, mamba2, moe, rglru
 
 MOE_LB_COEF = 0.01
@@ -205,6 +205,7 @@ class DecoderModel:
     # ------------------------------------------------------------------
 
     def _make_codec(self, dtype):
+        del dtype  # carried by the packed representation itself
         pol = self.policy
         man = self.man_bits
 
@@ -221,19 +222,16 @@ class DecoderModel:
         if not pol.enabled:
             return stash.identity_compress, stash.identity_decompress, None
 
-        container = pol.container
+        codec = codecs.get(pol.container)
 
         def compress(h, x):
-            q = ops.mantissa_quantize(h, act_bits(x))
-            if container in ("sfp8", "sfp16"):
-                return ops.sfp_compress_nd(q, container)
-            return q  # 'bit_exact': fake-quant stash (accounting mode)
+            # Fused quantize+pack: the bitlength signal rides into the pack
+            # kernel, one HBM read of the activation.
+            return codec.pack(h, bits=act_bits(x))
 
         def decompress(c, x):
             del x
-            if container in ("sfp8", "sfp16"):
-                return ops.sfp_decompress_nd(c, dtype, container)
-            return c
+            return codec.unpack(c)
 
         stash_grad = None
         if pol.mode == sfp.MODE_QM:

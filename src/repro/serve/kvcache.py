@@ -1,30 +1,34 @@
-"""SFP-compressed KV cache (beyond-paper application of the containers).
+"""Codec-compressed KV cache (beyond-paper application of the containers).
 
 Decode is memory-bandwidth-bound by the KV cache read — exactly the regime
-the paper targets at the DRAM interface. The cache stores SFP8 payloads
-(1 sign + 4 delta-exp + 3 mantissa per value, one shared base exponent per
-128 lanes — kernels/sfp_pack layout) and decompresses on read; each decode
+the paper targets at the DRAM interface. The cache stores the packed
+representation of whichever registry codec the caller picks (default: the
+paper's sfp8 container — 1 sign + 4 delta-exp + 3 mantissa per value, one
+shared base exponent per 128 lanes) and decompresses on read; each decode
 step packs only the new token's K/V row. Cache bytes drop ~2x vs bf16 at
 <= 3 mantissa bits of precision, matching where Quantum Mantissa lands
 (paper Fig 4).
+
+All container specifics live behind repro.codecs: this module only splices
+packed parts along the sequence axis, so any codec whose parts carry
+(batch, seq, ...) leading dims — every fixed-width registry codec — works
+unchanged.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import codecs
 from repro.configs.base import ArchConfig, LOCAL
-from repro.kernels import ops
 from repro.models import attention
 
 
 class PackedKV(NamedTuple):
-    k_payload: jax.Array  # (B, L, D) uint8|uint16, D = KH * head_dim
-    k_bases: jax.Array    # (B, L, D // 128) uint8
-    v_payload: jax.Array
-    v_bases: jax.Array
+    k: codecs.PackedTensor  # parts shaped (B, L, ...), D = KH * head_dim
+    v: codecs.PackedTensor
 
 
 def _dims(cfg: ArchConfig, kind: str, max_len: int):
@@ -34,48 +38,55 @@ def _dims(cfg: ArchConfig, kind: str, max_len: int):
     return D, L
 
 
-def packed_cache_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
-                      container: str = "sfp8") -> PackedKV:
-    D, L = _dims(cfg, kind, max_len)
-    pdt = jnp.uint8 if container == "sfp8" else jnp.uint16
-    return PackedKV(
-        k_payload=jnp.zeros((batch, L, D), pdt),
-        k_bases=jnp.zeros((batch, L, D // 128), jnp.uint8),
-        v_payload=jnp.zeros((batch, L, D), pdt),
-        v_bases=jnp.zeros((batch, L, D // 128), jnp.uint8),
-    )
+def _codec(container: Optional[str]) -> codecs.Codec:
+    return codecs.get(container or codecs.DEFAULT_CONTAINER)
 
 
 def packed_cache_spec(cfg: ArchConfig, kind: str, batch: int, max_len: int,
-                      container: str = "sfp8") -> PackedKV:
+                      container: Optional[str] = None) -> PackedKV:
     D, L = _dims(cfg, kind, max_len)
-    pdt = jnp.uint8 if container == "sfp8" else jnp.uint16
-    return PackedKV(
-        k_payload=jax.ShapeDtypeStruct((batch, L, D), pdt),
-        k_bases=jax.ShapeDtypeStruct((batch, L, D // 128), jnp.uint8),
-        v_payload=jax.ShapeDtypeStruct((batch, L, D), pdt),
-        v_bases=jax.ShapeDtypeStruct((batch, L, D // 128), jnp.uint8),
-    )
+    spec = _codec(container).packed_spec((batch, L, D), cfg.compute_dtype)
+    return PackedKV(k=spec, v=spec)
 
 
-def packed_cache_axes() -> PackedKV:
-    return PackedKV(
-        k_payload=("batch", "cache_seq", None),
-        k_bases=("batch", "cache_seq", None),
-        v_payload=("batch", "cache_seq", None),
-        v_bases=("batch", "cache_seq", None),
-    )
+def packed_cache_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      container: Optional[str] = None) -> PackedKV:
+    spec = packed_cache_spec(cfg, kind, batch, max_len, container)
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    return zeros
+
+
+def packed_cache_axes(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      container: Optional[str] = None) -> PackedKV:
+    """Logical sharding axes: every packed part is (batch, seq, ...)."""
+    spec = packed_cache_spec(cfg, kind, batch, max_len, container)
+    return jax.tree.map(
+        lambda s: ("batch", "cache_seq") + (None,) * (len(s.shape) - 2), spec)
+
+
+def _splice(cache_pt: codecs.PackedTensor, new_pt: codecs.PackedTensor,
+            slot) -> codecs.PackedTensor:
+    """Write one packed token row into the ring buffer (every part shares
+    the sequence axis at dim 1)."""
+    data = {
+        k: jax.lax.dynamic_update_slice_in_dim(cache_pt.data[k],
+                                               new_pt.data[k], slot, axis=1)
+        for k in cache_pt.data
+    }
+    return codecs.PackedTensor(cache_pt.codec, cache_pt.shape,
+                               cache_pt.dtype, data)
 
 
 def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
                             pos: jax.Array, cfg: ArchConfig, *, kind: str,
-                            container: str = "sfp8"
+                            container: Optional[str] = None
                             ) -> Tuple[jax.Array, PackedKV]:
     """One-token decode over the compressed cache."""
+    codec = _codec(container)
     B = h_tok.shape[0]
     hd, H, KH = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
     D = KH * hd
-    L = cache.k_payload.shape[1]
+    L = cache.k.shape[1]
     dtype = h_tok.dtype
 
     q, k_new, v_new = attention._project_qkv(
@@ -83,33 +94,23 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
     slot = attention.decode_slot_index(pos, L, kind)
 
     # Pack only the new token's row and splice it in.
-    def splice(payload, bases, new):
-        p_new = ops.sfp_compress_nd(new.reshape(B, 1, D).astype(dtype),
-                                    container)
-        payload = jax.lax.dynamic_update_slice_in_dim(
-            payload, p_new.payload, slot, axis=1)
-        bases = jax.lax.dynamic_update_slice_in_dim(
-            bases, p_new.bases, slot, axis=1)
-        return payload, bases
-
-    k_payload, k_bases = splice(cache.k_payload, cache.k_bases, k_new)
-    v_payload, v_bases = splice(cache.v_payload, cache.v_bases, v_new)
+    k_pt = _splice(cache.k, codec.pack(k_new.reshape(B, 1, D).astype(dtype)),
+                   slot)
+    v_pt = _splice(cache.v, codec.pack(v_new.reshape(B, 1, D).astype(dtype)),
+                   slot)
 
     # Decompress-on-read (fused into the attention contraction on TPU).
-    k_c = ops.sfp_decompress_nd(ops.Packed(k_payload, k_bases), dtype,
-                                container).reshape(B, L, KH, hd)
-    v_c = ops.sfp_decompress_nd(ops.Packed(v_payload, v_bases), dtype,
-                                container).reshape(B, L, KH, hd)
+    k_c = codec.unpack(k_pt).reshape(B, L, KH, hd)
+    v_c = codec.unpack(v_pt).reshape(B, L, KH, hd)
     o = attention.decode_attend(q, k_c, v_c, pos, cfg, kind)
     out = o.reshape(B, 1, H * hd) @ params["wo"]
-    return out, PackedKV(k_payload, k_bases, v_payload, v_bases)
+    return out, PackedKV(k=k_pt, v=v_pt)
 
 
 def pack_prefill_cache(cache_kv: attention.KVCache,
-                       container: str = "sfp8") -> PackedKV:
+                       container: Optional[str] = None) -> PackedKV:
     """Compress a prefill-produced bf16 cache in one shot."""
+    codec = _codec(container)
     B, L, KH, hd = cache_kv.k.shape
-    k = ops.sfp_compress_nd(cache_kv.k.reshape(B, L, KH * hd), container)
-    v = ops.sfp_compress_nd(cache_kv.v.reshape(B, L, KH * hd), container)
-    return PackedKV(k_payload=k.payload, k_bases=k.bases,
-                    v_payload=v.payload, v_bases=v.bases)
+    return PackedKV(k=codec.pack(cache_kv.k.reshape(B, L, KH * hd)),
+                    v=codec.pack(cache_kv.v.reshape(B, L, KH * hd)))

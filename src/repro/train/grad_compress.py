@@ -2,14 +2,20 @@
 
 The paper compresses tensors crossing the DRAM boundary; at multi-pod scale
 the analogous expensive boundary is the cross-pod (DCN) gradient
-all-reduce. We apply the same recipe: truncate gradient mantissas to a
-small bitlength before the reduction and keep the truncation error in a
-local *error-feedback* residual that is re-injected next step — the
-standard convergence-preserving trick for biased compressors.
+all-reduce. We apply the same recipe: quantize gradients through a registry
+codec's pack->unpack round trip before the reduction and keep the
+quantization error in a local *error-feedback* residual that is re-injected
+next step — the standard convergence-preserving trick for biased
+compressors.
+
+The wire format is whichever container the codec realizes (default
+``bit_exact``: mantissa truncation, the historical behaviour, with the
+Gecko exponent packing accounted in core.footprint; ``sfp8``/``sfp16``
+model the byte-aligned wire).
 
 Two entry points:
   * compress_grads / error feedback — used inside the big pjit train step
-    (XLA owns the actual collective; the entitlement is the truncated
+    (XLA owns the actual collective; the entitlement is the quantized
     payload).
   * psum_compressed — explicit shard_map collective for the tested
     multi-device harness (tests/spmd/).
@@ -21,15 +27,17 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import containers
+from repro import codecs
 
 
-def compress_grads(grads: Any, residual: Any, bits: int) -> Tuple[Any, Any]:
-    """Error-feedback mantissa truncation: returns (compressed, new_residual)."""
+def compress_grads(grads: Any, residual: Any, bits: int,
+                   codec: str = codecs.BIT_EXACT) -> Tuple[Any, Any]:
+    """Error-feedback codec round trip: returns (compressed, new_residual)."""
+    cd = codecs.get(codec)
 
     def one(g, r):
         gf = g.astype(jnp.float32) + r
-        q = containers.truncate_mantissa(gf, bits)
+        q = cd.roundtrip(gf, bits=bits)
         return q, gf - q
 
     flat_g, treedef = jax.tree.flatten(grads)
@@ -43,15 +51,15 @@ def init_residual(grads_like: Any) -> Any:
     return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
 
 
-def psum_compressed(grads: Any, residual: Any, bits: int, axis_name: str
-                    ) -> Tuple[Any, Any]:
-    """shard_map building block: truncate -> bf16 -> psum -> mean.
+def psum_compressed(grads: Any, residual: Any, bits: int, axis_name: str,
+                    codec: str = codecs.BIT_EXACT) -> Tuple[Any, Any]:
+    """shard_map building block: codec round trip -> bf16 -> psum -> mean.
 
     Payload on the wire: bf16 containers with ``bits``-bit mantissas (the
     Gecko exponent packing applies on top in the hardware realization; the
     bit-exact accounting lives in core.footprint).
     """
-    q, new_res = compress_grads(grads, residual, bits)
+    q, new_res = compress_grads(grads, residual, bits, codec)
     n = jax.lax.psum(1, axis_name)
     summed = jax.tree.map(
         lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_name)

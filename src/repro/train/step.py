@@ -40,6 +40,7 @@ class TrainConfig:
     bc: bitchop.BitChopConfig = bitchop.BitChopConfig()
     num_microbatches: int = 1
     grad_compress_bits: Optional[int] = None  # e.g. 4 -> bf16/4-bit-man wire
+    grad_codec: str = "bit_exact"  # registry codec realizing the wire format
     # Optional tree of NamedShardings for params: pins the gradient
     # accumulator to the parameter layout so XLA reduce-scatters gradients
     # into shards (ZeRO-2) instead of all-reducing them in full.
@@ -174,7 +175,7 @@ def make_train_step(model: DecoderModel, tc: TrainConfig):
         residual = state.grad_residual
         if tc.grad_compress_bits is not None:
             grads, residual = grad_compress.compress_grads(
-                grads, residual, tc.grad_compress_bits)
+                grads, residual, tc.grad_compress_bits, tc.grad_codec)
 
         new_params, new_opt, gnorm = adamw.update(
             grads, state.opt, state.params, tc.opt, lr)

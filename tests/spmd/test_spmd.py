@@ -26,5 +26,6 @@ def test_spmd_fast(name):
     _run(name)
 
 
+@pytest.mark.slow
 def test_spmd_sharded_train_step_matches_single_device():
     _run("sharded_vs_single", timeout=560)

@@ -66,3 +66,38 @@ def test_compressed_checkpoint_truncates_mantissas(tmp_path):
         np.asarray(back["w"]), np.asarray(C.truncate_mantissa(t["w"], 4)))
     err = float(jnp.max(jnp.abs(back["w"] - t["w"])))
     assert 0 < err < 0.25
+
+
+def test_legacy_compress_bits_leaves_bf16_raw(tmp_path):
+    """compress_bits-only construction keeps the historical behaviour:
+    only float32 leaves are quantized; bf16 leaves restore bit-exact."""
+    mgr = CheckpointManager(str(tmp_path), compress_bits=4)
+    t = {"wb": jax.random.normal(jax.random.PRNGKey(0), (32, 128)
+                                 ).astype(jnp.bfloat16),
+         "wf": jax.random.normal(jax.random.PRNGKey(1), (32, 32))}
+    mgr.save(1, t)
+    back = mgr.restore(1, t)
+    np.testing.assert_array_equal(np.asarray(back["wb"]).view(np.uint16),
+                                  np.asarray(t["wb"]).view(np.uint16))
+    assert float(jnp.max(jnp.abs(back["wf"] - t["wf"]))) > 0  # fp32 truncated
+
+
+def test_gecko8_checkpoint_lossless_bf16_and_never_silently_lossy(tmp_path):
+    """Without explicit compress_bits, a codec may only compress leaves it
+    round-trips bit-exactly: gecko8 compresses bf16 (lossless) but must
+    leave fp32 untouched rather than silently dropping mantissa bits."""
+    mgr = CheckpointManager(str(tmp_path), compress_codec="gecko8")
+    t = {"wb": jax.random.normal(jax.random.PRNGKey(0), (64, 128)
+                                 ).astype(jnp.bfloat16),
+         "wf": jax.random.normal(jax.random.PRNGKey(1), (32, 32))}
+    mgr.save(1, t)
+    back = mgr.restore(1, t)
+    np.testing.assert_array_equal(np.asarray(back["wb"]).view(np.uint16),
+                                  np.asarray(t["wb"]).view(np.uint16))
+    np.testing.assert_array_equal(np.asarray(back["wf"]), np.asarray(t["wf"]))
+    import json
+    step = tmp_path / "step_00000001"
+    manifest = json.loads((step / "manifest.json").read_text())
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    assert by_name["['wb']"]["codec"] == "gecko8"
+    assert "codec" not in by_name["['wf']"]

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import footprint, sfp
 from repro.models import cnn
@@ -27,6 +28,7 @@ def test_resnet18_full_config_builds():
     assert 10e6 < n < 13e6  # ~11.7M params
 
 
+@pytest.mark.slow
 def test_mobilenetv3_small_builds_and_runs():
     cfg = cnn.MOBILENETV3_SMALL
     import dataclasses
@@ -39,6 +41,7 @@ def test_mobilenetv3_small_builds_and_runs():
     assert np.isfinite(np.asarray(logits)).all()
 
 
+@pytest.mark.slow
 def test_cnn_trains_on_synthetic_blobs():
     m = cnn.CNN(cnn.RESNET8)
     params = m.init(jax.random.PRNGKey(0))

@@ -17,6 +17,8 @@ from repro.train import step as step_mod
 
 ARCHS = [c.name for c in configs.ASSIGNED]
 
+pytestmark = pytest.mark.slow  # ~3 min of reduced-config train steps
+
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward_and_train_step(arch):

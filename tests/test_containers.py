@@ -73,6 +73,44 @@ def test_round_mantissa_preserves_inf_nan():
     assert np.isnan(np.asarray(y)[2])
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_round_mantissa_inf_nan_carry_guard(dtype):
+    """The half-ULP add must never run on all-ones-exponent values: without
+    the guard, +inf + half carries into a NaN bit pattern and a max-payload
+    NaN rolls over past the exponent. Infinities stay *bit-exact* at every
+    n; quiet NaNs stay NaN whenever their quiet bit survives (n >= 1); at
+    n = man_bits the whole payload is preserved bit-exactly."""
+    spec = C.spec_for(jnp.dtype(dtype))
+    inf_bits = [spec.exp_mask << spec.exp_shift,
+                (1 << spec.sign_shift) | (spec.exp_mask << spec.exp_shift)]
+    u_inf = jnp.asarray(inf_bits, dtype=spec.int_dtype)
+    x_inf = C.bitcast_to_float(u_inf, spec)
+    for n in (0, 1, 2, spec.man_bits):
+        y = C.round_mantissa(x_inf, n)
+        np.testing.assert_array_equal(np.asarray(C.bitcast_to_int(y)),
+                                      np.asarray(u_inf))
+
+    # Quiet NaNs with assorted payloads (quiet bit = mantissa MSB).
+    q = 1 << (spec.man_bits - 1)
+    nan_bits = [(spec.exp_mask << spec.exp_shift) | q | p
+                for p in (0, 1, 5, spec.man_mask >> 1)]
+    u_nan = jnp.asarray(nan_bits, dtype=spec.int_dtype)
+    x_nan = C.bitcast_to_float(u_nan, spec)
+    for n in (1, 2, spec.man_bits):
+        assert np.isnan(np.asarray(C.round_mantissa(x_nan, n),
+                                   np.float32)).all(), n
+    y = C.round_mantissa(x_nan, spec.man_bits)
+    np.testing.assert_array_equal(np.asarray(C.bitcast_to_int(y)),
+                                  np.asarray(u_nan))
+
+
+def test_round_mantissa_carry_rounds_up_binade():
+    """Mantissa carry into the exponent is the correct IEEE round-up."""
+    x = jnp.asarray([1.9375, -1.9375], jnp.float32)  # 1.1111_2
+    y = C.round_mantissa(x, 2)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray([2.0, -2.0]))
+
+
 def test_stochastic_bitlength_expectation():
     n = jnp.asarray(3.3, jnp.float32)
     keys = jax.random.split(jax.random.PRNGKey(0), 2000)
@@ -80,6 +118,28 @@ def test_stochastic_bitlength_expectation():
     mean = float(jnp.mean(draws.astype(jnp.float32)))
     assert abs(mean - 3.3) < 0.08
     assert set(np.unique(np.asarray(draws))) <= {3, 4}
+
+
+def test_stochastic_bitlength_boundaries():
+    """n = 0, n = max_bits, and out-of-range inputs never leave [0, max]."""
+    key = jax.random.PRNGKey(1)
+    for nf, expect in [(0.0, 0), (7.0, 7), (-3.2, 0), (11.5, 7)]:
+        draws = jax.vmap(lambda k: C.stochastic_bitlength(
+            jnp.asarray(nf, jnp.float32), k, 7))(jax.random.split(key, 64))
+        assert set(np.unique(np.asarray(draws))) == {expect}, nf
+
+
+def test_stochastic_bitlength_fractional_endpoints():
+    """frac ~ 0 and frac ~ 1 collapse to (near-)deterministic draws."""
+    keys = jax.random.split(jax.random.PRNGKey(2), 512)
+    lo = jax.vmap(lambda k: C.stochastic_bitlength(
+        jnp.asarray(3.0 + 1e-7, jnp.float32), k, 7))(keys)
+    hi = jax.vmap(lambda k: C.stochastic_bitlength(
+        jnp.asarray(4.0 - 1e-7, jnp.float32), k, 7))(keys)
+    assert float(jnp.mean(lo.astype(jnp.float32))) < 3.05
+    assert float(jnp.mean(hi.astype(jnp.float32))) > 3.95
+    assert set(np.unique(np.asarray(lo))) <= {3, 4}
+    assert set(np.unique(np.asarray(hi))) <= {3, 4}
 
 
 def test_exponent_field_matches_numpy():

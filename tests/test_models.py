@@ -85,6 +85,7 @@ def test_ssd_chunked_matches_naive_recurrence():
                                atol=1e-3, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_ssd_prefill_state_matches_decode_continuation():
     cfg = _cfg("mamba2-370m")
     p = common.ParamFactory("params", jax.random.PRNGKey(0), jnp.float32)
@@ -100,6 +101,7 @@ def test_ssd_prefill_state_matches_decode_continuation():
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_rglru_scan_matches_stepwise_decode():
     cfg = _cfg("recurrentgemma-9b")
     p = common.ParamFactory("params", jax.random.PRNGKey(0), jnp.float32)

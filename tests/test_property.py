@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import containers as C, footprint, gecko
 from repro.kernels import ref
@@ -59,9 +62,10 @@ def test_gecko_bits_at_least_metadata(vals):
 def test_sfp8_roundtrip_closure(vals):
     """decode(encode(x)) is a fixed point: encoding it again is identity."""
     x = jnp.asarray(vals, jnp.float32).astype(jnp.bfloat16).reshape(1, 128)
-    once = ref.sfp_unpack_nd(*ref.sfp_pack_nd(x, "sfp8"), jnp.bfloat16, "sfp8")
-    twice = ref.sfp_unpack_nd(*ref.sfp_pack_nd(once, "sfp8"), jnp.bfloat16,
-                              "sfp8")
+    from repro import codecs
+    f = codecs.fields_for("sfp8", jnp.bfloat16)
+    once = ref.sfp_unpack_nd(*ref.sfp_pack_nd(x, f), jnp.bfloat16, f)
+    twice = ref.sfp_unpack_nd(*ref.sfp_pack_nd(once, f), jnp.bfloat16, f)
     np.testing.assert_array_equal(np.asarray(once).view(np.uint16),
                                   np.asarray(twice).view(np.uint16))
 

@@ -24,6 +24,7 @@ def _model(name):
 
 
 @pytest.mark.parametrize("name", FAMS)
+@pytest.mark.slow
 def test_prefill_decode_matches_forward(name):
     cfg, model = _model(name)
     params = model.init(jax.random.PRNGKey(0))
@@ -53,6 +54,7 @@ def test_prefill_decode_matches_forward(name):
             np.asarray(full_logits[:, S0 + t]), atol=2e-2, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_local_ring_cache_decode_matches_forward_long():
     """Decode past the window: ring buffer must stay correct."""
     cfg, model = _model("gemma3-12b")
@@ -74,6 +76,7 @@ def test_local_ring_cache_decode_matches_forward_long():
                 atol=3e-2, rtol=3e-3)
 
 
+@pytest.mark.slow
 def test_generate_greedy_deterministic():
     cfg, model = _model("mistral-large-123b")
     params = model.init(jax.random.PRNGKey(0))
@@ -112,5 +115,13 @@ def test_pack_prefill_cache_shapes():
     raw = attention.cache_init(cfg, "global", 2, 16, jnp.float32)
     pk = kvcache.pack_prefill_cache(raw)
     D = cfg.n_kv_heads * cfg.head_dim_
-    assert pk.k_payload.shape == (2, 16, D)
-    assert pk.k_bases.shape == (2, 16, D // 128)
+    assert pk.k.shape == (2, 16, D)
+    assert pk.k.data["payload"].shape == (2, 16, D)
+    assert pk.k.data["bases"].shape == (2, 16, D // 128)
+    spec = kvcache.packed_cache_spec(cfg, "global", 2, 16)
+    assert tuple(spec.k.data["payload"].shape) == (2, 16, D)
+    assert spec.k.data["payload"].dtype == pk.k.data["payload"].dtype
+    assert tuple(spec.v.data["bases"].shape) == (2, 16, D // 128)
+    axes = kvcache.packed_cache_axes(cfg, "global", 2, 16)
+    assert axes.k.data["payload"] == ("batch", "cache_seq", None)
+    assert axes.k.data["bases"] == ("batch", "cache_seq", None)

@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs
 from repro.core import stash
-from repro.kernels import ops
 
 
 def _layer(carry, x):
@@ -62,12 +62,13 @@ def test_extras_carry_gradients_flow():
 def test_compressed_stash_forward_uses_quantized_values():
     h0, xs = _setup(d=128)
 
+    codec = codecs.get("sfp8")
+
     def compress(h, x):
-        return ops.sfp_compress_nd(h.astype(jnp.bfloat16), "sfp8")
+        return codec.pack(h.astype(jnp.bfloat16))
 
     def decompress(c, x):
-        return ops.sfp_decompress_nd(c, jnp.bfloat16, "sfp8").astype(
-            jnp.float32)
+        return codec.unpack(c).astype(jnp.float32)
 
     (h, e), _ = stash.sfp_scan(_layer, compress, decompress,
                                (h0, jnp.zeros(())), xs)
@@ -81,12 +82,13 @@ def test_compressed_stash_forward_uses_quantized_values():
 def test_compressed_stash_grads_close_to_exact():
     h0, xs = _setup(d=128)
 
+    codec = codecs.get("sfp16")
+
     def compress(h, x):
-        return ops.sfp_compress_nd(h.astype(jnp.bfloat16), "sfp16")
+        return codec.pack(h.astype(jnp.bfloat16))
 
     def decompress(c, x):
-        return ops.sfp_decompress_nd(c, jnp.bfloat16, "sfp16").astype(
-            jnp.float32)
+        return codec.unpack(c).astype(jnp.float32)
 
     def f(h0, xs):
         (h, e), _ = stash.sfp_scan(_layer, compress, decompress,

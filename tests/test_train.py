@@ -43,6 +43,7 @@ def _run(step, state, corpus, n):
     return state, hist
 
 
+@pytest.mark.slow
 def test_loss_decreases_baseline():
     _, step, state, corpus = _setup(sfp.SFPPolicy(mode=sfp.MODE_NONE), 30)
     state, hist = _run(step, state, corpus, 30)
@@ -51,6 +52,7 @@ def test_loss_decreases_baseline():
     assert last < first - 0.2, (first, last)
 
 
+@pytest.mark.slow
 def test_loss_decreases_with_qm_and_bits_fall():
     _, step, state, corpus = _setup(
         sfp.SFPPolicy(mode=sfp.MODE_QM, container="bit_exact"), 40)
@@ -63,6 +65,7 @@ def test_loss_decreases_with_qm_and_bits_fall():
     assert np.isfinite(hist[-1]["qm_penalty"])
 
 
+@pytest.mark.slow
 def test_bitchop_mode_runs_and_adjusts():
     _, step, state, corpus = _setup(
         sfp.SFPPolicy(mode=sfp.MODE_BITCHOP, container="sfp8"), 40,
@@ -73,6 +76,7 @@ def test_bitchop_mode_runs_and_adjusts():
     assert np.isfinite(hist[-1]["xent"])
 
 
+@pytest.mark.slow
 def test_grad_compression_convergence_parity():
     pol = sfp.SFPPolicy(mode=sfp.MODE_NONE)
     _, step_c, state_c, corpus = _setup(pol, 30, grad_compress_bits=5)
@@ -83,6 +87,7 @@ def test_grad_compression_convergence_parity():
     assert abs(hist_c[-1]["xent"] - hist_n[-1]["xent"]) < 0.35
 
 
+@pytest.mark.slow
 def test_microbatching_equivalence():
     """Same data, 1 vs 4 microbatches: losses must match closely (grad
     accumulation is a mean; RNG per microbatch differs only for QM draws,
@@ -95,6 +100,7 @@ def test_microbatching_equivalence():
     np.testing.assert_allclose(h1[-1]["xent"], h4[-1]["xent"], atol=5e-2)
 
 
+@pytest.mark.slow
 def test_static_policy_matches_gist_style():
     _, step, state, corpus = _setup(
         sfp.SFPPolicy(mode=sfp.MODE_STATIC, static_act_bits=3,
@@ -103,6 +109,7 @@ def test_static_policy_matches_gist_style():
     assert hist[-1]["xent"] < hist[0]["xent"] + 0.1
 
 
+@pytest.mark.slow
 def test_moe_arch_trains():
     _, step, state, corpus = _setup(
         sfp.SFPPolicy(mode=sfp.MODE_QM, container="bit_exact"), 12,
