@@ -1,0 +1,141 @@
+"""Decode-step benchmark: bf16 KV cache vs packed sfp8/sfp16 caches.
+
+Decode is bandwidth-bound on the KV-cache read — the paper's memory-wall
+regime. This benchmark reports, per (batch, cache-length) point:
+
+  * measured ms/step on the ref backend for the raw cache
+    (attention.attention_decode) and each packed container
+    (kvcache.attention_decode_packed — on ref that is the
+    unpack-then-attend fallback), and
+  * modeled HBM cache-traffic bytes/step for (a) the raw bf16 cache,
+    (b) the fused decompress-attend kernel (packed payload + bases read,
+    nothing else: the bf16 cache never materializes in HBM), and (c) the
+    unpack fallback (packed read + full-precision write + read of the
+    decompressed copy) — the path the fused kernel removes.
+
+The model counts only K+V cache traffic (the decode step's dominant term);
+q/out/weight traffic is identical across variants and omitted. Emitted as
+BENCH_decode.json (repo root) standalone or via benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+POINTS_FULL = [(1, 512), (4, 1024), (8, 2048)]
+POINTS_QUICK = [(1, 256)]
+CONTAINERS = ("sfp8", "sfp16")
+ITERS = 20
+ITERS_QUICK = 5
+OUT = Path(__file__).resolve().parent.parent / "BENCH_decode.json"
+
+
+def _median_ms(fn, iters):
+    fn()  # compile + warm caches
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e3
+
+
+def _cache_traffic_model(B, L, D, itemsize, fields):
+    """Bytes of K+V cache traffic for one decode step, per path."""
+    raw = 2 * B * L * D * itemsize  # read K + V once
+    packed = 2 * B * L * (D * fields.payload_bits // 8 + D // 128)
+    return {
+        "raw": float(raw),
+        "fused": float(packed),  # packed read only; no decompressed copy
+        "unpack_fallback": float(packed + 2 * raw),  # + write/read the copy
+    }
+
+
+def run(quick: bool = False) -> dict:
+    from repro import codecs, configs
+    from repro.configs.base import reduced
+    from repro.kernels import ops
+    from repro.models import attention, common
+    from repro.serve import kvcache
+
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="bfloat16")
+    D = cfg.n_kv_heads * cfg.head_dim_
+    dtype = cfg.compute_dtype
+    itemsize = jnp.dtype(dtype).itemsize
+    pf = common.ParamFactory(common.MODE_PARAMS, jax.random.PRNGKey(0), dtype)
+    params = attention.attn_init(pf, cfg)
+    points = POINTS_QUICK if quick else POINTS_FULL
+    iters = ITERS_QUICK if quick else ITERS
+
+    ops.force_backend("ref")
+    results = []
+    try:
+        for B, L in points:
+            h_tok = 0.3 * jax.random.normal(jax.random.PRNGKey(1),
+                                            (B, 1, cfg.d_model)).astype(dtype)
+            pos = jnp.asarray(L - 1, jnp.int32)
+
+            raw_cache = attention.cache_init(cfg, "global", B, L, dtype)
+            raw_step = jax.jit(lambda c: attention.attention_decode(
+                params, h_tok, c, pos, cfg, kind="global"))
+            ms = {"bf16": _median_ms(
+                lambda: jax.block_until_ready(raw_step(raw_cache)), iters)}
+
+            traffic = {"bf16": _cache_traffic_model(
+                B, L, D, itemsize,
+                codecs.fields_for("sfp8", dtype))["raw"]}
+            ratios = {}
+            for name in CONTAINERS:
+                pk_cache = kvcache.packed_cache_init(cfg, "global", B, L,
+                                                     name)
+                pk_step = jax.jit(
+                    lambda c, n=name: kvcache.attention_decode_packed(
+                        params, h_tok, c, pos, cfg, kind="global",
+                        container=n))
+                ms[name] = _median_ms(
+                    lambda: jax.block_until_ready(pk_step(pk_cache)), iters)
+                t = _cache_traffic_model(B, L, D, itemsize,
+                                         codecs.fields_for(name, dtype))
+                traffic[f"{name}_fused"] = t["fused"]
+                traffic[f"{name}_unpack_fallback"] = t["unpack_fallback"]
+                ratios[f"{name}_fused"] = t["fused"] / traffic["bf16"]
+            results.append({
+                "B": B, "L": L, "D": D,
+                "ms_per_step": ms,
+                "hbm_cache_bytes_per_step": traffic,
+                "fused_bytes_vs_bf16": ratios,
+            })
+    finally:
+        ops.force_backend(None)
+
+    return {
+        "backend": "ref",
+        "dtype": str(jnp.dtype(dtype)),
+        "containers": list(CONTAINERS),
+        "iters": iters,
+        "fused_materializes_bf16_cache": False,
+        "points": results,
+    }
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="single small point, fewer iters (CI smoke)")
+    args = ap.parse_args(argv)
+    r = run(quick=args.quick)
+    OUT.write_text(json.dumps(r, indent=2))
+    print(json.dumps(r, indent=2))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

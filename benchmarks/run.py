@@ -14,9 +14,10 @@ OUT = Path(__file__).resolve().parent.parent / "experiments"
 
 
 def main() -> None:
-    from benchmarks import (bench_codecs, fig_bitchop, fig_gecko,
-                            fig_qm_bitlengths, fig_relative_compression,
-                            table1_footprint, table2_perf_energy)
+    from benchmarks import (bench_codecs, bench_decode, fig_bitchop,
+                            fig_gecko, fig_qm_bitlengths,
+                            fig_relative_compression, table1_footprint,
+                            table2_perf_energy)
 
     rows = []
     results = {}
@@ -51,6 +52,9 @@ def main() -> None:
     bench("bench_codecs", bench_codecs.run,
           lambda r: f"fused_speedup={r['speedup']:.2f}x;"
                     f"bit_exact={r['bit_exact_fusion']}")
+    bench("bench_decode", bench_decode.run,
+          lambda r: "sfp8_fused_bytes_vs_bf16="
+                    f"{r['points'][0]['fused_bytes_vs_bf16']['sfp8_fused']:.3f}")
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=2,
@@ -58,6 +62,9 @@ def main() -> None:
     # Headline artifact for the codec subsystem (fused quantize+pack win).
     (OUT.parent / "BENCH_codecs.json").write_text(
         json.dumps(results["bench_codecs"], indent=2, default=str))
+    # Headline artifact for the packed flash-decode path (HBM bytes/step).
+    (OUT.parent / "BENCH_decode.json").write_text(
+        json.dumps(results["bench_decode"], indent=2, default=str))
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

@@ -27,6 +27,16 @@ res = engine.generate(model, params, prompt, max_new=NEW)
 print(f"greedy generate: {res.tokens.shape} in {time.time()-t0:.1f}s")
 print("first sequence:", np.asarray(res.tokens[0]).tolist())
 
+# End-to-end generation over the sfp8-packed KV cache (on TPU/interpret,
+# decode attends the packed bytes directly via the fused flash-decode
+# kernel; on the CPU ref backend it decompresses then attends).
+pk_model = DecoderModel(cfg, kv_container="sfp8")
+t0 = time.time()
+res_pk = engine.generate(pk_model, params, prompt, max_new=NEW)
+print(f"packed-cache generate: {res_pk.tokens.shape} in "
+      f"{time.time()-t0:.1f}s")
+print("first sequence:", np.asarray(res_pk.tokens[0]).tolist())
+
 # compressed-KV decode for one layer: error stays bounded
 p0 = jax.tree.map(lambda a: a[0], params["periods"])["slot0"]["attn"]
 h = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (B, 1, cfg.d_model),

@@ -83,6 +83,19 @@ class Codec(abc.ABC):
     def packed_bits(self, x: jax.Array, bits=None) -> float:
         """Exact realized footprint of pack(x, bits), in bits."""
 
+    def pack_fields(self, dtype):
+        """Payload-word geometry (a ``kernels.ref.PackFields``) of this
+        codec's packed representation for ``dtype`` sources, or None when
+        the codec is not a fixed-width SFP container (bit_exact, gecko8).
+
+        Consumers that can fuse decompression into their own kernels —
+        the packed flash-decode attention — use this to obtain the bit
+        layout without going through container names; None means "no
+        fused path, decompress via unpack() instead".
+        """
+        del dtype
+        return None
+
     def packed_spec(self, shape: Tuple[int, ...], dtype) -> PackedTensor:
         """ShapeDtypeStruct skeleton of pack()'s output — for cache/buffer
         init and checkpoint planning without materializing anything."""

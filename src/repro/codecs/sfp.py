@@ -52,6 +52,11 @@ class SFPCodec(base.Codec):
     def _fields(self, dtype) -> PackFields:
         return fields_for(self.name, dtype)
 
+    def pack_fields(self, dtype) -> PackFields:
+        """SFP payloads have a fixed word geometry — consumers (the packed
+        flash-decode kernel) may decompress them inline."""
+        return self._fields(dtype)
+
     def pack(self, x: jax.Array, bits=None) -> base.PackedTensor:
         f = self._fields(x.dtype)
         if _nd_layout(x.shape):

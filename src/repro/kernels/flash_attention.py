@@ -2,7 +2,8 @@
 
 The compute hot-spot the compressed KV cache and activation stash feed
 into. Supports causal masking, sliding windows (gemma local layers), logit
-soft-capping (gemma2) and GQA via pre-grouped heads.
+soft-capping (gemma2) and native GQA via folded q-head groups (``q_rep``)
+— K/V are never repeated to the full q-head count.
 
 Grid is (batch*heads, q_blocks, kv_blocks) with the kv index innermost; a
 VMEM scratch accumulator carries the running (max, denominator, numerator)
@@ -21,13 +22,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG_INF = -1e30
+from repro.kernels.ref import NEG_INF
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   block_q: int, block_k: int, seq_k: int, causal: bool,
                   window: Optional[int], softcap: Optional[float],
-                  scale: float):
+                  scale: float, q_rep: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -46,7 +47,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    # GQA folding: q_rep consecutive query rows are the head group of one
+    # logical sequence position, so their causal position is row // q_rep.
+    q_pos = (qi * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)) // q_rep
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     mask = k_pos < seq_k
     if causal:
@@ -75,18 +79,24 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "softcap", "block_q", "block_k",
-                     "interpret"))
+                     "q_rep", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jax.Array:
-    """Flash attention over (B, S, H, D) with pre-repeated KV heads.
+                    block_k: int = 128, q_rep: int = 1,
+                    interpret: bool = True) -> jax.Array:
+    """Flash attention over (B, S, H, D); K/V carry the same head count.
 
-    GQA callers repeat K/V to H heads first (or reshape to grouped layout).
+    GQA callers fold the q-head group into the query rows instead of
+    repeating K/V: pass q as (B, Sq*q_rep, KH, D) with rows ordered
+    (seq, group member) and ``q_rep = H // KH`` — the kernel then derives
+    the causal position of row r as r // q_rep, and each KV block is
+    streamed once per head group (see kernels.ops.attention).
     """
     B, Sq, H, D = q.shape
     Sk = k.shape[1]
     assert k.shape == (B, Sk, H, D) and v.shape == (B, Sk, H, D)
+    assert Sq % q_rep == 0, (Sq, q_rep)
 
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
@@ -109,7 +119,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = pl.pallas_call(
         functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
                           seq_k=Sk, causal=causal, window=window,
-                          softcap=softcap, scale=scale),
+                          softcap=softcap, scale=scale, q_rep=q_rep),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),

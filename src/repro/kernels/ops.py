@@ -23,10 +23,13 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gecko_pack as _gp
 from repro.kernels import mantissa_quant as _mq
+from repro.kernels import packed_flash_decode as _pfd
 from repro.kernels import ref as _ref
 from repro.kernels import sfp_pack as _sp
 
 PackFields = _ref.PackFields  # re-export: the kernel-facing format descriptor
+decode_kv_mask = _ref.decode_kv_mask  # shared ring-slot validity semantics
+DECODE_BLOCK_L = _pfd.DEFAULT_BLOCK_L  # flash-decode KV block (alloc hint)
 
 _FORCED: Optional[str] = None  # None | 'pallas' | 'ref' | 'interpret'
 
@@ -161,16 +164,53 @@ def gecko_decode(bases: jax.Array, planes: jax.Array) -> jax.Array:
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None,
               prefix_len: int = 0, q_offset: int = 0) -> jax.Array:
-    """GQA attention; Pallas flash kernel on TPU, jnp reference off-TPU."""
+    """GQA attention; Pallas flash kernel on TPU, jnp reference off-TPU.
+
+    GQA is native in the kernel: the q-head group is folded into the query
+    rows (``q_rep``), so the KH-headed K/V are streamed once per group —
+    no repeated-KV materialization in HBM.
+    """
     b = backend()
     if b in ("pallas", "interpret") and prefix_len == 0 and q_offset == 0:
-        H, KH = q.shape[2], k.shape[2]
-        if H != KH:
-            k = jnp.repeat(k, H // KH, axis=2)
-            v = jnp.repeat(v, H // KH, axis=2)
+        B, Sq, H, D = q.shape
+        KH = k.shape[2]
+        rep = H // KH
+        if rep > 1:
+            # (B, Sq, KH, rep, D) -> rows ordered (seq, group): row r of the
+            # folded query axis is seq r // rep, group member r % rep.
+            qg = q.reshape(B, Sq, KH, rep, D).transpose(0, 1, 3, 2, 4)
+            qg = qg.reshape(B, Sq * rep, KH, D)
+            o = _fa.flash_attention(qg, k, v, causal=causal, window=window,
+                                    softcap=softcap, q_rep=rep,
+                                    interpret=(b == "interpret"))
+            o = o.reshape(B, Sq, rep, KH, D).transpose(0, 1, 3, 2, 4)
+            return o.reshape(B, Sq, H, D)
         return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                    softcap=softcap,
                                    interpret=(b == "interpret"))
     return _ref.attention(q, k, v, causal=causal, window=window,
                           softcap=softcap, prefix_len=prefix_len,
                           q_offset=q_offset)
+
+
+def packed_flash_decode(q, k_packed: Packed, v_packed: Packed, pos, *,
+                        fields: PackFields, window=None,
+                        softcap=None) -> jax.Array:
+    """One-token decode attention directly over an SFP-packed KV cache.
+
+    q: (B, 1, H, hd); the packed K/V pairs are in the rank-preserving
+    ``sfp_pack_nd`` layout — payload (B, L, KH*hd), bases (B, L, D//128).
+    On pallas/interpret this is the fused decompress-attend kernel (the
+    bf16 cache never materializes in HBM); on the ref backend it is the
+    unpack-then-attend oracle, the kernel's bit-exactness target.
+    """
+    b = backend()
+    if b in ("pallas", "interpret"):
+        return _pfd.packed_flash_decode(
+            q, k_packed.payload, k_packed.bases, v_packed.payload,
+            v_packed.bases, jnp.asarray(pos, jnp.int32), fields=fields,
+            window=window, softcap=softcap, interpret=(b == "interpret"))
+    return _ref.packed_flash_decode(
+        q, k_packed.payload, k_packed.bases, v_packed.payload,
+        v_packed.bases, pos, fields, window=window, softcap=softcap,
+        block_l=_pfd.DEFAULT_BLOCK_L)  # kernel-matching accumulation order

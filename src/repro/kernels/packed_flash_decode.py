@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: fused decompress-attend flash decode.
+
+One decode step directly over the SFP-packed KV cache — the paper's
+"decompressor at the memory interface" realized at the consumer instead of
+simulated: each grid step DMAs one packed KV block (payload words + the
+per-128-lane shared base exponents) from HBM into VMEM, expands it inline
+with the same bit logic as ``sfp_pack._unpack_kernel`` (PackFields
+geometry), and feeds the online-softmax accumulator of
+``flash_attention.py``. The bf16 cache never materializes in HBM, so the
+decode step's dominant read shrinks by the container ratio (~2x for sfp8)
+instead of paying packed-read + bf16-write + bf16-read like the
+unpack-then-attend fallback.
+
+GQA is native to the grid: the query block for one batch row carries all
+(KH, rep) head groups, so every q head of a kv-head group attends the same
+unpacked block — K/V are never repeated, in HBM or VMEM.
+
+Grid is (batch, kv_blocks) with the kv index innermost; VMEM scratch
+carries the running (max, denominator, numerator) across kv blocks. Ring
+slot validity (local sliding-window caches) is computed in-kernel from the
+scalar decode position via ``ref.decode_kv_mask``.
+
+Oracle: ``ref.packed_flash_decode`` (unpack-then-attend with the same
+block recurrence) — bit-exact in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import containers
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import NEG_INF, _vmem_scratch
+
+DEFAULT_BLOCK_L = 128
+
+
+def _decode_kernel(pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, block_l: int, L: int, KH: int,
+                   hd: int, window: Optional[int], softcap: Optional[float],
+                   scale: float, fields: kref.PackFields, spec):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0, 0]
+    G = (KH * hd) // kref.GROUP
+
+    def unpack(p_ref, b_ref):
+        # Inline decompressor: identical bit machine to sfp_pack's
+        # _unpack_kernel, run on the packed block already resident in VMEM.
+        p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
+        b = b_ref[0].astype(jnp.int32).reshape(block_l, G, 1)
+        x = kref._unpack_words(p, b, fields, spec)
+        return x.reshape(block_l, KH, hd).astype(jnp.float32)
+
+    k = unpack(kp_ref, kb_ref)                  # (block_l, KH, hd)
+    v = unpack(vp_ref, vb_ref)
+    q = q_ref[0].astype(jnp.float32)            # (KH, rep, hd)
+
+    s = jnp.einsum("hgd,lhd->hgl", q, k) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    slots = ki * block_l + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_l), 2)
+    valid = kref.decode_kv_mask(pos, L, window, slots=slots)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.einsum("hgl,lhd->hgd", p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fields", "window", "softcap",
+                                             "block_l", "interpret"))
+def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
+                        k_bases: jax.Array, v_payload: jax.Array,
+                        v_bases: jax.Array, pos: jax.Array, *,
+                        fields: kref.PackFields,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        block_l: int = DEFAULT_BLOCK_L,
+                        interpret: bool = True) -> jax.Array:
+    """One-token attention over an SFP-packed (B, L, KH*hd) KV cache.
+
+    q: (B, 1, H, hd); payload (B, L, D) uint8/uint16 and bases
+    (B, L, D // 128) uint8 in the rank-preserving ``sfp_pack_nd`` layout
+    (D = KH * hd, D % 128 == 0). ``pos`` is the scalar absolute decode
+    position; ``window`` not None means an L-slot ring buffer (local
+    attention). Returns (B, 1, H, hd) in q's dtype.
+    """
+    B, one, H, hd = q.shape
+    assert one == 1, q.shape
+    L, D = k_payload.shape[1], k_payload.shape[2]
+    KH = D // hd
+    assert KH * hd == D and D % kref.GROUP == 0, (D, hd)
+    rep = H // KH
+    assert rep * KH == H, (H, KH)
+    G = D // kref.GROUP
+    spec = containers.spec_for(jnp.dtype(q.dtype))
+
+    # Never pad the cache arrays: padding would copy the whole packed cache
+    # in HBM every step — the exact traffic this kernel exists to avoid.
+    # Shrink the block to a divisor of L instead (L is the cache allocation;
+    # size max_len to a block_l multiple for peak block efficiency).
+    block_l = min(block_l, L)
+    while L % block_l:
+        block_l -= 1
+    grid = (B, L // block_l)
+
+    qg = q.reshape(B, KH, rep, hd)  # q head h shares kv head h // rep
+    pos2 = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    scale = 1.0 / (hd ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_l=block_l, L=L, KH=KH,
+                          hd=hd, window=window, softcap=softcap, scale=scale,
+                          fields=fields, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),                # pos
+            pl.BlockSpec((1, KH, rep, hd), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_l, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_l, G), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_l, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_l, G), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KH, rep, hd), lambda b, j: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, rep, hd), q.dtype),
+        scratch_shapes=[
+            _vmem_scratch((KH, rep, 1)),
+            _vmem_scratch((KH, rep, 1)),
+            _vmem_scratch((KH, rep, hd)),
+        ],
+        interpret=interpret,
+    )(pos2, qg, k_payload, k_bases, v_payload, v_bases)
+    return out.reshape(B, 1, H, hd)

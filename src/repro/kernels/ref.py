@@ -254,6 +254,101 @@ def gecko_plane_decode(bases: jax.Array, planes: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Decode over the packed KV cache — oracle for kernels/packed_flash_decode.py
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def decode_kv_mask(pos, L: int, window: Optional[int] = None, slots=None):
+    """Validity of each KV-cache slot for a decode query at absolute
+    position ``pos``.
+
+    Global caches (``window=None``) store position p at slot p. Local
+    caches are L-slot ring buffers (L <= window): slot s holds the latest
+    position p <= pos with p === s (mod L), valid while inside the window.
+    ``slots`` defaults to arange(L); kernels pass their block-relative
+    slot indices (padded slots >= L are masked off).
+    """
+    if slots is None:
+        slots = jnp.arange(L)
+    if window is None:
+        return (slots <= pos) & (slots < L)
+    k_pos = pos - jnp.mod(pos - slots, L)
+    return ((k_pos >= 0) & (k_pos <= pos) & (k_pos > pos - window)
+            & (slots < L))
+
+
+def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
+                        k_bases: jax.Array, v_payload: jax.Array,
+                        v_bases: jax.Array, pos, fields: PackFields, *,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        block_l: Optional[int] = None) -> jax.Array:
+    """Unpack-then-attend decode oracle for kernels/packed_flash_decode.py.
+
+    Decompresses the whole packed cache (same bit logic as the kernel:
+    ``_unpack_words``) and attends the single query token with the same
+    online-softmax block recurrence over ``block_l``-slot KV blocks, so
+    the Pallas kernel validates bit-for-bit in interpret mode.
+
+    q: (B, 1, H, hd); payload (B, L, KH*hd), bases (B, L, KH*hd // 128) —
+    the rank-preserving layout of ``sfp_pack_nd``. GQA is grouped: q head
+    h reads kv head h // (H // KH).
+    """
+    B, _, H, hd = q.shape
+    L, D = k_payload.shape[1], k_payload.shape[2]
+    KH = D // hd
+    rep = H // KH
+    G = D // GROUP
+    spec = containers.spec_for(jnp.dtype(q.dtype))
+    # Kernel-identical blocking: shrink to a divisor of L (the kernel never
+    # pads the cache — that would copy the packed arrays every step).
+    bl = L if block_l is None else min(block_l, L)
+    while L % bl:
+        bl -= 1
+
+    def unp(payload, bases):
+        p = payload.reshape(B, L, G, GROUP).astype(jnp.int32)
+        b = bases.reshape(B, L, G, 1).astype(jnp.int32)
+        x = _unpack_words(p, b, fields, spec).reshape(B, L, KH, hd)
+        return x.astype(jnp.float32)
+
+    k = unp(k_payload, k_bases)
+    v = unp(v_payload, v_bases)
+    qf = q.reshape(B, KH, rep, hd).astype(jnp.float32)
+    scale = 1.0 / (hd ** 0.5)
+
+    # Per-batch block loop mirroring the kernel grid exactly (one grid row
+    # per batch element) so accumulation order — and thus every float bit —
+    # matches the Pallas kernel in interpret mode.
+    outs = []
+    for b in range(B):
+        m = jnp.full((KH, rep, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((KH, rep, 1), jnp.float32)
+        acc = jnp.zeros((KH, rep, hd), jnp.float32)
+        for ki in range(L // bl):
+            k_c = k[b, ki * bl:(ki + 1) * bl]
+            v_c = v[b, ki * bl:(ki + 1) * bl]
+            s = jnp.einsum("hgd,lhd->hgl", qf[b], k_c) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            valid = decode_kv_mask(pos, L, window,
+                                   slots=ki * bl + jnp.arange(bl))
+            s = jnp.where(valid[None, None, :], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("hgl,lhd->hgd", p, v_c)
+            m = m_new
+        outs.append(acc / jnp.maximum(l, 1e-30))
+    o = jnp.stack(outs, axis=0)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Attention oracle — for kernels/flash_attention.py
 # ---------------------------------------------------------------------------
 

@@ -151,7 +151,7 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
     if shape.kind == "prefill":
         fn = engine.make_prefill_step(model, max_len=shape.seq_len)
         params_shapes = model.param_shapes()
-        cax = engine.cache_axes(model)
+        cax = engine.cache_axes(model, shape.global_batch, shape.seq_len)
         cache_sh = shd.tree_shardings(mesh, cax, rules)
         args = [params_shapes, specs["tokens"]]
         in_sh = [param_sh, batch_sh["tokens"]]
@@ -168,7 +168,7 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
     params_shapes = model.param_shapes()
     cache_shapes = model.init_cache(shape.global_batch, shape.seq_len,
                                     spec_only=True)
-    cax = engine.cache_axes(model)
+    cax = engine.cache_axes(model, shape.global_batch, shape.seq_len)
     cache_sh = shd.tree_shardings(mesh, cax, rules)
     cache_sh = shd.refine_shardings(cache_shapes, cache_sh, mesh)
     tok_sh = shd.refine_shardings(specs["tokens"], batch_sh["tokens"], mesh)
@@ -211,6 +211,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
 
         try:
             ca = compiled.cost_analysis()
+            if isinstance(ca, list):  # older jax: one dict per device
+                ca = ca[0]
             record["cost_analysis"] = {
                 k: float(v) for k, v in ca.items()
                 if isinstance(v, (int, float)) and k in

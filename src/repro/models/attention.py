@@ -283,13 +283,9 @@ def decode_attend(q: jax.Array, k_c: jax.Array, v_c: jax.Array,
     L = k_c.shape[1]
     window = cfg.window if kind == "local" else None
 
-    slots = jnp.arange(L)
-    if window is not None:
-        k_pos = pos - jnp.mod(pos - slots, L)  # latest abs pos == slot (mod L)
-        valid = (k_pos >= 0) & (k_pos <= pos) & (k_pos > pos - window)
-    else:
-        k_pos = slots
-        valid = k_pos <= pos
+    # Ring-slot validity shared with the packed flash-decode kernel, so the
+    # fused and unpack-fallback decode paths agree on cache semantics.
+    valid = ops.decode_kv_mask(pos, L, window)
 
     rep = H // KH
     qg = q.reshape(B, 1, KH, rep, hd)

@@ -62,14 +62,27 @@ def _zero_moe_aux():
     return {"moe_lb_loss": z, "moe_z_loss": z, "moe_drop_frac": z}
 
 
+def _kvcache():
+    # Deferred: serve.kvcache sits above models in the layer order (it
+    # imports models.attention); a module-level import would be cyclic-ish.
+    from repro.serve import kvcache
+    return kvcache
+
+
 class DecoderModel:
     def __init__(self, cfg: ArchConfig,
                  policy: sfp.SFPPolicy = sfp.SFPPolicy(), mesh=None,
-                 rules=None):
+                 rules=None, kv_container: Optional[str] = None):
+        """``kv_container`` selects a registry codec for the serving KV
+        cache: prefill packs the cache, decode splices packed token rows
+        and attends through the fused decompress-attend kernel (SFP codecs
+        on pallas/interpret) or the unpack fallback. None = raw bf16/fp32
+        cache."""
         self.cfg = cfg
         self.policy = policy
         self.mesh = mesh  # enables SPMD-manual paths (sharded embed lookup)
         self.rules = rules
+        self.kv_container = kv_container
         self.man_bits = containers.spec_for(cfg.compute_dtype).man_bits
 
     # ------------------------------------------------------------------
@@ -345,6 +358,11 @@ class DecoderModel:
         cfg = self.cfg
         dt = cfg.compute_dtype
         if kind in (GLOBAL, LOCAL):
+            if self.kv_container is not None:
+                kvc = _kvcache()
+                f = (kvc.packed_cache_spec if spec_only
+                     else kvc.packed_cache_init)
+                return f(cfg, kind, batch, max_len, self.kv_container)
             f = attention.cache_spec if spec_only else attention.cache_init
             return f(cfg, kind, batch, max_len, dt)
         if kind == SSD:
@@ -375,8 +393,13 @@ class DecoderModel:
         cfg = self.cfg
         hn = common.rmsnorm(slot_params["pre_norm"], h)
         if kind in (GLOBAL, LOCAL):
-            out, new_cache = attention.attention_decode(
-                slot_params["attn"], hn, slot_cache, pos, cfg, kind=kind)
+            if self.kv_container is not None:
+                out, new_cache = _kvcache().attention_decode_packed(
+                    slot_params["attn"], hn, slot_cache, pos, cfg, kind=kind,
+                    container=self.kv_container)
+            else:
+                out, new_cache = attention.attention_decode(
+                    slot_params["attn"], hn, slot_cache, pos, cfg, kind=kind)
             h = h + out
         elif kind == SSD:
             out, new_cache = mamba2.ssd_decode(slot_params["ssd"], hn,
@@ -402,7 +425,12 @@ class DecoderModel:
                 slot_params["attn"], hn, cfg, kind=kind, positions=positions,
                 prefix_len=prefix_len, return_kv=True)
             h = h + out
-            L = min(max_len, cfg.window) if kind == LOCAL else max_len
+            if self.kv_container is not None:
+                # Packed caches round up to fused-kernel block multiples;
+                # prefill must produce the same allocation as init_cache.
+                L = _kvcache().cache_len(cfg, kind, max_len)
+            else:
+                L = min(max_len, cfg.window) if kind == LOCAL else max_len
             if kind == LOCAL:
                 k, v = attention.ring_pack_kv(k, v, L)
             else:
@@ -411,6 +439,9 @@ class DecoderModel:
                 v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
             new_cache = attention.KVCache(k=k.astype(cfg.compute_dtype),
                                           v=v.astype(cfg.compute_dtype))
+            if self.kv_container is not None:
+                new_cache = _kvcache().pack_prefill_cache(
+                    new_cache, self.kv_container)
         elif kind == SSD:
             out, new_cache = mamba2.ssd_forward(slot_params["ssd"], hn, cfg,
                                                 return_cache=True)

@@ -16,10 +16,18 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, GLOBAL, LOCAL, SSD
 from repro.models import attention, mamba2, rglru
 from repro.models.model import DecoderModel
+from repro.serve import kvcache as _kvcache
 
 
-def _slot_axes(kind: str):
+def _slot_axes(kind: str, model: DecoderModel, batch: int, max_len: int):
     if kind in (GLOBAL, LOCAL):
+        if model.kv_container is not None:
+            # Packed parts are (batch, seq, ...): same logical axes. The
+            # real (batch, max_len) matter here: PackedTensor carries its
+            # logical shape as pytree aux data, and the axes tree must
+            # pair leaf-for-leaf with the actual cache tree.
+            return _kvcache.packed_cache_axes(model.cfg, kind, batch,
+                                              max_len, model.kv_container)
         return attention.KVCache(k=("batch", "cache_seq", "kv", None),
                                  v=("batch", "cache_seq", "kv", None))
     if kind == SSD:
@@ -31,16 +39,23 @@ def _slot_axes(kind: str):
                           state=("batch", "lru"))
 
 
-def cache_axes(model: DecoderModel):
+def cache_axes(model: DecoderModel, batch: int = 1, max_len: int = 1):
+    """Logical sharding axes matching ``model.init_cache(batch, max_len)``.
+
+    ``batch``/``max_len`` are structural only for raw caches (plain axis
+    tuples), but packed caches embed their shapes as pytree metadata —
+    pass the same values as init_cache when ``model.kv_container`` is set.
+    """
     cfg = model.cfg
     is_tuple = lambda a: isinstance(a, tuple) and all(
         x is None or isinstance(x, str) for x in a)
-    per = {f"slot{i}": _slot_axes(k) for i, k in enumerate(cfg.period)}
+    per = {f"slot{i}": _slot_axes(k, model, batch, max_len)
+           for i, k in enumerate(cfg.period)}
     periods = jax.tree.map(lambda a: ("layers",) + tuple(a), per,
                            is_leaf=is_tuple)
     axes = {"periods": periods}
     if cfg.remainder:
-        axes["rem"] = {f"slot{i}": _slot_axes(k)
+        axes["rem"] = {f"slot{i}": _slot_axes(k, model, batch, max_len)
                        for i, k in enumerate(cfg.remainder)}
     return axes
 
@@ -70,22 +85,45 @@ class GenerationResult:
     steps: int
 
 
+def make_decode_loop(model: DecoderModel, n_steps: int):
+    """Jitted greedy decode loop: one ``lax.scan`` over ``n_steps`` steps.
+
+    The whole loop is a single XLA executable, so per-step host dispatch
+    overhead disappears; the cache is donated (``donate_argnums``) so XLA
+    updates it in place instead of copying the (possibly packed) ring
+    buffers every step. Returns (tokens (n_steps, B, 1), final cache).
+    """
+
+    serve_step = make_serve_step(model)
+
+    def loop(params, cache, tok, pos0):
+        def step(carry, i):
+            tok, cache = carry
+            tok, cache = serve_step(params, cache, tok, pos0 + i)
+            return (tok, cache), tok
+
+        (tok, cache), toks = jax.lax.scan(
+            step, (tok, cache), jnp.arange(n_steps, dtype=jnp.int32))
+        return toks, cache
+
+    return jax.jit(loop, donate_argnums=(1,))
+
+
 def generate(model: DecoderModel, params, prompt: jax.Array, max_new: int,
              max_len: Optional[int] = None,
              cond_embeddings: Optional[jax.Array] = None) -> GenerationResult:
-    """Greedy batched generation (host loop; used by examples + tests)."""
+    """Greedy batched generation: jitted prefill + one jitted scan loop."""
     B, S = prompt.shape
     P = model.cfg.prefix_tokens if cond_embeddings is not None else 0
     max_len = max_len or (P + S + max_new)
     prefill = jax.jit(make_prefill_step(model, max_len))
-    step = jax.jit(make_serve_step(model))
     logits, cache = prefill(params, prompt, cond_embeddings)
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
-    pos = P + S
-    for i in range(max_new - 1):
-        tok, cache = step(params, cache, tok, jnp.asarray(pos, jnp.int32))
-        out.append(tok)
-        pos += 1
+    if max_new > 1:
+        loop = make_decode_loop(model, max_new - 1)
+        toks, cache = loop(params, cache, tok,
+                           jnp.asarray(P + S, jnp.int32))
+        out.append(jnp.moveaxis(toks[..., 0], 0, 1))  # (n, B, 1) -> (B, n)
     return GenerationResult(tokens=jnp.concatenate(out, axis=1),
                             steps=max_new)

@@ -4,10 +4,17 @@ Decode is memory-bandwidth-bound by the KV cache read — exactly the regime
 the paper targets at the DRAM interface. The cache stores the packed
 representation of whichever registry codec the caller picks (default: the
 paper's sfp8 container — 1 sign + 4 delta-exp + 3 mantissa per value, one
-shared base exponent per 128 lanes) and decompresses on read; each decode
-step packs only the new token's K/V row. Cache bytes drop ~2x vs bf16 at
-<= 3 mantissa bits of precision, matching where Quantum Mantissa lands
-(paper Fig 4).
+shared base exponent per 128 lanes); each decode step packs only the new
+token's K/V row. Cache bytes drop ~2x vs bf16 at <= 3 mantissa bits of
+precision, matching where Quantum Mantissa lands (paper Fig 4).
+
+Decompression lives at the consumer: for SFP codecs on the pallas or
+interpret backends, attention reads the packed (payload, bases) pair
+directly through the fused decompress-attend kernel
+(kernels/packed_flash_decode.py) — the bf16 cache never materializes in
+HBM, so the byte win is also an HBM-traffic win per step. Codecs without a
+fixed-width payload geometry (bit_exact, gecko8) and the ref backend fall
+back to decompressing the whole cache and attending over it.
 
 All container specifics live behind repro.codecs: this module only splices
 packed parts along the sequence axis, so any codec whose parts carry
@@ -23,6 +30,8 @@ import jax.numpy as jnp
 
 from repro import codecs
 from repro.configs.base import ArchConfig, LOCAL
+from repro.distributed import sharding as shd
+from repro.kernels import ops
 from repro.models import attention
 
 
@@ -31,11 +40,27 @@ class PackedKV(NamedTuple):
     v: codecs.PackedTensor
 
 
+def cache_len(cfg: ArchConfig, kind: str, max_len: int) -> int:
+    """Packed-cache sequence allocation for a logical budget ``max_len``.
+
+    Lengths past one kernel block round up to a block multiple so the
+    fused flash-decode grid always gets full blocks (its no-pad blocking
+    shrinks to a divisor of L otherwise — pathological for awkward L).
+    Extra slots are dead weight only: masked out when unwritten (global)
+    or ring slack beyond the window (local; the modulus is the allocated
+    length everywhere, so splice and validity stay consistent).
+    """
+    L = min(max_len, cfg.window) if kind == LOCAL else max_len
+    block = ops.DECODE_BLOCK_L
+    if L > block:
+        L = -(-L // block) * block
+    return L
+
+
 def _dims(cfg: ArchConfig, kind: str, max_len: int):
     D = cfg.n_kv_heads * cfg.head_dim_
     assert D % 128 == 0, (D, "KV feature dim must align to 128 lanes")
-    L = min(max_len, cfg.window) if kind == LOCAL else max_len
-    return D, L
+    return D, cache_len(cfg, kind, max_len)
 
 
 def _codec(container: Optional[str]) -> codecs.Codec:
@@ -81,7 +106,17 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
                             pos: jax.Array, cfg: ArchConfig, *, kind: str,
                             container: Optional[str] = None
                             ) -> Tuple[jax.Array, PackedKV]:
-    """One-token decode over the compressed cache."""
+    """One-token decode over the compressed cache.
+
+    Fusion applies when the codec exposes a fixed-width payload geometry
+    (``pack_fields`` — the SFP containers) and the backend runs Pallas
+    kernels (pallas on TPU, interpret in tests): attention then consumes
+    the packed (payload, bases) pair directly and the decompressed cache
+    never exists in HBM. Otherwise — bit_exact/gecko8, or the ref
+    backend — the whole cache is decompressed first and attended with
+    ``decode_attend`` (both paths share the ring-slot semantics of
+    ``ops.decode_kv_mask``).
+    """
     codec = _codec(container)
     B = h_tok.shape[0]
     hd, H, KH = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
@@ -91,6 +126,14 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
 
     q, k_new, v_new = attention._project_qkv(
         params, h_tok, cfg, jnp.full((1,), pos, jnp.int32))
+    # As in attention_decode: the new token's K/V must arrive replicated
+    # over `model` (the packed cache shards its L dim there), or GSPMD
+    # reshards the whole ring buffer on every splice.
+    if shd.active_mesh() is not None:
+        b = shd.batch_axis_for(shd.active_mesh(), B)
+        k_new = shd.hint(k_new, b, None, None, None)
+        v_new = shd.hint(v_new, b, None, None, None)
+        q = shd.hint(q, b, None, None, None)
     slot = attention.decode_slot_index(pos, L, kind)
 
     # Pack only the new token's row and splice it in.
@@ -99,10 +142,22 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
     v_pt = _splice(cache.v, codec.pack(v_new.reshape(B, 1, D).astype(dtype)),
                    slot)
 
-    # Decompress-on-read (fused into the attention contraction on TPU).
-    k_c = codec.unpack(k_pt).reshape(B, L, KH, hd)
-    v_c = codec.unpack(v_pt).reshape(B, L, KH, hd)
-    o = attention.decode_attend(q, k_c, v_c, pos, cfg, kind)
+    fields = codec.pack_fields(dtype)
+    if fields is not None and ops.backend() in ("pallas", "interpret"):
+        # Fused decompress-attend: the packed pair is the attention input.
+        window = cfg.window if kind == LOCAL else None
+        o = ops.packed_flash_decode(
+            q.astype(dtype),
+            ops.Packed(payload=k_pt.data["payload"],
+                       bases=k_pt.data["bases"]),
+            ops.Packed(payload=v_pt.data["payload"],
+                       bases=v_pt.data["bases"]),
+            pos, fields=fields, window=window, softcap=cfg.attn_softcap)
+    else:
+        # Fallback: decompress the whole cache, then attend over it.
+        k_c = codec.unpack(k_pt).reshape(B, L, KH, hd)
+        v_c = codec.unpack(v_pt).reshape(B, L, KH, hd)
+        o = attention.decode_attend(q, k_c, v_c, pos, cfg, kind)
     out = o.reshape(B, 1, H * hd) @ params["wo"]
     return out, PackedKV(k=k_pt, v=v_pt)
 

@@ -157,6 +157,28 @@ def test_flash_attention_matches_oracle(S, window, softcap):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
+@pytest.mark.parametrize("H,KH,window,softcap", [
+    (8, 2, None, None), (4, 1, 64, None), (6, 3, 40, 20.0)])
+def test_flash_attention_gqa_folded_matches_oracle(H, KH, window, softcap):
+    """ops.attention folds the q-head group into the query rows (q_rep)
+    instead of repeating K/V to H heads; causal/window masks must follow
+    the logical position row // q_rep."""
+    B, S, D = 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, D), jnp.float32)
+    ops.force_backend("interpret")
+    try:
+        got = ops.attention(q, k, v, causal=True, window=window,
+                            softcap=softcap)
+    finally:
+        ops.force_backend(None)
+    want = ref.attention(q, k, v, causal=True, window=window,
+                         softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
 def test_flash_attention_bf16():
     B, S, H, D = 1, 128, 2, 128
     ks = jax.random.split(jax.random.PRNGKey(6), 3)

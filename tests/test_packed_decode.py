@@ -1,0 +1,195 @@
+"""Packed flash-decode: the fused decompress-attend kernel must be
+bit-exact (interpret mode) against the ref unpack-then-attend oracle, agree
+with the raw-cache decode semantics (ring buffers included), and the
+kvcache fused path must match the unpack fallback."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs, configs
+from repro.configs.base import reduced
+from repro.kernels import ops, ref
+from repro.kernels import packed_flash_decode as pfd
+from repro.models import attention
+from repro.serve import kvcache
+
+
+def _packed_kv(key, B, L, D, container, dtype):
+    ks = jax.random.split(key, 2)
+    k = jax.random.normal(ks[0], (B, L, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[1], (B, L, D), jnp.float32).astype(dtype)
+    f = codecs.fields_for(container, dtype)
+    kp, kb = ref.sfp_pack_nd(k, f)
+    vp, vb = ref.sfp_pack_nd(v, f)
+    return (kp, kb, vp, vb), (k, v), f
+
+
+@pytest.mark.parametrize("container,dtype", [("sfp8", jnp.bfloat16),
+                                             ("sfp16", jnp.bfloat16),
+                                             ("sfp16", jnp.float32)])
+@pytest.mark.parametrize("rep", [1, 4])  # GQA ratio H / KH
+@pytest.mark.parametrize("window,pos,L", [
+    (None, 47, 48),   # global, cache full
+    (None, 10, 48),   # global, partially filled (masked tail)
+    (None, 39, 40),   # L not a block_l multiple: block shrinks to a divisor
+    (16, 5, 16),      # local ring, not yet wrapped
+    (16, 37, 16),     # local ring, wrapped slots
+])
+def test_kernel_bit_exact_vs_oracle(container, dtype, rep, window, pos, L):
+    B, KH, hd = 2, 2, 64
+    H = KH * rep
+    packed, _, f = _packed_kv(jax.random.PRNGKey(0), B, L, KH * hd,
+                              container, dtype)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, 1, H, hd),
+                          jnp.float32).astype(dtype)
+    posa = jnp.asarray(pos, jnp.int32)
+    got = pfd.packed_flash_decode(q, *packed, posa, fields=f, window=window,
+                                  block_l=16, interpret=True)
+    # Jit the oracle so XLA applies the same elementwise fusion (fma) as in
+    # the compiled interpret-mode kernel — the op sequence is identical.
+    oracle = jax.jit(functools.partial(ref.packed_flash_decode, fields=f,
+                                       window=window, block_l=16))
+    want = oracle(q, *packed, posa)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("kind", ["global", "local"])
+def test_oracle_matches_decode_attend_semantics(kind):
+    """Unpack-then-attend over the packed cache must agree with the raw
+    decode path on the same (ring-buffered) slot semantics."""
+    cfg = dataclasses.replace(reduced(configs.get("gemma3-12b")),
+                              dtype="float32")
+    B, hd, KH, H = 2, cfg.head_dim_, cfg.n_kv_heads, cfg.n_heads
+    D = KH * hd
+    L = 16 if kind == "local" else 24
+    cfg = dataclasses.replace(cfg, window=L)  # ring covers the window
+    container, dtype = "sfp16", jnp.float32
+    pos = jnp.asarray(L + 5 if kind == "local" else L - 2, jnp.int32)
+    packed, (k, v), f = _packed_kv(jax.random.PRNGKey(2), B, L, D,
+                                   container, dtype)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, 1, H, hd), jnp.float32)
+    window = L if kind == "local" else None
+    got = ref.packed_flash_decode(q, *packed, pos, f, window=window)
+    k_c = ref.sfp_unpack_nd(packed[0], packed[1], dtype, f
+                            ).reshape(B, L, KH, hd)
+    v_c = ref.sfp_unpack_nd(packed[2], packed[3], dtype, f
+                            ).reshape(B, L, KH, hd)
+    want = attention.decode_attend(q, k_c, v_c, pos, cfg, kind)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("container", ["sfp8", "sfp16"])
+def test_kvcache_fused_matches_unpack_fallback(container):
+    """attention_decode_packed: the fused kernel path (interpret backend)
+    and the whole-cache unpack fallback (ref backend) must produce the
+    same outputs and identical packed caches."""
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="float32")
+    model_params = _attn_params(cfg)
+    B, L = 2, 12
+    h_tok = 0.3 * jax.random.normal(jax.random.PRNGKey(4),
+                                    (B, 1, cfg.d_model), jnp.float32)
+    outs, caches = {}, {}
+    for backend in ("ref", "interpret"):
+        ops.force_backend(backend)
+        try:
+            cache = kvcache.packed_cache_init(cfg, "global", B, L, container)
+            pos = jnp.asarray(0, jnp.int32)
+            out, cache = kvcache.attention_decode_packed(
+                model_params, h_tok, cache, pos, cfg, kind="global",
+                container=container)
+        finally:
+            ops.force_backend(None)
+        outs[backend] = np.asarray(out)
+        caches[backend] = jax.tree.map(np.asarray, cache)
+    np.testing.assert_allclose(outs["interpret"], outs["ref"],
+                               atol=1e-5, rtol=1e-5)
+    for part in ("payload", "bases"):  # same splice, same packed bits
+        np.testing.assert_array_equal(caches["interpret"].k.data[part],
+                                      caches["ref"].k.data[part])
+        np.testing.assert_array_equal(caches["interpret"].v.data[part],
+                                      caches["ref"].v.data[part])
+
+
+def test_local_ring_slot_fused_decode():
+    """Fused decode over a wrapped local ring buffer: slots written via
+    splice at decode positions past the window must stay valid/invalid
+    exactly as in the raw ring cache."""
+    cfg = dataclasses.replace(reduced(configs.get("gemma3-12b")),
+                              dtype="float32", window=8)
+    params = _attn_params(cfg)
+    B, L = 1, 8  # L == window: ring exactly covers the window
+    raw = attention.cache_init(cfg, "local", B, L, jnp.float32)
+    packed = kvcache.packed_cache_init(cfg, "local", B, L, "sfp16")
+    outs_raw, outs_pk = [], []
+    ops.force_backend("interpret")
+    try:
+        for t in range(12):  # wraps the 8-slot ring
+            h_tok = 0.3 * jax.random.normal(jax.random.PRNGKey(10 + t),
+                                            (B, 1, cfg.d_model), jnp.float32)
+            pos = jnp.asarray(t, jnp.int32)
+            o_raw, raw = attention.attention_decode(params, h_tok, raw, pos,
+                                                    cfg, kind="local")
+            o_pk, packed = kvcache.attention_decode_packed(
+                params, h_tok, packed, pos, cfg, kind="local",
+                container="sfp16")
+            outs_raw.append(np.asarray(o_raw))
+            outs_pk.append(np.asarray(o_pk))
+    finally:
+        ops.force_backend(None)
+    # sfp16 keeps 10 fp32 mantissa bits: decode outputs track closely even
+    # after the ring wraps (would diverge wildly on a slot-semantics bug).
+    for t, (a, b) in enumerate(zip(outs_raw, outs_pk)):
+        np.testing.assert_allclose(a, b, atol=5e-3, rtol=5e-3)
+
+
+def test_packed_cache_axes_pair_with_cache_tree():
+    """engine.cache_axes must build packed axes from the real (batch,
+    max_len): PackedTensor carries its logical shape as pytree aux data,
+    so an axes tree built from placeholder dims could never be paired
+    leaf-for-leaf with the cache (sharded serving, dryrun lowering)."""
+    from repro.models.model import DecoderModel
+    from repro.serve import engine
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="float32")
+    model = DecoderModel(cfg, kv_container="sfp8")
+    spec = model.init_cache(2, 16, spec_only=True)
+    axes = engine.cache_axes(model, 2, 16)
+    is_axes = lambda a: isinstance(a, tuple) and all(
+        x is None or isinstance(x, str) for x in a)
+    assert (jax.tree.structure(axes, is_leaf=is_axes)
+            == jax.tree.structure(spec))
+
+
+def test_packed_cache_alloc_rounds_to_kernel_blocks():
+    """Allocations past one flash-decode block round up to a block
+    multiple (the kernel's no-pad blocking would otherwise shrink to a
+    divisor of L — pathological for awkward lengths); small caches stay
+    exact."""
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="float32")
+    assert ops.DECODE_BLOCK_L == 128
+    spec = kvcache.packed_cache_spec(cfg, "global", 1, 200)
+    assert spec.k.shape[1] == 256
+    spec = kvcache.packed_cache_spec(cfg, "global", 1, 64)
+    assert spec.k.shape[1] == 64
+
+
+def test_codec_pack_fields():
+    assert codecs.get("sfp8").pack_fields(jnp.bfloat16).payload_bits == 8
+    assert codecs.get("sfp16").pack_fields(jnp.float32).man_keep == 10
+    assert codecs.get("bit_exact").pack_fields(jnp.bfloat16) is None
+    assert codecs.get("gecko8").pack_fields(jnp.bfloat16) is None
+
+
+def _attn_params(cfg):
+    from repro.models import common
+    p = common.ParamFactory(common.MODE_PARAMS, jax.random.PRNGKey(0),
+                            jnp.float32)
+    return attention.attn_init(p, cfg)
