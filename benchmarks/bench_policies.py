@@ -1,0 +1,103 @@
+"""Per-step overhead of each precision policy vs the `none` baseline.
+
+The paper's methods only pay off if the adaptation machinery is cheap
+relative to the step it shrinks: this benchmark times one jitted train
+step of the reduced gemma2-2b config under every registry policy (and the
+composed qm+qe) and reports ms/step plus the overhead ratio against the
+full-precision baseline. Emitted as BENCH_policies.json (repo root)
+standalone or via benchmarks/run.py; the CI quick-smoke runs --quick
+(fewer policies, fewer iters) on every push and the nightly emits the
+full sweep.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+# The full sweep covers every registered policy (so future plugins are
+# picked up automatically) plus the paper's headline composition.
+EXTRA_COMPOSITIONS = ("qm+qe",)
+POLICIES_QUICK = ("none", "qm", "qm+qe")
+ITERS = 10
+ITERS_QUICK = 3
+OUT = Path(__file__).resolve().parent.parent / "BENCH_policies.json"
+
+
+def _median_ms(fn, iters):
+    fn()  # compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e3
+
+
+def run(quick: bool = False) -> dict:
+    from repro import configs, policies
+    from repro.configs.base import reduced
+    from repro.data import synthetic
+    from repro.models.model import DecoderModel
+    from repro.optim import adamw
+    from repro.optim.schedule import Schedule
+    from repro.train import step as step_mod
+
+    names = (POLICIES_QUICK if quick
+             else ("none",) + tuple(n for n in policies.names()
+                                    if n != "none") + EXTRA_COMPOSITIONS)
+    iters = ITERS_QUICK if quick else ITERS
+    cfg = reduced(configs.get("gemma2-2b"), n_layers=4, d_model=128)
+    dcfg = synthetic.SyntheticConfig(vocab=cfg.vocab, seq_len=64,
+                                     global_batch=8, seed=0)
+    corpus = synthetic.MarkovCorpus(dcfg)
+    batch = {k: jnp.asarray(v) for k, v in corpus.batch(0).items()}
+    tc = step_mod.TrainConfig(
+        opt=adamw.AdamWConfig(lr=5e-3),
+        schedule=Schedule(total_steps=100, warmup_steps=4, base_lr=5e-3))
+
+    results = {}
+    for name in names:
+        model = DecoderModel(cfg, policies.get(name, container="bit_exact"))
+        step = jax.jit(step_mod.make_train_step(model, tc))
+        state = step_mod.init_state(model, jax.random.PRNGKey(0), tc)
+
+        def one(state=state, step=step):
+            new_state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+
+        results[name] = {"ms_per_step": _median_ms(one, iters)}
+
+    base = results["none"]["ms_per_step"]
+    for name in names:
+        results[name]["overhead_vs_none"] = (
+            results[name]["ms_per_step"] / base)
+
+    return {
+        "arch": cfg.name,
+        "config": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                   "batch": 8, "seq": 64},
+        "container": "bit_exact",
+        "iters": iters,
+        "policies": results,
+    }
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer policies + iters (CI smoke)")
+    args = ap.parse_args(argv)
+    r = run(quick=args.quick)
+    OUT.write_text(json.dumps(r, indent=2))
+    print(json.dumps(r, indent=2))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

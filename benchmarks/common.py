@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, policies
 from repro.configs.base import reduced
-from repro.core import bitchop, quantum_mantissa as qmod, sfp
+from repro.core import bitchop
 from repro.data import synthetic
 from repro.models import cnn as cnn_mod
 from repro.models.model import DecoderModel
@@ -29,6 +29,25 @@ from repro.optim.schedule import Schedule
 from repro.train import step as step_mod
 
 CACHE = Path(__file__).resolve().parent.parent / "experiments" / "bench_cache"
+
+
+def bench_policy(policy_name: str, container: str = "bit_exact",
+                 steps: int = 120) -> policies.Policy:
+    """Registry policy with short-run hyperparameters.
+
+    The paper anneals gamma over 90 epochs (450k batches); in an 80-120
+    step run the footprint-pressure-per-step must be ~3 orders larger for
+    the bitlength dynamics (collapse + data-gradient pushback) to play
+    out. Decay mirrors the paper's 0.1 -> 0.01 -> 0.001.
+    """
+    decay = (steps // 2, 3 * steps // 4)
+    kw = {}
+    parts = policy_name.split("+")
+    if "qm" in parts or "qe" in parts:
+        kw = dict(gamma=1.2, lr=0.4, gamma_decay_steps=decay)
+    if "bitchop" in parts or "bitwave" in parts:
+        kw = dict(warmup_steps=6, **kw)
+    return policies.get(policy_name, container=container, **kw)
 
 
 def _cached(key: str, fn):
@@ -45,32 +64,23 @@ def _cached(key: str, fn):
 
 def lm_run(policy_mode: str, steps: int = 120, arch: str = "gemma2-2b",
            container: str = "bit_exact", seed: int = 0) -> Dict:
-    """Train a reduced LM; returns metrics history + final states."""
+    """Train a reduced LM; returns metrics history + policy trajectories.
+
+    ``policy_mode`` is any registry policy name ('+'-composable:
+    "qm+qe"). The per-step trajectory records the policy's snapshot —
+    per-period bitlength arrays for learned policies (keys ``act``/``w``
+    for QM, ``act_e``/``w_e`` for QE), controller bits for
+    BitChop/BitWave (``bc_bits`` / ``bw_man``+``bw_exp``).
+    """
 
     def go():
         cfg = reduced(configs.get(arch), n_layers=4, d_model=128)
-        pol = {
-            "none": sfp.SFPPolicy(mode=sfp.MODE_NONE),
-            "qm": sfp.SFPPolicy(mode=sfp.MODE_QM, container=container),
-            "bitchop": sfp.SFPPolicy(mode=sfp.MODE_BITCHOP,
-                                     container=container),
-            "static": sfp.SFPPolicy(mode=sfp.MODE_STATIC,
-                                    container=container),
-        }[policy_mode]
+        pol = bench_policy(policy_mode, container, steps)
         model = DecoderModel(cfg, pol)
-        # Short-run scaling of the paper's hyperparameters: the paper
-        # anneals gamma over 90 epochs (450k batches); in an 80-120 step
-        # run the footprint-pressure-per-step must be ~3 orders larger for
-        # the bitlength dynamics (collapse + data-gradient pushback) to
-        # play out. Decay mirrors the paper's 0.1 -> 0.01 -> 0.001.
         tc = step_mod.TrainConfig(
             opt=adamw.AdamWConfig(lr=5e-3),
             schedule=Schedule(total_steps=steps, warmup_steps=4,
                               base_lr=5e-3),
-            qm=qmod.QMConfig(gamma=1.2, init_bits=7.0, lr=0.4,
-                             gamma_decay_steps=(steps // 2,
-                                                3 * steps // 4)),
-            bc=bitchop.BitChopConfig(warmup_steps=6),
             num_microbatches=1)
         step = jax.jit(step_mod.make_train_step(model, tc))
         state = step_mod.init_state(model, jax.random.PRNGKey(seed), tc)
@@ -79,21 +89,21 @@ def lm_run(policy_mode: str, steps: int = 120, arch: str = "gemma2-2b",
                                          temperature=1.0, n_modes=16)
         corpus = synthetic.MarkovCorpus(dcfg)
         hist: List[Dict] = []
-        qm_traj = []
+        traj = []
         for i in range(steps):
             b = corpus.batch(i)
             state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
             hist.append({k: float(np.asarray(v)) for k, v in m.items()})
-            qm_traj.append({
-                "act": np.asarray(state.qm.act).tolist(),
-                "w": np.asarray(state.qm.w).tolist(),
-                "bc_bits": int(state.bc.n),
-            })
+            traj.append({k: np.asarray(v).tolist()
+                         for k, v in pol.snapshot(state.pstate).items()})
         params_small = jax.tree.map(np.asarray, state.params)
-        return {"history": hist, "qm_traj": qm_traj, "arch": cfg.name,
-                "params": params_small,
-                "final_qm_act": np.asarray(state.qm.act).tolist(),
-                "final_qm_w": np.asarray(state.qm.w).tolist()}
+        final = {k: np.asarray(v).tolist()
+                 for k, v in pol.snapshot(state.pstate).items()}
+        fp = policies.modeled_footprint(pol, state.pstate, model.dims)
+        return {"history": hist, "qm_traj": traj, "arch": cfg.name,
+                "params": params_small, "final": final, "footprint": fp,
+                "final_qm_act": final.get("act"),
+                "final_qm_w": final.get("w")}
 
     return _cached(f"lm_{arch}_{policy_mode}_{container}_{steps}_{seed}", go)
 
@@ -103,12 +113,7 @@ def cnn_run(policy_mode: str, steps: int = 80, seed: int = 0) -> Dict:
 
     def go():
         cfg = cnn_mod.RESNET8
-        pol = {
-            "none": sfp.SFPPolicy(mode=sfp.MODE_NONE),
-            "qm": sfp.SFPPolicy(mode=sfp.MODE_QM, container="bit_exact"),
-            "bitchop": sfp.SFPPolicy(mode=sfp.MODE_BITCHOP,
-                                     container="bit_exact"),
-        }[policy_mode]
+        pol = policies.get(policy_mode, container="bit_exact")
         m = cnn_mod.CNN(cfg, pol)
         params = m.init(jax.random.PRNGKey(seed))
         opt = adamw.init(params)
@@ -178,9 +183,8 @@ def cnn_stash(run: Dict, policy_mode: str, act_bits=None):
 
     ``act_bits``: None | float | {site: float} (per-layer QM bits)."""
     cfg = cnn_mod.RESNET8
-    m = cnn_mod.CNN(cfg, sfp.SFPPolicy(
-        mode=sfp.MODE_QM if policy_mode == "qm" else sfp.MODE_NONE,
-        container="bit_exact"))
+    m = cnn_mod.CNN(cfg, policies.get(
+        "qm" if policy_mode == "qm" else "none", container="bit_exact"))
     params = jax.tree.map(jnp.asarray, run["params"])
     batch = cnn_mod.synthetic_images(jax.random.PRNGKey(7), 8, cfg)
     if isinstance(act_bits, dict):

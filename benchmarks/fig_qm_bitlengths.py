@@ -1,34 +1,71 @@
-"""Fig 2/3/4: Quantum Mantissa bitlength trajectories + accuracy parity.
+"""Fig 2/3/4 (+ §IV QE): learned bitlength trajectories + accuracy parity.
 
-LM variant (per-period bitlengths over training) + CNN variant; reports
-how quickly bits collapse, the final per-layer spread, and loss parity
-against the unquantized baseline.
+Generalized over the precision-policy registry: any learned policy
+("qm", "qe", or the composed "qm+qe") yields per-period mantissa and/or
+exponent bitlength trajectories — the paper-style per-layer collapse
+figure — plus loss parity against the unquantized baseline. run()
+reports the headline "qm" numbers (consumed by benchmarks/run.py) and a
+"qm+qe" section with both fields' trajectories.
 """
 from __future__ import annotations
+
+from typing import Dict
 
 import numpy as np
 
 from benchmarks import common
 
 
-def run():
-    qm = common.lm_run("qm")
+def _traj(run: Dict, key: str) -> np.ndarray:
+    """(steps, periods) trajectory of one snapshot field, or empty."""
+    rows = [t[key] for t in run["qm_traj"] if key in t]
+    return np.asarray(rows) if rows else np.zeros((0, 0))
+
+
+def policy_trajectories(policy: str) -> Dict:
+    """Train under ``policy`` and summarize every learned-bitlength field."""
+    r = common.lm_run(policy)
     base = common.lm_run("none")
-    act = np.asarray([t["act"] for t in qm["qm_traj"]])   # (steps, periods)
-    w = np.asarray([t["w"] for t in qm["qm_traj"]])
+    out = {"policy": policy, "fields": {}, "footprint": r.get("footprint")}
+    for key, label in (("act", "mantissa_act"), ("w", "mantissa_w"),
+                       ("act_e", "exponent_act"), ("w_e", "exponent_w")):
+        t = _traj(r, key)
+        if not t.size:
+            continue
+        out["fields"][label] = {
+            "final_mean": float(t[-1].mean()),
+            "final_min": float(t[-1].min()),
+            "final_max": float(t[-1].max()),
+            "per_layer_final": t[-1].tolist(),
+            "traj_mean": t.mean(1).tolist()[::5],
+        }
+    out["xent"] = float(np.mean([h["xent"] for h in r["history"][-10:]]))
+    out["xent_base"] = float(np.mean([h["xent"]
+                                      for h in base["history"][-10:]]))
+    out["xent_delta"] = out["xent"] - out["xent_base"]
+    return out
+
+
+def run():
+    qm = policy_trajectories("qm")
+    both = policy_trajectories("qm+qe")
+    act = qm["fields"]["mantissa_act"]
+    traj = np.asarray(act["traj_mean"])
     out = {
-        "steps_to_half": int(np.argmax(act.mean(1) < 3.5))
-        if (act.mean(1) < 3.5).any() else -1,
-        "final_act_mean": float(act[-1].mean()),
-        "final_act_min": float(act[-1].min()),
-        "final_act_max": float(act[-1].max()),
-        "final_w_mean": float(w[-1].mean()),
-        "xent_qm": float(np.mean([h["xent"] for h in qm["history"][-10:]])),
-        "xent_base": float(np.mean([h["xent"]
-                                    for h in base["history"][-10:]])),
-        "act_traj_mean": act.mean(1).tolist()[::5],
+        # headline keys consumed by benchmarks/run.py (qm-only, as before)
+        "steps_to_half": int(np.argmax(traj < 3.5)) * 5
+        if (traj < 3.5).any() else -1,
+        "final_act_mean": act["final_mean"],
+        "final_act_min": act["final_min"],
+        "final_act_max": act["final_max"],
+        "final_w_mean": qm["fields"]["mantissa_w"]["final_mean"],
+        "xent_qm": qm["xent"],
+        "xent_base": qm["xent_base"],
+        "xent_delta": qm["xent_delta"],
+        "act_traj_mean": act["traj_mean"],
+        # the generalized per-policy sections (exponent + mantissa fields)
+        "policies": {"qm": qm, "qm+qe": both},
     }
-    out["xent_delta"] = out["xent_qm"] - out["xent_base"]
     return out
 
 
@@ -42,6 +79,19 @@ def main():
           f"(delta {r['xent_delta']:+.3f})")
     print("mean-act-bits trajectory (every 5 steps):",
           [f"{x:.1f}" for x in r["act_traj_mean"]])
+    both = r["policies"]["qm+qe"]
+    for label, f in both["fields"].items():
+        print(f"qm+qe {label}: final {f['final_mean']:.2f} "
+              f"[{f['final_min']:.2f}..{f['final_max']:.2f}] "
+              f"per-layer {['%.1f' % v for v in f['per_layer_final']]}")
+    if both.get("footprint"):
+        fp = both["footprint"]
+        print(f"qm+qe modeled stash: {fp['bits_per_value']:.2f} b/value "
+              f"({100 * fp['vs_bf16']:.1f}% of BF16, "
+              f"{100 * fp['vs_fp32']:.1f}% of FP32) — "
+              f"man {fp['man_bits']:.2f}b + exp {fp['exp_bits']:.2f}b + sign")
+    print(f"qm+qe loss parity: {both['xent']:.3f} vs base "
+          f"{both['xent_base']:.3f} (delta {both['xent_delta']:+.3f})")
     return r
 
 

@@ -14,8 +14,8 @@ OUT = Path(__file__).resolve().parent.parent / "experiments"
 
 
 def main() -> None:
-    from benchmarks import (bench_codecs, bench_decode, fig_bitchop,
-                            fig_gecko, fig_qm_bitlengths,
+    from benchmarks import (bench_codecs, bench_decode, bench_policies,
+                            fig_bitchop, fig_gecko, fig_qm_bitlengths,
                             fig_relative_compression, table1_footprint,
                             table2_perf_energy)
 
@@ -55,6 +55,11 @@ def main() -> None:
     bench("bench_decode", bench_decode.run,
           lambda r: "sfp8_fused_bytes_vs_bf16="
                     f"{r['points'][0]['fused_bytes_vs_bf16']['sfp8_fused']:.3f}")
+    bench("bench_policies", bench_policies.run,
+          lambda r: "qm_overhead="
+                    f"{r['policies']['qm']['overhead_vs_none']:.2f}x;"
+                    "qm+qe_overhead="
+                    f"{r['policies']['qm+qe']['overhead_vs_none']:.2f}x")
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=2,
@@ -65,6 +70,9 @@ def main() -> None:
     # Headline artifact for the packed flash-decode path (HBM bytes/step).
     (OUT.parent / "BENCH_decode.json").write_text(
         json.dumps(results["bench_decode"], indent=2, default=str))
+    # Headline artifact for the policy registry (per-step overhead).
+    (OUT.parent / "BENCH_policies.json").write_text(
+        json.dumps(results["bench_policies"], indent=2, default=str))
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

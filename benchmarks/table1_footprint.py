@@ -17,14 +17,20 @@ from benchmarks import common
 from repro.core import footprint, gecko
 
 
-def footprint_for(stash, mantissa_bits) -> Dict[str, float]:
+def footprint_for(stash, mantissa_bits, exp_bits=None) -> Dict[str, float]:
+    """``exp_bits`` (scalar or {site: bits}) prices the exponent field at
+    a reduced bitlength — the QE/BitWave account; None keeps the full
+    container exponent (QM/BitChop)."""
     total_sfp = total_js = total_fp32 = total_bf16 = 0
     parts = {"sign": 0, "mantissa": 0, "exponent": 0}
     for s in stash:
         t = jnp.asarray(s["tensor"])
         bits = (mantissa_bits[s["name"]]
                 if isinstance(mantissa_bits, dict) else mantissa_bits)
-        rep = footprint.sfp_footprint(t, bits, signless=s["signless"])
+        ebits = (exp_bits[s["name"]]
+                 if isinstance(exp_bits, dict) else exp_bits)
+        rep = footprint.sfp_footprint(t, bits, exp_bits=ebits,
+                                      signless=s["signless"])
         rep_js = footprint.sfp_js_footprint(t, bits, signless=s["signless"])
         total_sfp += rep.total_bits
         total_js += min(rep_js.total_bits, rep.total_bits)
@@ -62,6 +68,16 @@ def run() -> Dict:
             "mantissa_bits": mean_bits, **fp}
         if isinstance(bits, dict):
             out[f"resnet8_{mode}"]["bits_per_layer"] = bits
+        # The exponent-side account the registry unlocked: price the same
+        # stash as if BitWave/QE had also reduced the exponent field (the
+        # qm row's mantissa bits + a reduced exponent range). 5 exponent
+        # bits covers fp32 activations' typical post-norm spread.
+        if mode == "qm":
+            fp_e = footprint_for(stash, bits, exp_bits=5)
+            out["resnet8_qm_exp5"] = {
+                "acc": float(acc), "acc_fp32_baseline": float(acc_base),
+                "acc_delta": float(acc - acc_base),
+                "mantissa_bits": mean_bits, "exponent_bits": 5.0, **fp_e}
     return out
 
 

@@ -1,16 +1,18 @@
-"""Quickstart: Schrödinger's FP containers on any tensor, in 30 lines.
+"""Quickstart: Schrödinger's FP containers on any tensor, in 40 lines.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Shows the three core mechanisms on real tensors: Quantum Mantissa
-quantization (learnable bitlengths), Gecko lossless exponent compression,
-and the realized SFP8 container pack/unpack.
+Shows the core mechanisms on real tensors: Quantum Mantissa / Quantum
+Exponent quantization (learnable bitlengths via the precision-policy
+registry), Gecko lossless exponent compression, and the realized SFP8
+container pack/unpack.
 """
 import jax
 import jax.numpy as jnp
 
-from repro import codecs
-from repro.core import containers, footprint, gecko, quantum_mantissa as qm
+from repro import codecs, policies
+from repro.core import (containers, footprint, gecko,
+                        quantum_exponent as qe, quantum_mantissa as qm)
 
 key = jax.random.PRNGKey(0)
 x = (jax.random.normal(key, (4, 1024)) * 2.0).astype(jnp.bfloat16)
@@ -25,6 +27,27 @@ print(f"QM @ n={float(n)} bits: max abs err {float(err):.4f}")
 dn = jax.grad(lambda n: jnp.sum(
     qm.qm_quantize(x, n, jax.random.PRNGKey(1)) ** 2).astype(jnp.float32))(n)
 print(f"dL/dn = {float(dn):+.3f}  (gradient descent finds the bitlength)")
+
+# 1b) Quantum Exponent: the same trick on the exponent field — values
+# outside the e-bit range flush to zero / saturate, and dL/de is exact
+e = jnp.asarray(3.5, jnp.float32)
+qx = qe.qe_quantize(x.astype(jnp.float32), e, jax.random.PRNGKey(2))
+de = jax.grad(lambda e: jnp.sum(
+    qe.qe_quantize(x.astype(jnp.float32), e, jax.random.PRNGKey(2)) ** 2))(e)
+kept = float(jnp.mean((qx != 0) | (x.astype(jnp.float32) == 0)))
+print(f"QE @ e={float(e)} bits: {kept:.1%} of values in range, "
+      f"dL/de = {float(de):+.3f}")
+
+# 1c) ...both at once, through the precision-policy registry (how the
+# trainer consumes them: one PrecisionDecision{man_bits, exp_bits})
+pol = policies.get("qm+qe", container="bit_exact")
+dims = policies.ScopeDims.for_dtype(jnp.bfloat16, n_periods=1)
+st = pol.init_state(dims)
+sl = jax.tree.map(lambda a: a[0], pol.scan_slices(
+    pol.forward_view(st.learn, pol.control_view(st.ctrl, dims), dims), dims))
+d = pol.act_decision(sl, jax.random.PRNGKey(3), dims)
+print(f"policy {pol.name!r} decides man={int(d.man_bits)}b "
+      f"exp={int(d.exp_bits)}b (registered: {'/'.join(policies.names())})")
 
 # 2) Gecko: lossless exponent compression
 exp = containers.exponent_field(x)

@@ -1,12 +1,17 @@
-"""End-to-end training driver: LM + Quantum Mantissa, fault-tolerant loop.
+"""End-to-end training driver: LM + precision policies, fault-tolerant loop.
 
   PYTHONPATH=src python examples/train_lm.py --steps 300 --preset small
   PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b --preset tiny
+  PYTHONPATH=src python examples/train_lm.py --policy qm+qe --steps 200
+  PYTHONPATH=src python examples/train_lm.py --policy bitwave --steps 200
 
-Presets reduce the assigned configs for this CPU box; `--preset full
---batch 256 --seq 4096` is the production shape (use launch/train.py with
-a mesh on real hardware). Watch qm_act_mean collapse from 7 bits to 1-3
-within the first tens of steps while xent tracks the baseline.
+`--policy` accepts any registry policy (none/static/qm/qe/bitchop/bitwave)
+or a '+'-composition: `qm+qe` learns mantissa AND exponent bitlengths in
+one run. Presets reduce the assigned configs for this CPU box; `--preset
+full --batch 256 --seq 4096` is the production shape (use launch/train.py
+with a mesh on real hardware). Watch qm_act_mean collapse from 7 bits to
+1-3 within the first tens of steps while xent tracks the baseline; the
+final footprint line prices sign + mantissa + exponent bits per value.
 """
 import sys
 

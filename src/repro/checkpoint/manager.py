@@ -97,31 +97,39 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
-        """Snapshot to host, then write (async unless blocking)."""
+    def save(self, step: int, tree: Any, *, blocking: bool = True,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot to host, then write (async unless blocking).
+
+        ``extra`` is JSON-able run metadata recorded verbatim in the
+        manifest (e.g. the precision-policy name) and read back via
+        :meth:`read_extra` — policy state itself round-trips generically
+        as tree leaves."""
         self.wait()  # never two writers at once (gc races on tmp dirs)
         leaves, _ = _flatten_with_paths(tree)
         host = [(name, np.asarray(leaf)) for name, leaf in leaves]
 
         if blocking:
-            self._write(step, host, tree)
+            self._write(step, host, tree, extra)
         else:
             self._thread = threading.Thread(
-                target=self._write_guarded, args=(step, host, tree),
+                target=self._write_guarded, args=(step, host, tree, extra),
                 daemon=True)
             self._thread.start()
 
-    def _write_guarded(self, step, host, tree):
+    def _write_guarded(self, step, host, tree, extra):
         try:
-            self._write(step, host, tree)
+            self._write(step, host, tree, extra)
         except BaseException as e:  # pragma: no cover
             self._error = e
 
-    def _write(self, step: int, host, tree) -> None:
+    def _write(self, step: int, host, tree, extra=None) -> None:
         final = self._step_dir(step)
         tmp = self.dir / f"{final.name}.tmp-{uuid.uuid4().hex[:8]}"
         tmp.mkdir(parents=True)
         manifest = {"step": step, "time": time.time(), "leaves": []}
+        if extra:
+            manifest["extra"] = extra
         codec = (codecs.get(self.compress_codec)
                  if self.compress_codec is not None else None)
         for i, (name, arr) in enumerate(host):
@@ -190,6 +198,12 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
 
+    def read_extra(self, step: int) -> Dict[str, Any]:
+        """Run metadata recorded at save time ({} for older checkpoints)."""
+        manifest = json.loads(
+            (self._step_dir(step) / "manifest.json").read_text())
+        return manifest.get("extra", {})
+
     def restore(self, step: int, like: Any,
                 shardings: Optional[Any] = None) -> Any:
         """Restore into the structure of ``like``; optionally re-place with
@@ -198,6 +212,14 @@ class CheckpointManager:
         manifest = json.loads((d / "manifest.json").read_text())
         leaves, treedef = _flatten_with_paths(like)
         by_name = {e["name"]: e for e in manifest["leaves"]}
+        missing = [name for name, _ in leaves if name not in by_name]
+        if missing:
+            extra = manifest.get("extra", {})
+            hint = (f" (checkpoint was saved with {extra})" if extra else "")
+            raise ValueError(
+                f"checkpoint step {step} lacks leaves {missing[:4]}"
+                f"{'...' if len(missing) > 4 else ''} for the requested "
+                f"state tree — e.g. a different precision policy{hint}")
         sh_leaves = (jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: x is None)
             if shardings is not None else [None] * len(leaves))

@@ -54,9 +54,14 @@ def init(cfg: BitChopConfig) -> BitChopState:
     )
 
 
-def update(state: BitChopState, loss, cfg: BitChopConfig,
-           lr_changed=False) -> BitChopState:
-    """One observe/decide step (eq. 8 + 9). Safe to call inside jit."""
+def _loss_signal(state, loss, cfg):
+    """The shared eq. 8-9 machinery: EMA updates + shrink/keep/grow signal.
+
+    ``state`` needs (mavg, err_ema, step, hold_until); ``cfg`` needs
+    (alpha, eps_alpha, eps_scale, warmup_steps, period) — both BitChop
+    and BitWave satisfy this. Returns (mavg, err_ema, decide, shrink,
+    grow); shrink/grow are ungated, callers combine with ``decide``.
+    """
     loss = jnp.asarray(loss, jnp.float32)
     first = state.step == 0
     mavg0 = jnp.where(first, loss, state.mavg)
@@ -76,6 +81,13 @@ def update(state: BitChopState, loss, cfg: BitChopConfig,
     # eq. (9)
     shrink = mavg0 > loss + eps
     grow = mavg0 < loss - eps
+    return mavg, err_ema, decide, shrink, grow
+
+
+def update(state: BitChopState, loss, cfg: BitChopConfig,
+           lr_changed=False) -> BitChopState:
+    """One observe/decide step (eq. 8 + 9). Safe to call inside jit."""
+    mavg, err_ema, decide, shrink, grow = _loss_signal(state, loss, cfg)
     delta = jnp.where(shrink, -1, jnp.where(grow, 1, 0)).astype(jnp.int32)
     n = jnp.where(decide, state.n + delta, state.n)
     n = jnp.clip(n, cfg.min_bits, cfg.max_bits)
@@ -99,3 +111,96 @@ def update(state: BitChopState, loss, cfg: BitChopConfig,
 def effective_bits(state: BitChopState, cfg: BitChopConfig) -> jax.Array:
     """Bitlength to apply this step (full precision inside hold windows)."""
     return jnp.where(state.step < state.hold_until, cfg.max_bits, state.n)
+
+
+# ----------------------------------------------------------------------
+# BitWave: the same loss-EMA controller driving mantissa AND exponent bits
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BitWaveConfig:
+    """BitWave = BitChop's eq. 8-9 signals steering two bitlengths.
+
+    The paper's BitWave adjusts mantissa and exponent bitlengths
+    network-wide from the loss signal. A single shrink budget is spent
+    round-robin (mantissa first — it is the bigger field, so the
+    footprint derivative is larger), while a regression signal grows both
+    at once: recovery must be fast, exploration can be gradual.
+    """
+
+    alpha: float = 0.1
+    eps_alpha: float = 0.1
+    eps_scale: float = 1.0
+    max_man_bits: int = 7         # container mantissa bits (7 bf16, 23 fp32)
+    min_man_bits: int = 0
+    max_exp_bits: int = 8         # container exponent bits
+    min_exp_bits: int = 2         # a 1-bit exponent has no normal codes
+    period: int = 1
+    warmup_steps: int = 8
+    lr_change_hold: int = 100
+
+
+class BitWaveState(NamedTuple):
+    mavg: jax.Array        # fp32 scalar, EMA of loss
+    err_ema: jax.Array     # fp32 scalar, EMA of |L - mavg|
+    n_man: jax.Array       # int32 scalar, current mantissa bitlength
+    n_exp: jax.Array       # int32 scalar, current exponent bitlength
+    turn: jax.Array        # int32 scalar; even -> next shrink hits mantissa
+    step: jax.Array
+    hold_until: jax.Array
+
+
+def bitwave_init(cfg: BitWaveConfig) -> BitWaveState:
+    return BitWaveState(
+        mavg=jnp.asarray(0.0, jnp.float32),
+        err_ema=jnp.asarray(0.0, jnp.float32),
+        n_man=jnp.asarray(cfg.max_man_bits, jnp.int32),
+        n_exp=jnp.asarray(cfg.max_exp_bits, jnp.int32),
+        turn=jnp.asarray(0, jnp.int32),
+        step=jnp.asarray(0, jnp.int32),
+        hold_until=jnp.asarray(0, jnp.int32),
+    )
+
+
+def bitwave_update(state: BitWaveState, loss, cfg: BitWaveConfig,
+                   lr_changed=False) -> BitWaveState:
+    """One observe/decide step over both bitlengths. Safe inside jit."""
+    mavg, err_ema, decide, shrink, grow = _loss_signal(state, loss, cfg)
+    shrink = decide & shrink
+    grow = decide & grow
+
+    man_turn = (state.turn % 2) == 0
+    n_man = state.n_man - jnp.where(shrink & man_turn, 1, 0)
+    n_exp = state.n_exp - jnp.where(shrink & ~man_turn, 1, 0)
+    n_man = jnp.where(grow, n_man + 1, n_man)
+    n_exp = jnp.where(grow, n_exp + 1, n_exp)
+    n_man = jnp.clip(n_man, cfg.min_man_bits, cfg.max_man_bits)
+    n_exp = jnp.clip(n_exp, cfg.min_exp_bits, cfg.max_exp_bits)
+    turn = state.turn + jnp.where(shrink, 1, 0)
+
+    lr_changed = jnp.asarray(lr_changed, bool)
+    hold_until = jnp.where(
+        lr_changed, state.step + cfg.lr_change_hold, state.hold_until
+    ).astype(jnp.int32)
+    in_hold = state.step < hold_until
+    n_man = jnp.where(in_hold, cfg.max_man_bits, n_man)
+    n_exp = jnp.where(in_hold, cfg.max_exp_bits, n_exp)
+
+    return BitWaveState(
+        mavg=mavg,
+        err_ema=err_ema,
+        n_man=n_man.astype(jnp.int32),
+        n_exp=n_exp.astype(jnp.int32),
+        turn=turn.astype(jnp.int32),
+        step=state.step + 1,
+        hold_until=hold_until,
+    )
+
+
+def bitwave_effective(state: BitWaveState, cfg: BitWaveConfig):
+    """(man_bits, exp_bits) to apply this step (full precision in holds)."""
+    in_hold = state.step < state.hold_until
+    man = jnp.where(in_hold, cfg.max_man_bits, state.n_man)
+    exp = jnp.where(in_hold, cfg.max_exp_bits, state.n_exp)
+    return man, exp

@@ -149,18 +149,68 @@ def round_mantissa(x: jax.Array, n) -> jax.Array:
     return bitcast_to_float(u2 & mask, spec)
 
 
-def stochastic_bitlength(n_float: jax.Array, key: jax.Array, max_bits: int) -> jax.Array:
+def stochastic_bitlength(n_float: jax.Array, key: jax.Array, max_bits: int,
+                         min_bits: int = 0) -> jax.Array:
     """Eq. (6): draw an integer bitlength from a real-valued one.
 
-    Returns floor(n) + Bernoulli(frac(n)), clipped to [0, max_bits]. One
-    draw per call — the paper (§IV-A3) finds per-tensor granularity
-    sufficient, so callers pass one key per tensor per step.
+    Returns floor(n) + Bernoulli(frac(n)), clipped to [min_bits, max_bits].
+    One draw per call — the paper (§IV-A3) finds per-tensor granularity
+    sufficient, so callers pass one key per tensor per step. ``min_bits``
+    defaults to 0 (the mantissa case); Quantum Exponent clamps to 2 because
+    a 1-bit IEEE exponent has no normal codes.
     """
-    nf = jnp.clip(jnp.asarray(n_float, jnp.float32), 0.0, float(max_bits))
+    nf = jnp.clip(jnp.asarray(n_float, jnp.float32), float(min_bits),
+                  float(max_bits))
     floor_n = jnp.floor(nf)
     frac = nf - floor_n
     bump = jax.random.bernoulli(key, frac).astype(jnp.int32)
-    return jnp.clip(floor_n.astype(jnp.int32) + bump, 0, max_bits)
+    return jnp.clip(floor_n.astype(jnp.int32) + bump, min_bits, max_bits)
+
+
+MIN_EXP_BITS = 2  # a 1-bit IEEE-style exponent field has no normal codes
+
+
+def exponent_range(e: jax.Array, spec: FloatSpec):
+    """Unbiased normal-exponent range [lo, hi] of an ``e``-bit container.
+
+    IEEE convention: an e-bit exponent field with bias 2^(e-1)-1 keeps
+    biased codes 1..2^e-2 for normals (0 = zero/subnormal, all-ones =
+    inf/nan), i.e. unbiased exponents in [2 - 2^(e-1), 2^(e-1) - 1].
+    ``e`` may be traced; it is clipped to [MIN_EXP_BITS, spec.exp_bits].
+    """
+    e = jnp.clip(jnp.asarray(e, jnp.int32), MIN_EXP_BITS, spec.exp_bits)
+    bias_e = jnp.left_shift(1, e - 1) - 1
+    lo = 1 - bias_e
+    hi = (jnp.left_shift(1, e) - 2) - bias_e
+    return lo, hi
+
+
+def truncate_exponent(x: jax.Array, e) -> jax.Array:
+    """Clamp ``x`` to the exponent range of an ``e``-bit container.
+
+    The exponent-side analogue of eq. (5): values whose unbiased exponent
+    falls below the e-bit normal range flush to (signed) zero — as do the
+    source container's own zeros/subnormals — values above it saturate to
+    the largest in-range binade (exponent clamped, mantissa kept, so a
+    preceding mantissa truncation survives), and inf/nan pass through
+    untouched. ``e`` may be a traced int32; it is clipped to
+    [MIN_EXP_BITS, spec.exp_bits], and at e == spec.exp_bits the only
+    effect is the flush of source subnormals (FTZ semantics).
+
+    Not differentiable — see quantum_exponent.qe_quantize for the STE +
+    bitlength-gradient wrapper.
+    """
+    spec = spec_for(x)
+    sign, exp, man = split_fields(x)
+    lo, hi = exponent_range(e, spec)
+    unb = exp.astype(jnp.int32) - spec.bias
+    special = exp == spec.exp_mask          # inf / nan: keep verbatim
+    underflow = (~special) & (unb < lo)     # incl. exp==0 (zero/subnormal)
+    overflow = (~special) & (unb > hi)
+    exp_new = jnp.where(overflow, (hi + spec.bias).astype(exp.dtype), exp)
+    exp_new = jnp.where(underflow, jnp.zeros_like(exp), exp_new)
+    man_new = jnp.where(underflow, jnp.zeros_like(man), man)
+    return combine_fields(sign, exp_new, man_new, spec)
 
 
 def exponent_field(x: jax.Array) -> jax.Array:

@@ -47,25 +47,42 @@ class FootprintReport:
         }
 
 
-def sfp_footprint(x: jax.Array, mantissa_bits, *, signless: bool = False,
+def sfp_footprint(x: jax.Array, mantissa_bits, *, exp_bits=None,
+                  signless: bool = False,
                   gecko_mode: str = "delta") -> FootprintReport:
     """Exact SFP bits for tensor ``x`` stored at ``mantissa_bits`` mantissa.
 
     ``mantissa_bits`` may be a python int, a scalar, or fractional (QM's
-    expectation: fractional n costs its expected bits). ``signless`` models
-    post-ReLU/softmax tensors whose sign bit is elided (§IV-D).
+    expectation: fractional n costs its expected bits). ``exp_bits``
+    (Quantum Exponent / BitWave) prices the exponent field at the reduced
+    bitlength: the exponents are first clamped to the e-bit range (what
+    the policy actually stores), Gecko compresses the clamped stream, and
+    the account takes min(gecko, e*n) — the raw reduced-width encoding is
+    the fallback when flush-to-zero outliers poison the delta rows. None
+    keeps the full container exponent (pre-QE behaviour). ``signless``
+    models post-ReLU/softmax tensors whose sign bit is elided (§IV-D).
     """
     n = int(x.size)
-    exp = containers.exponent_field(x)
-    ebits = int(gecko.compressed_bits(exp, mode=gecko_mode))
+    spec = containers.spec_for(x)
+    if exp_bits is not None:
+        e_clip = float(jnp.clip(jnp.asarray(exp_bits, jnp.float32),
+                                containers.MIN_EXP_BITS, spec.exp_bits))
+        e_int = int(-(-e_clip // 1))  # ceil: the realized container range
+        x_e = containers.truncate_exponent(x, e_int)
+        exp = containers.exponent_field(x_e)
+        ebits = min(int(gecko.compressed_bits(exp, mode=gecko_mode)),
+                    int(round(e_clip * n)))
+    else:
+        exp = containers.exponent_field(x)
+        ebits = int(gecko.compressed_bits(exp, mode=gecko_mode))
     mbits = float(jnp.clip(jnp.asarray(mantissa_bits, jnp.float32), 0,
-                           containers.spec_for(x).man_bits)) * n
+                           spec.man_bits)) * n
     return FootprintReport(
         n_values=n,
         sign_bits=0 if signless else n,
         mantissa_bits=int(round(mbits)),
         exponent_bits=ebits,
-        metadata_bits=0,  # mantissa-length metadata: 2 floats/layer, negligible
+        metadata_bits=0,  # bitlength metadata: a few scalars/layer, negligible
     )
 
 

@@ -1,0 +1,79 @@
+"""Quantum Exponent: learning exponent bitlengths with gradient descent.
+
+Paper §IV. The exponent-side sibling of Quantum Mantissa: a real-valued
+bitlength parameter e per (tensor, kind) is optimized jointly with the
+model, with the same stochastic-rounding forward and expectation-derivative
+backward as qm_quantize:
+
+  forward  : q = T(x, floor(e) + Bernoulli(frac(e)))
+  backward : dL/dx = dL/dq                                     (STE)
+             dL/de = sum(dL/dq * (T(x, floor(e)+1) - T(x, floor(e))))
+
+where T is containers.truncate_exponent — values outside the e-bit normal
+range flush to zero (underflow) or saturate (overflow). dL/de is the exact
+derivative of E[T(x, e)] = (1-{e}) T(x, floor e) + {e} T(x, floor e + 1),
+piecewise-linear in e, so it costs one extra truncation in the backward
+pass — the same O(n) overhead argument as §IV-A3.
+
+Exponent bitlengths live in [MIN_EXP_BITS, spec.exp_bits]: a 1-bit IEEE
+exponent has no normal codes, so the learnable range bottoms out at 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+
+
+@jax.custom_vjp
+def qe_quantize(x: jax.Array, e: jax.Array, key: jax.Array) -> jax.Array:
+    """Stochastic fractional-bitlength exponent truncation.
+
+    Args:
+      x:   float array (fp32 or bf16).
+      e:   scalar float32 exponent bitlength parameter (differentiable).
+      key: PRNG key; one Bernoulli draw per call (per-tensor granularity).
+    """
+    spec = containers.spec_for(x)
+    e_int = containers.stochastic_bitlength(
+        e, key, spec.exp_bits, min_bits=containers.MIN_EXP_BITS)
+    return containers.truncate_exponent(x, e_int)
+
+
+def _qe_fwd(x, e, key):
+    spec = containers.spec_for(x)
+    e_int = containers.stochastic_bitlength(
+        e, key, spec.exp_bits, min_bits=containers.MIN_EXP_BITS)
+    q = containers.truncate_exponent(x, e_int)
+    # Save x and e (scalar); T(x, floor), T(x, floor+1) are recomputed in
+    # the backward pass — keeping the stash small is the point.
+    return q, (x, e)
+
+
+def _qe_bwd(res, g):
+    x, e = res
+    spec = containers.spec_for(x)
+    ef = jnp.clip(jnp.asarray(e, jnp.float32), float(containers.MIN_EXP_BITS),
+                  float(spec.exp_bits))
+    floor_e = jnp.floor(ef).astype(jnp.int32)
+    ceil_e = jnp.minimum(floor_e + 1, spec.exp_bits)
+    q_lo = containers.truncate_exponent(x, floor_e)
+    q_hi = containers.truncate_exponent(x, ceil_e)
+    # dE[T]/de = T(x, floor+1) - T(x, floor)  (0 once e >= exp_bits)
+    diff = (q_hi - q_lo).astype(jnp.float32)
+    de = jnp.sum(g.astype(jnp.float32) * diff).astype(jnp.float32)
+    dx = g.astype(x.dtype)  # straight-through
+    return dx, de, None
+
+
+qe_quantize.defvjp(_qe_fwd, _qe_bwd)
+
+
+def qe_quantize_deterministic(x: jax.Array, e: jax.Array) -> jax.Array:
+    """Deployment-mode truncation: round the learned bitlength up (§IV-A4)."""
+    spec = containers.spec_for(x)
+    e_int = jnp.clip(jnp.ceil(jnp.asarray(e, jnp.float32)),
+                     containers.MIN_EXP_BITS,
+                     spec.exp_bits).astype(jnp.int32)
+    return containers.truncate_exponent(x, e_int)

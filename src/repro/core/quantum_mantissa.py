@@ -1,5 +1,10 @@
 """Quantum Mantissa: learning mantissa bitlengths with gradient descent.
 
+The policy wiring (state layout, penalty scheduling, SGD updates, scope
+views) lives in repro.policies.quantum.QMPolicy; this module owns the
+quantizer math and its custom VJP. quantum_exponent.py is the
+exponent-side sibling (same estimator over containers.truncate_exponent).
+
 Paper §IV-A. A real-valued bitlength parameter n per (tensor, kind) is
 optimized jointly with the model:
 

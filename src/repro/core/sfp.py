@@ -1,97 +1,52 @@
-"""SFP container policies: how stashed tensors get compressed.
+"""DEPRECATED: legacy SFP policy enum — use ``repro.policies`` instead.
 
-A policy binds together (a) where mantissa bitlengths come from (Quantum
-Mantissa parameters, the BitChop controller, a static choice, or none) and
-(b) the realized on-TPU container (bit-exact accounting vs byte-aligned
-SFP8/SFP16 packing).
+This module used to own the mode-string dispatch (``MODE_QM`` if/else
+ladders) that decided how stashed tensors were quantized. That surface is
+now the precision-policy registry: ``repro.policies.get("qm")`` etc.,
+composable (``"qm+qe"``) and extensible via ``policies.register``.
 
-Used by repro/train/step.py for activation stash + weight fake-quant and by
-repro/serve/kvcache.py for the compressed KV cache.
+Only the ``SFPPolicy`` dataclass survives, as a thin shim: constructing
+one still works, and every consumer (``DecoderModel``, ``CNN``) coerces
+it through :meth:`SFPPolicy.to_policy`. New code should build registry
+policies directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import containers, quantum_mantissa
-
-
+# Legacy mode names, kept for back-compat constructors only.
 MODE_NONE = "none"
-MODE_QM = "qm"          # learned per-tensor bitlengths (Quantum Mantissa)
-MODE_BITCHOP = "bitchop"  # network-wide heuristic bitlength
-MODE_STATIC = "static"  # fixed bitlength (Gist-style ablation baseline)
+MODE_QM = "qm"
+MODE_BITCHOP = "bitchop"
+MODE_STATIC = "static"
 
 
 @dataclasses.dataclass(frozen=True)
 class SFPPolicy:
+    """Legacy policy spec. Use ``repro.policies.get(mode, ...)`` instead."""
+
     mode: str = MODE_NONE
     container: str = "sfp8"        # 'sfp8' | 'sfp16' | 'bit_exact'
-    static_act_bits: int = 3       # for MODE_STATIC
+    static_act_bits: int = 3
     static_weight_bits: int = 7
-    quantize_weights: bool = True  # QM quantizes weights too; BitChop acts only
+    quantize_weights: bool = True
     gecko_mode: str = "delta"
-    gamma: float = 0.1             # QM regularizer strength
+    gamma: float = 0.1
 
     @property
     def enabled(self) -> bool:
         return self.mode != MODE_NONE
 
-
-def act_bits_for(policy: SFPPolicy, qm_bits: Optional[jax.Array],
-                 bitchop_bits: Optional[jax.Array], max_bits: int):
-    """Resolve the activation mantissa bitlength for one tensor group."""
-    if policy.mode == MODE_QM:
-        assert qm_bits is not None
-        return qm_bits
-    if policy.mode == MODE_BITCHOP:
-        assert bitchop_bits is not None
-        return bitchop_bits
-    if policy.mode == MODE_STATIC:
-        return jnp.asarray(policy.static_act_bits, jnp.int32)
-    return jnp.asarray(max_bits, jnp.int32)
-
-
-def fake_quant_weights(policy: SFPPolicy, w: jax.Array, n: Optional[jax.Array],
-                       key: Optional[jax.Array]) -> jax.Array:
-    """Weight-side quantization at use site (QM: learned + differentiable)."""
-    if not policy.enabled or not policy.quantize_weights:
-        return w
-    if policy.mode == MODE_QM:
-        return quantum_mantissa.qm_quantize(w, n, key)
-    if policy.mode == MODE_STATIC:
-        return containers.truncate_mantissa(w, policy.static_weight_bits)
-    # BitChop leaves weights alone ("Presently, BitChop adjusts the mantissa
-    # only for the activations" — §IV-B).
-    return w
-
-
-def stash_quantize(policy: SFPPolicy, x: jax.Array, n, key) -> jax.Array:
-    """Activation-side quantization applied to stashed tensors.
-
-    Differentiable via STE (and with dn for QM) — see quantum_mantissa.
-    """
-    if not policy.enabled:
-        return x
-    if policy.mode == MODE_QM:
-        return quantum_mantissa.qm_quantize(x, n, key)
-    # BitChop / static: integer bitlength, STE.
-    return _ste_truncate(x, n)
-
-
-@jax.custom_vjp
-def _ste_truncate(x, n):
-    return containers.truncate_mantissa(x, n)
-
-
-def _ste_fwd(x, n):
-    return containers.truncate_mantissa(x, n), None
-
-
-def _ste_bwd(_, g):
-    return g, None
-
-
-_ste_truncate.defvjp(_ste_fwd, _ste_bwd)
+    def to_policy(self):
+        """Resolve through the precision-policy registry."""
+        from repro import policies
+        warnings.warn(
+            "core.sfp.SFPPolicy is deprecated; use "
+            f"repro.policies.get({self.mode!r}, ...) instead.",
+            DeprecationWarning, stacklevel=2)
+        return policies.get(
+            self.mode, _strict=False, container=self.container,
+            quantize_weights=self.quantize_weights, gamma=self.gamma,
+            static_act_bits=self.static_act_bits,
+            static_weight_bits=self.static_weight_bits)

@@ -96,7 +96,7 @@ def sfp_scan(
             if stash_grad is not None:
                 dx = dict(dx)
                 for k, v in stash_grad(dh, c, x).items():
-                    dx[k] = jax.tree.map(lambda a, b: a + b, dx[k], v)
+                    dx[k] = jax.tree.map(_acc_cotangent, dx[k], v)
             return (dh_prev, dex_prev), dx
 
         (dh0, dex0), dxs = jax.lax.scan(
@@ -105,6 +105,18 @@ def sfp_scan(
 
     run.defvjp(run_fwd, run_bwd)
     return run(carry0, xs)
+
+
+def _acc_cotangent(a, b):
+    """Add a stash_grad overlay onto a vjp cotangent leaf.
+
+    Integer xs leaves (e.g. controller bitlengths threaded through a
+    composite policy slice) carry float0 cotangents — those pass through
+    untouched; only real float cotangents accumulate.
+    """
+    if getattr(a, "dtype", None) == jax.dtypes.float0:
+        return a
+    return a + jnp.asarray(b, a.dtype)
 
 
 def identity_compress(h, x):

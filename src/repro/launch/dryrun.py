@@ -31,9 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import configs, policies
 from repro.configs.base import SHAPES, cells_for, input_specs
-from repro.core import sfp
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import DecoderModel
@@ -97,16 +96,9 @@ def _microbatches_for(shape) -> int:
     return 4 if shape.kind == "train" else 1
 
 
-def _policy_from(name: str) -> sfp.SFPPolicy:
-    if name == "none":
-        return sfp.SFPPolicy(mode=sfp.MODE_NONE)
-    if name == "qm":
-        return sfp.SFPPolicy(mode=sfp.MODE_QM, container="sfp8")
-    if name == "bitchop":
-        return sfp.SFPPolicy(mode=sfp.MODE_BITCHOP, container="sfp8")
-    if name == "static":
-        return sfp.SFPPolicy(mode=sfp.MODE_STATIC, container="sfp8")
-    raise ValueError(name)
+def _policy_from(name: str) -> policies.Policy:
+    """Any registry policy (or '+'-composition); sfp8 realized stash."""
+    return policies.get(name, container="sfp8")
 
 
 def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
@@ -139,8 +131,7 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
         state_sh = TrainState(
             params=param_sh,
             opt=state_shapes.opt._replace(m=param_sh, v=param_sh, count=repl),
-            qm=jax.tree.map(lambda _: repl, state_shapes.qm),
-            bc=jax.tree.map(lambda _: repl, state_shapes.bc),
+            pstate=jax.tree.map(lambda _: repl, state_shapes.pstate),
             step=repl, rng=repl, grad_residual=None)
         state_sh = shd.refine_shardings(state_shapes, state_sh, mesh)
         batch_sh = shd.refine_shardings(specs, batch_sh, mesh)
@@ -278,8 +269,10 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
-    ap.add_argument("--policy", default="qm",
-                    choices=["none", "qm", "bitchop", "static"])
+    ap.add_argument("--policy", default="qm", metavar="NAME[+NAME...]",
+                    help="precision policy from the registry "
+                         f"({'/'.join(policies.names())}), composable "
+                         "with '+', e.g. qm+qe")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--layout", default="tp", choices=["tp", "fsdp"])

@@ -1,12 +1,17 @@
 """Training launcher.
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --preset tiny \
-      --policy qm --steps 200 --ckpt-dir /tmp/ckpt
+      --policy qm+qe --steps 200 --ckpt-dir /tmp/ckpt
 
-Presets scale the assigned configs down for the CPU environment; on real
-hardware drop --preset and pass --mesh to shard across the fleet. The loop
-is fault-tolerant: it checkpoints every --ckpt-every steps and
-restores+continues on step failure.
+``--policy`` takes any registered precision policy (none, static, qm, qe,
+bitchop, bitwave) or a '+'-composition such as ``qm+qe`` (learn mantissa
+AND exponent bitlengths in one run). Presets scale the assigned configs
+down for the CPU environment; on real hardware drop --preset and pass
+--mesh to shard across the fleet. The loop is fault-tolerant: it
+checkpoints every --ckpt-every steps (recording the policy in the
+manifest) and restores+continues on step failure. The final report
+includes the modeled stash footprint under the learned/adapted decisions —
+exponent-bit savings from qe/bitwave show up there.
 """
 from __future__ import annotations
 
@@ -18,15 +23,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import codecs, configs
+from repro import codecs, configs, policies
 from repro.configs.base import reduced
-from repro.core import bitchop, quantum_mantissa as qmod, sfp
 from repro.data import pipeline, synthetic
 from repro.models.model import DecoderModel
 from repro.optim import adamw
 from repro.optim.schedule import Schedule
 from repro.train import loop as loop_mod
 from repro.train import step as step_mod
+
+
+def build_policy(args) -> policies.Policy:
+    """Resolve --policy, routing the qm-* / qe-* flags to their sub-policy.
+
+    QE rides its own knobs (the exponent field is smaller and flushing a
+    binade is harsher than dropping a mantissa bit), so each '+'-part is
+    constructed with its own kwarg set and composed once.
+    """
+    per_sub = {
+        "qm": dict(gamma=args.gamma, lr=args.qm_lr,
+                   init_bits=args.qm_init_bits),
+        "qe": dict(gamma=args.qe_gamma, lr=args.qe_lr),
+    }
+    parts = args.policy.split("+")
+    if len(set(parts)) != len(parts):
+        raise SystemExit(f"duplicate sub-policy in --policy {args.policy!r}")
+    subs = [policies.get(part, container=args.container,
+                         **per_sub.get(part, {}))
+            for part in parts]
+    return (subs[0] if len(subs) == 1
+            else policies.CompositePolicy(policies=tuple(subs)))
 
 
 def build(args):
@@ -40,24 +66,13 @@ def build(args):
     else:
         batch, seq = args.batch, args.seq
 
-    policy = {
-        "none": sfp.SFPPolicy(mode=sfp.MODE_NONE),
-        "qm": sfp.SFPPolicy(mode=sfp.MODE_QM, container=args.container),
-        "bitchop": sfp.SFPPolicy(mode=sfp.MODE_BITCHOP,
-                                 container=args.container),
-        "static": sfp.SFPPolicy(mode=sfp.MODE_STATIC,
-                                container=args.container),
-    }[args.policy]
-
+    policy = build_policy(args)
     model = DecoderModel(cfg, policy)
     tc = step_mod.TrainConfig(
         opt=adamw.AdamWConfig(lr=args.lr),
         schedule=Schedule(kind="cosine", base_lr=args.lr,
                           warmup_steps=min(50, args.steps // 10),
                           total_steps=args.steps),
-        qm=qmod.QMConfig(gamma=args.gamma, init_bits=args.qm_init_bits,
-                         lr=args.qm_lr),
-        bc=bitchop.BitChopConfig(),
         num_microbatches=args.microbatches,
         grad_compress_bits=args.grad_compress_bits,
     )
@@ -69,17 +84,23 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--preset", default="tiny",
                     choices=["tiny", "small", "full"])
-    ap.add_argument("--policy", default="qm",
-                    choices=["none", "qm", "bitchop", "static"])
+    ap.add_argument("--policy", default="qm", metavar="NAME[+NAME...]",
+                    help="precision policy from the registry "
+                         f"({'/'.join(policies.names())}), composable with "
+                         "'+', e.g. qm+qe")
     ap.add_argument("--container", default="bit_exact",
                     choices=codecs.names())  # every registered codec
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--gamma", type=float, default=0.05,
+                    help="QM footprint-penalty strength (eq. 7)")
     ap.add_argument("--qm-init-bits", type=float, default=7.0)
     ap.add_argument("--qm-lr", type=float, default=0.05)
+    ap.add_argument("--qe-gamma", type=float, default=0.05,
+                    help="QE footprint-penalty strength")
+    ap.add_argument("--qe-lr", type=float, default=0.05)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compress-bits", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
@@ -90,7 +111,7 @@ def main():
 
     cfg, model, tc, batch, seq = build(args)
     print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
-          f"policy={args.policy} container={args.container}")
+          f"policy={model.policy.name} container={args.container}")
 
     train_step = jax.jit(step_mod.make_train_step(model, tc),
                          donate_argnums=(0,))
@@ -113,12 +134,20 @@ def main():
     lc = loop_mod.LoopConfig(
         total_steps=args.steps, ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir, metrics_file=args.metrics,
-        log_every=max(1, args.steps // 50))
+        log_every=max(1, args.steps // 50),
+        ckpt_extra={"policy": model.policy.name,
+                    "container": args.container})
     res = loop_mod.run(train_step, state, batches, lc)
     last = res.history[-1]
     print(json.dumps({k: last[k] for k in
                       ("step", "loss", "xent", "qm_act_mean", "qm_w_mean",
-                       "bc_bits") if k in last}, indent=2))
+                       "qe_act_mean", "qe_w_mean", "bc_bits", "bw_man_bits",
+                       "bw_exp_bits") if k in last}, indent=2))
+    # Modeled stash footprint under the final decisions: sign + learned
+    # mantissa bits + (learned/adapted) exponent bits per value.
+    fp = policies.modeled_footprint(model.policy, res.state.pstate,
+                                    model.dims)
+    print("footprint " + json.dumps({k: round(v, 4) for k, v in fp.items()}))
 
 
 if __name__ == "__main__":

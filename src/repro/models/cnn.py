@@ -19,7 +19,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import quantum_mantissa as qm, sfp
+from repro import policies
 from repro.models import common
 
 
@@ -81,9 +81,10 @@ def _hswish(x):
 
 
 class CNN:
-    def __init__(self, cfg: CNNConfig, policy: sfp.SFPPolicy = sfp.SFPPolicy()):
+    def __init__(self, cfg: CNNConfig, policy=None):
         self.cfg = cfg
-        self.policy = policy
+        self.policy = policies.coerce(policy)
+        self.dims = policies.ScopeDims.for_dtype(cfg.compute_dtype)
 
     # -- init ----------------------------------------------------------
 
@@ -140,16 +141,21 @@ class CNN:
     # -- forward -------------------------------------------------------
 
     def _quant(self, x, bits, key, stash, name, *, signless, relu_pool):
-        """Per-layer activation quantization + stash collection."""
+        """Per-layer activation quantization + stash collection.
+
+        ``bits`` drives the policy externally (the CNN benchmark loop owns
+        its own per-site bitlength state): a scalar, a {site: value} dict,
+        or a {site: slice-dict} dict for multi-field policies (BitWave's
+        {"act": man, "act_e": exp}). Policies that need a bitlength input
+        are skipped when none is provided — matching the pre-registry
+        behaviour.
+        """
         pol = self.policy
         if pol.enabled:
-            if pol.mode == sfp.MODE_QM and bits is not None:
-                x = qm.qm_quantize(x, bits[name] if isinstance(bits, dict)
-                                   else bits, key)
-            elif pol.mode == sfp.MODE_BITCHOP and bits is not None:
-                x = sfp._ste_truncate(x, bits)
-            elif pol.mode == sfp.MODE_STATIC:
-                x = sfp._ste_truncate(x, pol.static_act_bits)
+            b = bits[name] if isinstance(bits, dict) else bits
+            if b is not None or not pol.requires_act_bits:
+                pslice = b if isinstance(b, dict) else {"act": b}
+                x = pol.quantize_act(x, pslice, key, self.dims)
         if stash is not None:
             stash.append({"name": name, "tensor": x, "signless": signless,
                           "relu_pool": relu_pool})

@@ -21,9 +21,9 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import codecs
+from repro import codecs, policies
 from repro.configs.base import ArchConfig, GLOBAL, LOCAL, RGLRU, SSD
-from repro.core import containers, quantum_mantissa as qm, sfp, stash
+from repro.core import containers, stash
 from repro.distributed import sharding as shd
 from repro.models import attention, common, mamba2, moe, rglru
 
@@ -32,29 +32,31 @@ MOE_Z_COEF = 1e-3
 
 
 class RunState(NamedTuple):
-    """Per-step dynamic inputs controlling SFP behaviour."""
+    """Per-step dynamic inputs controlling precision behaviour.
 
-    key: jax.Array       # PRNG key for this step
-    qm_act: jax.Array    # (n_periods,) fp32 learned activation bitlengths
-    qm_w: jax.Array      # (n_periods,) fp32 learned weight bitlengths
-    qm_act_rem: jax.Array  # (n_rem,) fp32
-    qm_w_rem: jax.Array    # (n_rem,) fp32
-    bc_bits: jax.Array   # () int32 network-wide BitChop bitlength
+    ``pol`` is the policy's forward view — an opaque pytree produced by
+    ``Policy.forward_view`` and only ever handed back to policy methods;
+    the model never inspects it.
+    """
+
+    key: jax.Array  # PRNG key for this step
+    pol: Any        # policy forward view (possibly empty)
+
+
+def scope_dims(cfg: ArchConfig) -> policies.ScopeDims:
+    return policies.ScopeDims.for_dtype(
+        cfg.compute_dtype, n_periods=cfg.n_periods,
+        n_rem=len(cfg.remainder))
 
 
 def init_run_state(cfg: ArchConfig, key: jax.Array,
-                   init_bits: Optional[float] = None) -> RunState:
-    man = containers.spec_for(cfg.compute_dtype).man_bits
-    bits = float(man if init_bits is None else init_bits)
-    n_rem = len(cfg.remainder)
-    return RunState(
-        key=key,
-        qm_act=jnp.full((cfg.n_periods,), bits, jnp.float32),
-        qm_w=jnp.full((cfg.n_periods,), bits, jnp.float32),
-        qm_act_rem=jnp.full((n_rem,), bits, jnp.float32),
-        qm_w_rem=jnp.full((n_rem,), bits, jnp.float32),
-        bc_bits=jnp.asarray(man, jnp.int32),
-    )
+                   policy=None) -> RunState:
+    """A fresh-state RunState for ``policy`` (default: full precision)."""
+    pol = policies.coerce(policy)
+    dims = scope_dims(cfg)
+    st = pol.init_state(dims)
+    cview = pol.control_view(st.ctrl, dims)
+    return RunState(key=key, pol=pol.forward_view(st.learn, cview, dims))
 
 
 def _zero_moe_aux():
@@ -70,20 +72,35 @@ def _kvcache():
 
 
 class DecoderModel:
-    def __init__(self, cfg: ArchConfig,
-                 policy: sfp.SFPPolicy = sfp.SFPPolicy(), mesh=None,
+    def __init__(self, cfg: ArchConfig, policy=None, mesh=None,
                  rules=None, kv_container: Optional[str] = None):
-        """``kv_container`` selects a registry codec for the serving KV
-        cache: prefill packs the cache, decode splices packed token rows
-        and attends through the fused decompress-attend kernel (SFP codecs
-        on pallas/interpret) or the unpack fallback. None = raw bf16/fp32
-        cache."""
+        """``policy`` is a precision policy: a ``policies.Policy``, a
+        registry name (``"qm"``, ``"qm+qe"``, ...), a legacy
+        ``core.sfp.SFPPolicy`` (deprecated shim), or None for full
+        precision. ``kv_container`` selects a registry codec for the
+        serving KV cache: prefill packs the cache, decode splices packed
+        token rows and attends through the fused decompress-attend kernel
+        (SFP codecs on pallas/interpret) or the unpack fallback. None =
+        raw bf16/fp32 cache."""
         self.cfg = cfg
-        self.policy = policy
+        self.policy = policies.coerce(policy)
         self.mesh = mesh  # enables SPMD-manual paths (sharded embed lookup)
         self.rules = rules
         self.kv_container = kv_container
         self.man_bits = containers.spec_for(cfg.compute_dtype).man_bits
+        self.dims = scope_dims(cfg)
+
+    def run_state(self, key: jax.Array,
+                  pstate: Optional[policies.PolicyState] = None) -> RunState:
+        """Build the forward view for this model's policy (fresh state if
+        ``pstate`` is None — the train step builds its own from live
+        state)."""
+        pol = self.policy
+        if pstate is None:
+            pstate = pol.init_state(self.dims)
+        cview = pol.control_view(pstate.ctrl, self.dims)
+        return RunState(key=key,
+                        pol=pol.forward_view(pstate.learn, cview, self.dims))
 
     # ------------------------------------------------------------------
     # Parameter construction (params / shapes / axes share one code path)
@@ -161,22 +178,22 @@ class DecoderModel:
         return self.build(common.MODE_AXES)
 
     # ------------------------------------------------------------------
-    # Weight-side Quantum Mantissa (exact VJP, paper §IV-A)
+    # Weight-side fake-quant (exact VJP for learned policies, paper §IV-A)
     # ------------------------------------------------------------------
 
-    def _quantize_weights(self, slot_params, n_w, key):
+    def _quantize_weights(self, slot_params, pslice, key):
         pol = self.policy
-        if not pol.enabled or not pol.quantize_weights or pol.mode == sfp.MODE_BITCHOP:
+        if not pol.quantizes_weights:
             return slot_params
 
         def quant(path, leaf):
             name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
             if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
                 return leaf
-            if pol.mode == sfp.MODE_QM:
-                salt = zlib.crc32(name.encode()) % (2 ** 31)
-                return qm.qm_quantize(leaf, n_w, jax.random.fold_in(key, salt))
-            return containers.truncate_mantissa(leaf, pol.static_weight_bits)
+            salt = zlib.crc32(name.encode()) % (2 ** 31)
+            return pol.quantize_weight(leaf, pslice,
+                                       jax.random.fold_in(key, salt),
+                                       self.dims)
 
         return jax.tree_util.tree_map_with_path(quant, slot_params)
 
@@ -185,9 +202,9 @@ class DecoderModel:
     # ------------------------------------------------------------------
 
     def _apply_slot(self, slot_params, h, kind, *, positions, prefix_len,
-                    n_w, key):
+                    pslice, key):
         cfg = self.cfg
-        sp = self._quantize_weights(slot_params, n_w, key)
+        sp = self._quantize_weights(slot_params, pslice, key)
         aux = _zero_moe_aux()
         extras_loss = jnp.zeros((), jnp.float32)
 
@@ -220,17 +237,7 @@ class DecoderModel:
     def _make_codec(self, dtype):
         del dtype  # carried by the packed representation itself
         pol = self.policy
-        man = self.man_bits
-
-        def act_bits(x):
-            if pol.mode == sfp.MODE_QM:
-                return containers.stochastic_bitlength(
-                    x["qm_act"], jax.random.fold_in(x["key"], 7), man)
-            if pol.mode == sfp.MODE_BITCHOP:
-                return x["bc_bits"]
-            if pol.mode == sfp.MODE_STATIC:
-                return jnp.asarray(pol.static_act_bits, jnp.int32)
-            return jnp.asarray(man, jnp.int32)
+        dims = self.dims
 
         if not pol.enabled:
             return stash.identity_compress, stash.identity_decompress, None
@@ -238,26 +245,25 @@ class DecoderModel:
         codec = codecs.get(pol.container)
 
         def compress(h, x):
-            # Fused quantize+pack: the bitlength signal rides into the pack
-            # kernel, one HBM read of the activation.
-            return codec.pack(h, bits=act_bits(x))
+            # Fused quantize+pack: the mantissa-bitlength signal rides into
+            # the pack kernel, one HBM read of the activation. Exponent
+            # truncation (QE/BitWave) happens on the way in — the packed
+            # container stores the already-clamped exponents, which is what
+            # Gecko-side accounting compresses.
+            d = pol.act_decision(x["pol"], x["key"], dims)
+            if pol.adapts_exponent:
+                h = containers.truncate_exponent(h, d.exp_bits)
+            return codec.pack(h, bits=d.man_bits)
 
         def decompress(c, x):
             del x
             return codec.unpack(c)
 
         stash_grad = None
-        if pol.mode == sfp.MODE_QM:
+        if pol.has_stash_grad:
             def stash_grad(dh, c, x):  # noqa: F811
                 h_q = decompress(c, x)
-                nf = jnp.clip(x["qm_act"], 0.0, float(man))
-                floor_n = jnp.floor(nf).astype(jnp.int32)
-                frac = nf - floor_n.astype(jnp.float32)
-                q_lo = containers.truncate_mantissa(h_q, floor_n)
-                diff = (h_q - q_lo).astype(jnp.float32)
-                dn = jnp.sum(dh.astype(jnp.float32) * diff) / jnp.maximum(
-                    frac, 0.05)
-                return {"qm_act": dn}
+                return {"pol": pol.stash_grad(dh, h_q, x["pol"], dims)}
 
         return compress, decompress, stash_grad
 
@@ -287,6 +293,8 @@ class DecoderModel:
 
         period = cfg.period
 
+        pol = self.policy
+
         def period_fn(carry, x):
             h, extras = carry
             aux_sum = _zero_moe_aux()
@@ -294,38 +302,35 @@ class DecoderModel:
                 h, eloss, aux = self._apply_slot(
                     x["params"][f"slot{i}"], h, kind,
                     positions=positions, prefix_len=P,
-                    n_w=x["qm_w"],
+                    pslice=x.get("pol"),
                     key=jax.random.fold_in(x["key"], i))
                 extras = extras + eloss
                 aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
             return (h, extras), aux_sum
 
         keys = jax.random.split(run.key, cfg.n_periods)
-        xs = {"params": params["periods"], "key": keys,
-              "qm_act": run.qm_act, "qm_w": run.qm_w,
-              "bc_bits": jnp.broadcast_to(run.bc_bits, (cfg.n_periods,))}
+        xs = {"params": params["periods"], "key": keys}
+        if pol.enabled:
+            xs["pol"] = pol.scan_slices(run.pol, self.dims)
 
         extras0 = jnp.zeros((), jnp.float32)
         (h, extras), aux = stash.sfp_scan(
             period_fn, compress, decompress, (h, extras0), xs,
             stash_grad=stash_grad)
 
-        # Remainder layers (unrolled, fake-quant stash boundary).
+        # Remainder layers (unrolled, decision applied straight-through at
+        # the stash boundary).
         for i, kind in enumerate(cfg.remainder):
-            hx = {"qm_act": run.qm_act_rem[i], "key":
-                  jax.random.fold_in(run.key, 1000 + i),
-                  "bc_bits": run.bc_bits}
-            if self.policy.enabled:
-                nb = (containers.stochastic_bitlength(
-                    hx["qm_act"], jax.random.fold_in(hx["key"], 7),
-                    self.man_bits)
-                    if self.policy.mode == sfp.MODE_QM else
-                    run.bc_bits if self.policy.mode == sfp.MODE_BITCHOP
-                    else jnp.asarray(self.policy.static_act_bits, jnp.int32))
-                h = sfp._ste_truncate(h, nb)
+            rs = (pol.rem_slice(run.pol, i, self.dims) if pol.enabled
+                  else None)
+            if pol.enabled:
+                d = pol.act_decision(
+                    rs, jax.random.fold_in(run.key, 1000 + i), self.dims)
+                h = policies.apply_decision_ste(
+                    h, d, self.dims, adapts_exponent=pol.adapts_exponent)
             h, eloss, _aux = self._apply_slot(
                 params["rem"][f"slot{i}"], h, kind, positions=positions,
-                prefix_len=P, n_w=run.qm_w_rem[i],
+                prefix_len=P, pslice=rs,
                 key=jax.random.fold_in(run.key, 2000 + i))
             extras = extras + eloss
 

@@ -1,0 +1,48 @@
+"""Unified precision-policy API (see base.py for the contract).
+
+Every precision-adaptation path in the system — the activation-stash
+bitlength signal, weight fake-quant, the footprint regularizer, the loss
+controller — resolves its strategy here:
+
+    policy = policies.get("qm")          # or "qe", "bitwave", ...
+    policy = policies.get("qm+qe",       # compose: learn mantissa AND
+                          container="sfp8", gamma=0.1)  # exponent bits
+    state  = policy.init_state(dims)     # PolicyState(learn, ctrl) pytree
+    d      = policy.act_decision(pslice, key, dims)  # PrecisionDecision
+
+Registered policies:
+  none    — full-precision baseline (every hook is a no-op)
+  static  — fixed bitlengths (Gist-style ablation)
+  qm      — Quantum Mantissa: learned per-scope mantissa bits (§IV-A)
+  qe      — Quantum Exponent: learned per-scope exponent bits (§IV)
+  bitchop — loss-EMA controlled network-wide mantissa bits (§IV-B)
+  bitwave — BitChop's controller driving mantissa + exponent bits
+
+New strategies (AdaptivFloat-style per-tensor exponent ranges, Flexpoint
+shared-exponent controllers, ...) subclass ``Policy`` and register via
+``policies.register()``; they become available to the model, train step,
+launchers, and benchmarks at once.
+"""
+from repro.policies.base import (Policy, PolicyState, PrecisionDecision,
+                                 ScopeDims, apply_decision_ste, coerce,
+                                 full_decision, get, modeled_footprint,
+                                 names, register, ste_truncate)
+from repro.policies.bitwave import BitChopPolicy, BitWavePolicy
+from repro.policies.composite import CompositePolicy
+from repro.policies.quantum import QEPolicy, QMPolicy
+from repro.policies.static import NonePolicy, StaticPolicy
+
+register(NonePolicy)
+register(StaticPolicy)
+register(QMPolicy)
+register(QEPolicy)
+register(BitChopPolicy)
+register(BitWavePolicy)
+
+__all__ = [
+    "Policy", "PolicyState", "PrecisionDecision", "ScopeDims",
+    "apply_decision_ste", "coerce", "full_decision", "get",
+    "modeled_footprint", "names", "register", "ste_truncate",
+    "NonePolicy", "StaticPolicy", "QMPolicy", "QEPolicy",
+    "BitChopPolicy", "BitWavePolicy", "CompositePolicy",
+]

@@ -1,0 +1,321 @@
+"""Precision-policy registry: the one place adaptation strategies live.
+
+The paper adapts floating-point containers along three axes — which
+datatype, on which tensor, and over time. A ``Policy`` is one strategy for
+answering those questions: it owns a state pytree (learned bitlength
+parameters and/or controller registers), decides a per-tensor-scope
+``PrecisionDecision{man_bits, exp_bits}`` inside the jitted train step,
+quantizes activations/weights differentiably, and updates its state from
+gradients (``update_learn``) and/or the loss signal (``observe``).
+
+Mirrors the ``codecs`` registry design (PR 1): policies register under a
+name, every consumer — the decoder model's stash/weight paths, the train
+step, launchers, benchmarks — resolves strategies through ``get()``, and
+``"a+b"`` names compose policies (e.g. ``"qm+qe"`` learns mantissa AND
+exponent bitlengths in one run). Nothing outside this package dispatches
+on policy mode strings.
+
+State layout contract: ``PolicyState(learn, ctrl)`` where ``learn`` is the
+differentiable pytree (fed to ``jax.grad`` alongside the model params and
+SGD-updated by the policy) and ``ctrl`` is the non-differentiable
+controller pytree (updated once per step from the observed loss). Scope
+views handed to the model carry an ``"act"``/``"w"`` leaf per tensor
+group; the model never looks inside them — it only forwards them to the
+policy's methods.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+
+
+class PrecisionDecision(NamedTuple):
+    """Integer bitlengths for one tensor scope this step (both traced)."""
+
+    man_bits: jax.Array  # () int32, mantissa bits to keep
+    exp_bits: jax.Array  # () int32, exponent bits to keep
+
+
+class PolicyState(NamedTuple):
+    """Everything a policy carries between steps.
+
+    ``learn``: differentiable pytree (bitlength parameters); ``ctrl``:
+    controller pytree (loss EMAs, integer bitlengths, step counters).
+    Either may be an empty dict. Checkpointed generically as part of
+    TrainState.
+    """
+
+    learn: Any
+    ctrl: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopeDims:
+    """Static scope geometry + container limits a policy sizes itself to."""
+
+    n_periods: int
+    n_rem: int
+    man_bits: int  # source container mantissa bits (7 bf16, 23 fp32)
+    exp_bits: int  # source container exponent bits (8 bf16/fp32)
+
+    @classmethod
+    def for_dtype(cls, dtype, n_periods: int = 0, n_rem: int = 0
+                  ) -> "ScopeDims":
+        spec = containers.spec_for(dtype)
+        return cls(n_periods=n_periods, n_rem=n_rem,
+                   man_bits=spec.man_bits, exp_bits=spec.exp_bits)
+
+
+def full_decision(dims: ScopeDims) -> PrecisionDecision:
+    return PrecisionDecision(
+        man_bits=jnp.asarray(dims.man_bits, jnp.int32),
+        exp_bits=jnp.asarray(dims.exp_bits, jnp.int32))
+
+
+@jax.custom_vjp
+def _ste_truncate(x, n):
+    return containers.truncate_mantissa(x, n)
+
+
+_ste_truncate.defvjp(lambda x, n: (containers.truncate_mantissa(x, n), None),
+                     lambda _, g: (g, None))
+
+
+@jax.custom_vjp
+def _ste_truncate_exp(x, e):
+    return containers.truncate_exponent(x, e)
+
+
+_ste_truncate_exp.defvjp(
+    lambda x, e: (containers.truncate_exponent(x, e), None),
+    lambda _, g: (g, None))
+
+
+def ste_truncate(x: jax.Array, n) -> jax.Array:
+    """Mantissa truncation with a straight-through gradient (§IV-A1)."""
+    return _ste_truncate(x, n)
+
+
+def apply_decision_ste(x: jax.Array, d: PrecisionDecision,
+                       dims: ScopeDims, *, adapts_exponent: bool
+                       ) -> jax.Array:
+    """Realize a decision on a tensor, straight-through in x.
+
+    The exponent truncation is skipped entirely for mantissa-only policies
+    (``adapts_exponent`` is static) so their compute graphs — and hence
+    their quantized values — are bit-identical to the pre-registry
+    implementations.
+    """
+    x = _ste_truncate(x, d.man_bits)
+    if adapts_exponent:
+        x = _ste_truncate_exp(x, d.exp_bits)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy(abc.ABC):
+    """One precision-adaptation strategy; instances are static jit closures.
+
+    Frozen/hashable: hyper-parameters ride on the instance (the registry
+    stores classes; ``get(name, **overrides)`` constructs). All methods
+    are pure pytree functions, safe inside jit/scan/grad.
+    """
+
+    container: str = "sfp8"        # realized stash container (codec name)
+    quantize_weights: bool = True  # weight-side fake-quant at use sites
+
+    # Class attributes, not dataclass fields (no annotations on purpose):
+    name = "?"
+    enabled = True            # False -> model skips all hooks
+    adapts_exponent = False   # True -> stash/STE apply exponent truncation
+    has_stash_grad = False    # True -> stash-side bitlength estimator
+    requires_act_bits = False  # CNN path: skip when no bits are provided
+
+    @property
+    def quantizes_weights(self) -> bool:
+        """Effective weight-side switch (controller policies override)."""
+        return self.enabled and self.quantize_weights
+
+    # -- state ----------------------------------------------------------
+
+    def init_state(self, dims: ScopeDims) -> PolicyState:
+        return PolicyState(learn={}, ctrl={})
+
+    # -- views threaded through the jitted step --------------------------
+
+    def control_view(self, ctrl: Any, dims: ScopeDims) -> Any:
+        """Decision inputs derived from controller state (outside grad)."""
+        return {}
+
+    def forward_view(self, learn: Any, cview: Any, dims: ScopeDims) -> Any:
+        """The per-forward pytree the model threads (RunState.pol).
+
+        ``learn`` must pass through untouched wherever it is used so that
+        jax.grad w.r.t. learn sees the forward's uses of it.
+        """
+        return {}
+
+    def scan_slices(self, view: Any, dims: ScopeDims) -> Any:
+        """Per-period slices: a pytree with leading dim n_periods."""
+        return {}
+
+    def rem_slice(self, view: Any, i: int, dims: ScopeDims) -> Any:
+        """The scope view of remainder layer ``i``."""
+        return {}
+
+    # -- in-step decisions & quantizers ----------------------------------
+
+    def act_decision(self, pslice: Any, key: jax.Array, dims: ScopeDims
+                     ) -> PrecisionDecision:
+        """Resolve the activation decision for one scope (may draw once)."""
+        return full_decision(dims)
+
+    def quantize_act(self, x: jax.Array, pslice: Any, key: jax.Array,
+                     dims: ScopeDims) -> jax.Array:
+        """Differentiable activation quantization at a use site (CNN path:
+        gradients flow to the bitlength parameters where the policy learns
+        them)."""
+        return x
+
+    def quantize_weight(self, w: jax.Array, pslice: Any, key: jax.Array,
+                        dims: ScopeDims) -> jax.Array:
+        """Differentiable weight fake-quant at the use site."""
+        return w
+
+    def stash_grad(self, dh: jax.Array, h_q: jax.Array, pslice: Any,
+                   dims: ScopeDims) -> Any:
+        """Bitlength cotangents estimated from the realized stash.
+
+        Returns a pytree matching ``pslice`` (float leaves; zeros where no
+        estimate applies). Only called when ``has_stash_grad``.
+        """
+        return jax.tree.map(lambda a: jnp.zeros((), jnp.float32), pslice)
+
+    # -- loss & per-step state updates -----------------------------------
+
+    def penalty(self, learn: Any, lam: Dict[str, jax.Array], step: jax.Array,
+                dims: ScopeDims) -> jax.Array:
+        """Footprint-regularizer term added to the loss (eq. 7)."""
+        return jnp.zeros((), jnp.float32)
+
+    def update_learn(self, learn: Any, grads: Any, dims: ScopeDims) -> Any:
+        """Apply accumulated gradients to the learned parameters."""
+        return learn
+
+    def observe(self, ctrl: Any, loss: jax.Array, lr_changed,
+                dims: ScopeDims) -> Any:
+        """Controller step fed by the (pre-penalty) loss (eq. 8-9)."""
+        return ctrl
+
+    # -- reporting --------------------------------------------------------
+
+    def metrics(self, state: PolicyState, dims: ScopeDims
+                ) -> Dict[str, jax.Array]:
+        """Scalar metrics merged into the train-step metrics dict."""
+        return {}
+
+    def snapshot(self, state: PolicyState) -> Dict[str, Any]:
+        """Host-side trajectory record (arrays allowed; benchmarks/figures)."""
+        return {}
+
+    def decision_summary(self, state: PolicyState, dims: ScopeDims
+                         ) -> Dict[str, float]:
+        """Mean (man_bits, exp_bits) the policy currently decides —
+        deployment-style, rounded up for learned fractional bitlengths."""
+        return {"man_bits": float(dims.man_bits),
+                "exp_bits": float(dims.exp_bits)}
+
+
+def modeled_footprint(policy: Policy, state: PolicyState, dims: ScopeDims
+                      ) -> Dict[str, float]:
+    """Modeled stash bits/value under the policy's current decisions.
+
+    sign + mantissa + exponent per value (metadata is negligible —
+    2 scalars/scope). Exponent-bit savings from QE/BitWave show up here;
+    Gecko typically compresses the remaining exponents further, so this is
+    an upper bound on the realized footprint.
+    """
+    d = policy.decision_summary(state, dims)
+    bits = 1.0 + d["man_bits"] + d["exp_bits"]
+    return {
+        "man_bits": d["man_bits"],
+        "exp_bits": d["exp_bits"],
+        "bits_per_value": bits,
+        "vs_bf16": bits / 16.0,
+        "vs_fp32": bits / 32.0,
+    }
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(cls: type) -> type:
+    """Register a Policy subclass under its ``name`` (last wins)."""
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _construct(name: str, kwargs: Dict[str, Any]):
+    cls = _REGISTRY[name]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in kwargs.items() if k in fields}), fields
+
+
+def get(name: str, _strict: bool = True, **kwargs) -> Policy:
+    """Resolve a policy by name; ``"a+b"`` composes.
+
+    Keyword overrides are routed to the sub-policies that declare the
+    matching dataclass field (``container`` reaches all of them); an
+    override no policy consumes raises, catching typos (``_strict=False``
+    drops them instead — the legacy-SFPPolicy shim path).
+    """
+    parts = [p.strip() for p in name.split("+") if p.strip()]
+    if not parts:
+        raise KeyError(f"empty policy name {name!r}")
+    unknown = [p for p in parts if p not in _REGISTRY]
+    if unknown:
+        raise KeyError(
+            f"unknown precision policy {unknown[0]!r}; registered: "
+            f"{list(names())} (composable with '+')")
+    if len(set(parts)) != len(parts):
+        raise KeyError(f"duplicate sub-policy in {name!r}")
+    built, consumed = [], set()
+    for p in parts:
+        pol, fields = _construct(p, kwargs)
+        built.append(pol)
+        consumed |= fields
+    extra = set(kwargs) - consumed
+    if extra and _strict:
+        raise TypeError(f"policy {name!r} accepts no option(s) {sorted(extra)}")
+    if len(built) == 1:
+        return built[0]
+    from repro.policies.composite import CompositePolicy
+    return CompositePolicy(policies=tuple(built))
+
+
+def coerce(policy) -> Policy:
+    """Accept a Policy, a registry name, None, or a legacy SFPPolicy."""
+    if policy is None:
+        return get("none")
+    if isinstance(policy, Policy):
+        return policy
+    if isinstance(policy, str):
+        return get(policy)
+    to_policy = getattr(policy, "to_policy", None)
+    if callable(to_policy):  # legacy core.sfp.SFPPolicy shim
+        return to_policy()
+    raise TypeError(f"cannot interpret {policy!r} as a precision policy")

@@ -1,0 +1,139 @@
+"""Composition: run several policies on the same tensors in one step.
+
+``policies.get("qm+qe")`` builds one of these. Sub-policy state is
+namespaced by sub-policy name inside one PolicyState; decisions combine
+field-wise by ``min`` (each sub-policy constrains the field it adapts and
+leaves the other at full width), quantizers apply in registration order
+(mantissa truncation before exponent clamping for "qm+qe", so saturation
+cannot reintroduce dropped mantissa bits), and every per-call PRNG key is
+folded with the sub-policy index so stochastic draws decorrelate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.policies import base
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositePolicy(base.Policy):
+    policies: Tuple[base.Policy, ...] = ()
+
+    @property
+    def name(self):  # type: ignore[override]
+        return "+".join(p.name for p in self.policies)
+
+    @property
+    def enabled(self):  # type: ignore[override]
+        return any(p.enabled for p in self.policies)
+
+    @property
+    def adapts_exponent(self):  # type: ignore[override]
+        return any(p.adapts_exponent for p in self.policies)
+
+    @property
+    def has_stash_grad(self):  # type: ignore[override]
+        return any(p.has_stash_grad for p in self.policies)
+
+    @property
+    def requires_act_bits(self):  # type: ignore[override]
+        return any(p.requires_act_bits for p in self.policies)
+
+    @property
+    def quantizes_weights(self):  # type: ignore[override]
+        return any(p.quantizes_weights for p in self.policies)
+
+    def _sub(self, fn):
+        return {p.name: fn(p) for p in self.policies}
+
+    def init_state(self, dims):
+        states = self._sub(lambda p: p.init_state(dims))
+        return base.PolicyState(
+            learn={k: s.learn for k, s in states.items()},
+            ctrl={k: s.ctrl for k, s in states.items()})
+
+    def control_view(self, ctrl, dims):
+        return self._sub(lambda p: p.control_view(ctrl[p.name], dims))
+
+    def forward_view(self, learn, cview, dims):
+        return self._sub(
+            lambda p: p.forward_view(learn[p.name], cview[p.name], dims))
+
+    def scan_slices(self, view, dims):
+        return self._sub(lambda p: p.scan_slices(view[p.name], dims))
+
+    def rem_slice(self, view, i, dims):
+        return self._sub(lambda p: p.rem_slice(view[p.name], i, dims))
+
+    def act_decision(self, pslice, key, dims):
+        man = jnp.asarray(dims.man_bits, jnp.int32)
+        exp = jnp.asarray(dims.exp_bits, jnp.int32)
+        for i, p in enumerate(self.policies):
+            d = p.act_decision(pslice[p.name], jax.random.fold_in(key, i),
+                               dims)
+            man = jnp.minimum(man, d.man_bits)
+            exp = jnp.minimum(exp, d.exp_bits)
+        return base.PrecisionDecision(man_bits=man, exp_bits=exp)
+
+    def quantize_act(self, x, pslice, key, dims):
+        for i, p in enumerate(self.policies):
+            x = p.quantize_act(x, pslice[p.name], jax.random.fold_in(key, i),
+                               dims)
+        return x
+
+    def quantize_weight(self, w, pslice, key, dims):
+        for i, p in enumerate(self.policies):
+            if p.quantizes_weights:
+                w = p.quantize_weight(w, pslice[p.name],
+                                      jax.random.fold_in(key, i), dims)
+        return w
+
+    def stash_grad(self, dh, h_q, pslice, dims):
+        return self._sub(lambda p: p.stash_grad(dh, h_q, pslice[p.name], dims)
+                         if p.has_stash_grad
+                         else jax.tree.map(lambda a: jnp.zeros_like(a),
+                                           pslice[p.name]))
+
+    def penalty(self, learn, lam, step, dims):
+        acc = jnp.zeros((), jnp.float32)
+        for p in self.policies:
+            acc = acc + p.penalty(learn[p.name], lam, step, dims)
+        return acc
+
+    def update_learn(self, learn, grads, dims):
+        return self._sub(
+            lambda p: p.update_learn(learn[p.name], grads[p.name], dims))
+
+    def observe(self, ctrl, loss, lr_changed, dims):
+        return self._sub(lambda p: p.observe(ctrl[p.name], loss, lr_changed,
+                                             dims))
+
+    def metrics(self, state, dims):
+        out = {}
+        for p in self.policies:
+            out.update(p.metrics(
+                base.PolicyState(learn=state.learn[p.name],
+                                 ctrl=state.ctrl[p.name]), dims))
+        return out
+
+    def snapshot(self, state):
+        out = {}
+        for p in self.policies:
+            out.update(p.snapshot(
+                base.PolicyState(learn=state.learn[p.name],
+                                 ctrl=state.ctrl[p.name])))
+        return out
+
+    def decision_summary(self, state, dims):
+        man, exp = float(dims.man_bits), float(dims.exp_bits)
+        for p in self.policies:
+            d = p.decision_summary(
+                base.PolicyState(learn=state.learn[p.name],
+                                 ctrl=state.ctrl[p.name]), dims)
+            man = min(man, d["man_bits"])
+            exp = min(exp, d["exp_bits"])
+        return {"man_bits": man, "exp_bits": exp}

@@ -1,0 +1,218 @@
+"""Learned-bitlength policies: Quantum Mantissa and Quantum Exponent.
+
+Both learn one real-valued bitlength parameter per tensor scope (per
+period x {act, w}, plus remainder layers) jointly with the model: the
+data gradient flows through the stochastic quantizer's custom VJP
+(core.quantum_mantissa / core.quantum_exponent), a footprint-weighted
+penalty (eq. 7) pushes bits down, and the policy applies a plain SGD step
+clipped to the container's range. ``policies.get("qm+qe")`` composes them
+to learn both fields at once — the paper's headline 4.74x configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers, quantum_exponent as qe, \
+    quantum_mantissa as qm
+from repro.policies import base
+
+# Per-scope Bernoulli-draw salts: act draws fold 7 (the pre-registry
+# constant — decisions must stay bit-identical for "qm"), QE act draws
+# fold 8 so composed policies decorrelate.
+QM_ACT_SALT = 7
+QE_ACT_SALT = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class _LearnedBitsPolicy(base.Policy):
+    """Shared machinery: state layout, SGD update, penalty, estimators."""
+
+    gamma: float = 0.1            # regularizer strength (eq. 7)
+    init_bits: Optional[float] = None  # None -> container's full field
+    lr: float = 0.01              # SGD learning rate for the bitlengths
+    min_bits: float = 0.0
+    # step thresholds at which gamma decays 10x (paper: epochs 0/30/60)
+    gamma_decay_steps: Tuple[int, ...] = ()
+
+    # subclass hooks ----------------------------------------------------
+    def _max_bits(self, dims: base.ScopeDims) -> int:
+        raise NotImplementedError
+
+    def _min_bits(self, dims: base.ScopeDims) -> float:
+        return self.min_bits
+
+    def _truncate(self, x, n_int):
+        raise NotImplementedError
+
+    def _quantize(self, x, n, key):
+        raise NotImplementedError
+
+    # state -------------------------------------------------------------
+
+    def init_state(self, dims: base.ScopeDims) -> base.PolicyState:
+        bits = (float(self._max_bits(dims)) if self.init_bits is None
+                else float(self.init_bits))
+        full = lambda n: jnp.full((n,), bits, jnp.float32)
+        learn = {"act": full(dims.n_periods), "w": full(dims.n_periods),
+                 "act_rem": full(dims.n_rem), "w_rem": full(dims.n_rem)}
+        return base.PolicyState(learn=learn, ctrl={})
+
+    def forward_view(self, learn, cview, dims):
+        return learn
+
+    def scan_slices(self, view, dims):
+        return {"act": view["act"], "w": view["w"]}
+
+    def rem_slice(self, view, i, dims):
+        return {"act": view["act_rem"][i], "w": view["w_rem"][i]}
+
+    # quantizers ---------------------------------------------------------
+
+    def quantize_act(self, x, pslice, key, dims):
+        return self._quantize(x, pslice["act"], key)
+
+    def quantize_weight(self, w, pslice, key, dims):
+        return self._quantize(w, pslice["w"], key)
+
+    def stash_grad(self, dh, h_q, pslice, dims):
+        """Importance-weighted bitlength estimate from the realized stash.
+
+        Hardware cannot see bits it never stored (DESIGN.md D8): compare
+        the stash against re-truncation at floor(n) — the mass that a
+        one-bit-tighter budget would lose — and scale by 1/frac, the
+        inverse probability the extra bit was drawn.
+        """
+        lo = self._min_bits(dims)
+        nf = jnp.clip(pslice["act"], lo, float(self._max_bits(dims)))
+        floor_n = jnp.floor(nf).astype(jnp.int32)
+        frac = nf - floor_n.astype(jnp.float32)
+        q_lo = self._truncate(h_q, floor_n)
+        diff = (h_q - q_lo).astype(jnp.float32)
+        dn = jnp.sum(dh.astype(jnp.float32) * diff) / jnp.maximum(frac, 0.05)
+        return {"act": dn, "w": jnp.zeros((), jnp.float32)}
+
+    # loss & updates -----------------------------------------------------
+
+    def gamma_at(self, step: jax.Array) -> jax.Array:
+        g = jnp.asarray(self.gamma, jnp.float32)
+        for s in self.gamma_decay_steps:
+            g = jnp.where(step >= s, g * 0.1, g)
+        return g
+
+    def penalty(self, learn, lam, step, dims):
+        top = float(self._max_bits(dims))
+        gamma = self.gamma_at(step)
+        return gamma * (
+            jnp.sum(lam["act"] * jnp.clip(learn["act"], 0, top))
+            + jnp.sum(lam["w"] * jnp.clip(learn["w"], 0, top))
+            + jnp.sum(lam["act_rem"] * jnp.clip(learn["act_rem"], 0, top))
+            + jnp.sum(lam["w_rem"] * jnp.clip(learn["w_rem"], 0, top)))
+
+    def update_learn(self, learn, grads, dims):
+        top = float(self._max_bits(dims))
+        lo = self._min_bits(dims)
+        return {k: jnp.clip(learn[k] - self.lr * grads[k], lo, top)
+                for k in learn}
+
+    # reporting ----------------------------------------------------------
+
+    def _means(self, state, dims):
+        top = float(self._max_bits(dims))
+        return (jnp.mean(jnp.clip(state.learn["act"], 0, top)),
+                jnp.mean(jnp.clip(state.learn["w"], 0, top)))
+
+    def _deployed_mean(self, state, dims) -> float:
+        """Deployment bits: learned fractional bitlengths round up (§IV-A4)."""
+        lo = self._min_bits(dims)
+        top = float(self._max_bits(dims))
+        vals = [jnp.clip(state.learn[k], lo, top)
+                for k in ("act", "act_rem") if state.learn[k].size]
+        cat = jnp.concatenate([v.reshape(-1) for v in vals])
+        return float(jnp.mean(jnp.ceil(cat)))
+
+
+@dataclasses.dataclass(frozen=True)
+class QMPolicy(_LearnedBitsPolicy):
+    """Quantum Mantissa (§IV-A): learned per-scope mantissa bitlengths."""
+
+    name = "qm"
+    has_stash_grad = True
+    requires_act_bits = True
+
+    def _max_bits(self, dims):
+        return dims.man_bits
+
+    def _truncate(self, x, n_int):
+        return containers.truncate_mantissa(x, n_int)
+
+    def _quantize(self, x, n, key):
+        return qm.qm_quantize(x, n, key)
+
+    def act_decision(self, pslice, key, dims):
+        n = containers.stochastic_bitlength(
+            pslice["act"], jax.random.fold_in(key, QM_ACT_SALT),
+            dims.man_bits)
+        return base.PrecisionDecision(
+            man_bits=n, exp_bits=jnp.asarray(dims.exp_bits, jnp.int32))
+
+    def metrics(self, state, dims):
+        act, w = self._means(state, dims)
+        return {"qm_act_mean": act, "qm_w_mean": w}
+
+    def snapshot(self, state):
+        return {"act": state.learn["act"], "w": state.learn["w"]}
+
+    def decision_summary(self, state, dims):
+        return {"man_bits": self._deployed_mean(state, dims),
+                "exp_bits": float(dims.exp_bits)}
+
+
+@dataclasses.dataclass(frozen=True)
+class QEPolicy(_LearnedBitsPolicy):
+    """Quantum Exponent (§IV): learned per-scope exponent bitlengths.
+
+    The estimator mirrors qm_quantize, backed by containers.
+    truncate_exponent — the reduced range flushes underflow to zero and
+    saturates overflow. Defaults are gentler than QM's: the exponent field
+    is smaller, and flushing a needed binade hurts more than a dropped
+    mantissa bit.
+    """
+
+    gamma: float = 0.05
+    min_bits: float = float(containers.MIN_EXP_BITS)
+
+    name = "qe"
+    adapts_exponent = True
+    has_stash_grad = True
+    requires_act_bits = True
+
+    def _max_bits(self, dims):
+        return dims.exp_bits
+
+    def _truncate(self, x, e_int):
+        return containers.truncate_exponent(x, e_int)
+
+    def _quantize(self, x, e, key):
+        return qe.qe_quantize(x, e, key)
+
+    def act_decision(self, pslice, key, dims):
+        e = containers.stochastic_bitlength(
+            pslice["act"], jax.random.fold_in(key, QE_ACT_SALT),
+            dims.exp_bits, min_bits=containers.MIN_EXP_BITS)
+        return base.PrecisionDecision(
+            man_bits=jnp.asarray(dims.man_bits, jnp.int32), exp_bits=e)
+
+    def metrics(self, state, dims):
+        act, w = self._means(state, dims)
+        return {"qe_act_mean": act, "qe_w_mean": w}
+
+    def snapshot(self, state):
+        return {"act_e": state.learn["act"], "w_e": state.learn["w"]}
+
+    def decision_summary(self, state, dims):
+        return {"man_bits": float(dims.man_bits),
+                "exp_bits": self._deployed_mean(state, dims)}

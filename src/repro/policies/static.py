@@ -1,0 +1,73 @@
+"""Baseline policies: no adaptation, and fixed (Gist-style) bitlengths."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+from repro.policies import base
+
+
+@dataclasses.dataclass(frozen=True)
+class NonePolicy(base.Policy):
+    """Full-precision baseline: every hook is a no-op."""
+
+    name = "none"
+    enabled = False
+
+    def decision_summary(self, state, dims):
+        return {"man_bits": float(dims.man_bits),
+                "exp_bits": float(dims.exp_bits)}
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPolicy(base.Policy):
+    """Fixed bitlengths everywhere (the paper's Gist-style ablation).
+
+    ``static_exp_bits=None`` keeps the container's full exponent — the
+    pre-registry behaviour; setting it exercises the same truncation path
+    QE/BitWave drive adaptively.
+    """
+
+    static_act_bits: int = 3
+    static_weight_bits: int = 7
+    static_exp_bits: Optional[int] = None
+
+    name = "static"
+
+    @property
+    def adapts_exponent(self):  # type: ignore[override]
+        return self.static_exp_bits is not None
+
+    def forward_view(self, learn, cview, dims):
+        return {}
+
+    def _exp(self, dims) -> jax.Array:
+        e = dims.exp_bits if self.static_exp_bits is None else \
+            self.static_exp_bits
+        return jnp.asarray(e, jnp.int32)
+
+    def act_decision(self, pslice, key, dims):
+        return base.PrecisionDecision(
+            man_bits=jnp.asarray(self.static_act_bits, jnp.int32),
+            exp_bits=self._exp(dims))
+
+    def quantize_act(self, x, pslice, key, dims):
+        return base.apply_decision_ste(
+            x, self.act_decision(pslice, key, dims), dims,
+            adapts_exponent=self.adapts_exponent)
+
+    def quantize_weight(self, w, pslice, key, dims):
+        w = containers.truncate_mantissa(w, self.static_weight_bits)
+        if self.adapts_exponent:
+            w = containers.truncate_exponent(w, self.static_exp_bits)
+        return w
+
+    def decision_summary(self, state, dims):
+        return {"man_bits": float(self.static_act_bits),
+                "exp_bits": float(self.static_exp_bits
+                                  if self.static_exp_bits is not None
+                                  else dims.exp_bits)}

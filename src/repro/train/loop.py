@@ -34,6 +34,17 @@ class LoopConfig:
     metrics_file: Optional[str] = None
     step_deadline_s: Optional[float] = None  # straggler watchdog
     max_restarts: int = 3
+    # JSON-able run metadata recorded in every checkpoint manifest (e.g.
+    # the precision-policy name, so restores can sanity-check the state
+    # tree they are about to fill).
+    ckpt_extra: Optional[Dict[str, Any]] = None
+
+
+def _scalarize(v):
+    """Metrics may be scalars or small arrays (per-scope bitlength
+    trajectories); both must survive the JSONL sink."""
+    a = np.asarray(v)
+    return a.tolist() if a.ndim else float(a)
 
 
 @dataclasses.dataclass
@@ -76,7 +87,7 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
                     fault_hook(step)
                 t0 = time.time()
                 state, metrics = train_step(state, batch)
-                metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                metrics = {k: _scalarize(v) for k, v in metrics.items()}
                 dt = time.time() - t0
                 metrics["step"] = step
                 metrics["step_time_s"] = dt
@@ -90,7 +101,8 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
                         f.write(json.dumps(metrics) + "\n")
                 step += 1
                 if mgr is not None and step % cfg.ckpt_every == 0:
-                    mgr.save(step, state, blocking=False)
+                    mgr.save(step, state, blocking=False,
+                             extra=cfg.ckpt_extra)
         except KeyboardInterrupt:
             raise
         except Exception as e:
@@ -108,6 +120,6 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
             continue
 
     if mgr is not None:
-        mgr.save(step, state, blocking=True)
+        mgr.save(step, state, blocking=True, extra=cfg.ckpt_extra)
     return LoopResult(state=state, history=history, restarts=restarts,
                       straggler_steps=stragglers)

@@ -4,34 +4,18 @@ from __future__ import annotations
 from typing import Any, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import bitchop
 from repro.optim import adamw
-
-
-class QMState(NamedTuple):
-    """Learned bitlength parameters (fp32) — paper eq. 7's n_i."""
-
-    act: jax.Array       # (n_periods,)
-    w: jax.Array         # (n_periods,)
-    act_rem: jax.Array   # (n_rem,)
-    w_rem: jax.Array     # (n_rem,)
+from repro.policies import PolicyState
 
 
 class TrainState(NamedTuple):
     params: Any
     opt: adamw.AdamWState
-    qm: QMState
-    bc: bitchop.BitChopState
+    # Precision-policy state (PolicyState(learn, ctrl)): learned bitlength
+    # parameters + controller registers, opaque to the loop/checkpointing.
+    pstate: PolicyState
     step: jax.Array
     rng: jax.Array
     # error-feedback residual for compressed cross-pod gradient all-reduce
     grad_residual: Any
-
-
-def qm_init(cfg, init_bits: float) -> QMState:
-    n_rem = len(cfg.remainder)
-    full = lambda n: jnp.full((n,), init_bits, jnp.float32)
-    return QMState(act=full(cfg.n_periods), w=full(cfg.n_periods),
-                   act_rem=full(n_rem), w_rem=full(n_rem))

@@ -1,16 +1,18 @@
-"""Train-step builder: microbatched grad accumulation + SFP integration.
+"""Train-step builder: microbatched grad accumulation + precision policies.
 
 One jitted function per (arch, shape, policy):
 
   * microbatch scan — grads accumulate across num_microbatches slices of the
     global batch; only the final accumulation feeds the optimizer, so FSDP
     reduce-scatters amortize across microbatches (collective overlap).
-  * Quantum Mantissa — bitlength params get their (exact weight-side +
-    stash-estimator activation-side) gradients plus the eq. 7 footprint
-    penalty, then an SGD step clipped to [0, man_bits].
-  * BitChop — the controller observes the (pre-penalty) loss each step and
-    adjusts the network-wide activation bitlength (eq. 8-9), holding full
-    precision around LR-schedule boundaries.
+  * precision policy — the model's stash/weight quantization is driven by
+    the policy's PrecisionDecisions; learned bitlength parameters
+    (Quantum Mantissa / Quantum Exponent) receive their exact weight-side
+    + stash-estimator gradients plus the eq. 7 footprint penalty, then the
+    policy's own SGD step; controller policies (BitChop / BitWave) observe
+    the (pre-penalty) loss once per step (eq. 8-9), holding full precision
+    around LR-schedule boundaries. The step never dispatches on policy
+    names — everything routes through the Policy interface.
   * optional gradient compression with error feedback for the cross-pod
     all-reduce (train/grad_compress.py).
 """
@@ -18,26 +20,23 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitchop, quantum_mantissa as qmod, sfp
 from repro.models.model import DecoderModel, RunState
 from repro.optim import adamw
 from repro.optim.schedule import Schedule
+from repro.policies import PolicyState
 from repro.train import grad_compress
-from repro.train.state import QMState, TrainState
+from repro.train.state import TrainState
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     opt: adamw.AdamWConfig = adamw.AdamWConfig()
     schedule: Schedule = Schedule()
-    qm: qmod.QMConfig = qmod.QMConfig()
-    bc: bitchop.BitChopConfig = bitchop.BitChopConfig()
     num_microbatches: int = 1
     grad_compress_bits: Optional[int] = None  # e.g. 4 -> bf16/4-bit-man wire
     grad_codec: str = "bit_exact"  # registry codec realizing the wire format
@@ -53,8 +52,7 @@ def init_state(model: DecoderModel, key: jax.Array, tc: TrainConfig
     return TrainState(
         params=params,
         opt=adamw.init(params),
-        qm=_qm_init(model, tc),
-        bc=bitchop.init(tc.bc),
+        pstate=model.policy.init_state(model.dims),
         step=jnp.zeros((), jnp.int32),
         rng=jax.random.fold_in(key, 999),
         grad_residual=(grad_compress.init_residual(params)
@@ -62,24 +60,16 @@ def init_state(model: DecoderModel, key: jax.Array, tc: TrainConfig
     )
 
 
-def _qm_init(model: DecoderModel, tc: TrainConfig) -> QMState:
-    cfg = model.cfg
-    bits = tc.qm.init_bits if model.policy.mode == sfp.MODE_QM else float(
-        model.man_bits)
-    n_rem = len(cfg.remainder)
-    full = lambda n: jnp.full((n,), bits, jnp.float32)
-    return QMState(act=full(cfg.n_periods), w=full(cfg.n_periods),
-                   act_rem=full(n_rem), w_rem=full(n_rem))
-
-
-def _qm_lambdas(model: DecoderModel, batch_shape: Tuple[int, int]
-                ) -> Dict[str, jnp.ndarray]:
+def _scope_lambdas(model: DecoderModel, batch_shape: Tuple[int, int]
+                   ) -> Dict[str, jnp.ndarray]:
     """Footprint weights (eq. 7): each group's share of total stash bits.
 
     Activation stash per period: B * S_total * d values; weight footprint
     per period: parameter count of that period. Shares are computed over
     the combined activation+weight footprint, exactly as the paper weighs
-    its loss to minimize *total* memory.
+    its loss to minimize *total* memory. The same weights serve every
+    learned-bitlength policy (mantissa and exponent bits of one tensor
+    scope occupy the same share of the stash).
     """
     cfg = model.cfg
     B, S = batch_shape
@@ -103,24 +93,15 @@ def _qm_lambdas(model: DecoderModel, batch_shape: Tuple[int, int]
 
 
 def make_train_step(model: DecoderModel, tc: TrainConfig):
-    cfg = model.cfg
     policy = model.policy
-    man = float(model.man_bits)
+    dims = model.dims
 
-    def loss_fn(params, qm: QMState, batch_mb, key, bc_bits, gamma, lam):
-        run = RunState(key=key, qm_act=qm.act, qm_w=qm.w,
-                       qm_act_rem=qm.act_rem, qm_w_rem=qm.w_rem,
-                       bc_bits=bc_bits)
+    def loss_fn(params, learn, batch_mb, key, cview, step, lam):
+        run = RunState(key=key,
+                       pol=policy.forward_view(learn, cview, dims))
         loss, metrics = model.loss(params, batch_mb, run)
-        if policy.mode == sfp.MODE_QM:
-            penalty = gamma * (
-                jnp.sum(lam["act"] * jnp.clip(qm.act, 0, man))
-                + jnp.sum(lam["w"] * jnp.clip(qm.w, 0, man))
-                + jnp.sum(lam["act_rem"] * jnp.clip(qm.act_rem, 0, man))
-                + jnp.sum(lam["w_rem"] * jnp.clip(qm.w_rem, 0, man)))
-        else:
-            penalty = jnp.zeros((), jnp.float32)
-        metrics = dict(metrics, qm_penalty=penalty)
+        penalty = policy.penalty(learn, lam, step, dims)
+        metrics = dict(metrics, policy_penalty=penalty)
         return loss + penalty, metrics
 
     grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
@@ -130,10 +111,9 @@ def make_train_step(model: DecoderModel, tc: TrainConfig):
         B, S = batch["tokens"].shape
         nm = tc.num_microbatches
         assert B % nm == 0, (B, nm)
-        lam = _qm_lambdas(model, (B // nm, S))
+        lam = _scope_lambdas(model, (B // nm, S))
         lr = tc.schedule(state.step)
-        gamma = qmod.gamma_at(tc.qm, state.step)
-        bc_bits = bitchop.effective_bits(state.bc, tc.bc)
+        cview = policy.control_view(state.pstate.ctrl, dims)
         step_key = jax.random.fold_in(state.rng, state.step)
 
         mb_batch = jax.tree.map(
@@ -142,9 +122,9 @@ def make_train_step(model: DecoderModel, tc: TrainConfig):
         def micro(carry, inp):
             g_acc, q_acc, loss_acc, xent_acc = carry
             mb, i = inp
-            (loss, metrics), (gp, gq) = grad_fn(
-                state.params, state.qm, mb, jax.random.fold_in(step_key, i),
-                bc_bits, gamma, lam)
+            (loss, metrics), (gp, gl) = grad_fn(
+                state.params, state.pstate.learn, mb,
+                jax.random.fold_in(step_key, i), cview, state.step, lam)
             if tc.param_shardings is not None:
                 g_acc = jax.tree.map(
                     lambda a, g, sh: jax.lax.with_sharding_constraint(
@@ -154,7 +134,7 @@ def make_train_step(model: DecoderModel, tc: TrainConfig):
                 g_acc = jax.tree.map(
                     lambda a, g: a + g.astype(jnp.float32) / nm, g_acc, gp)
             q_acc = jax.tree.map(
-                lambda a, g: a + g.astype(jnp.float32) / nm, q_acc, gq)
+                lambda a, g: a + g.astype(jnp.float32) / nm, q_acc, gl)
             return (g_acc, q_acc, loss_acc + loss / nm,
                     xent_acc + metrics["xent"] / nm), metrics
 
@@ -166,9 +146,9 @@ def make_train_step(model: DecoderModel, tc: TrainConfig):
         else:
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                               state.params)
-        q0 = jax.tree.map(jnp.zeros_like, state.qm)
+        q0 = jax.tree.map(jnp.zeros_like, state.pstate.learn)
         z = jnp.zeros((), jnp.float32)
-        (grads, qgrads, loss, xent), metrics_seq = jax.lax.scan(
+        (grads, lgrads, loss, xent), metrics_seq = jax.lax.scan(
             micro, (g0, q0, z, z), (mb_batch, jnp.arange(nm)))
 
         # Optional compressed cross-pod gradient exchange (error feedback).
@@ -180,30 +160,22 @@ def make_train_step(model: DecoderModel, tc: TrainConfig):
         new_params, new_opt, gnorm = adamw.update(
             grads, state.opt, state.params, tc.opt, lr)
 
-        # Quantum Mantissa bitlength SGD (+ clip to [0, man]).
-        if policy.mode == sfp.MODE_QM:
-            new_qm = QMState(*[
-                jnp.clip(p - tc.qm.lr * g, tc.qm.min_bits, man)
-                for p, g in zip(state.qm, qgrads)])
-        else:
-            new_qm = state.qm
-
-        # BitChop observes the (pre-penalty) loss once per step (eq. 8-9).
-        new_bc = bitchop.update(state.bc, xent, tc.bc,
-                                lr_changed=tc.schedule.lr_changed(state.step))
+        # Policy updates: learned bitlengths take their SGD step, the
+        # controller observes the (pre-penalty) loss (eq. 8-9).
+        new_learn = policy.update_learn(state.pstate.learn, lgrads, dims)
+        new_ctrl = policy.observe(state.pstate.ctrl, xent,
+                                  tc.schedule.lr_changed(state.step), dims)
+        new_pstate = PolicyState(learn=new_learn, ctrl=new_ctrl)
 
         metrics = {
             "loss": loss, "xent": xent, "lr": lr, "grad_norm": gnorm,
-            "gamma": gamma,
-            "qm_act_mean": jnp.mean(jnp.clip(new_qm.act, 0, man)),
-            "qm_w_mean": jnp.mean(jnp.clip(new_qm.w, 0, man)),
-            "bc_bits": bc_bits.astype(jnp.float32),
             "moe_lb_loss": metrics_seq["moe_lb_loss"].mean(),
             "moe_drop_frac": metrics_seq["moe_drop_frac"].mean(),
-            "qm_penalty": metrics_seq["qm_penalty"].mean(),
+            "policy_penalty": metrics_seq["policy_penalty"].mean(),
+            **policy.metrics(new_pstate, dims),
         }
         new_state = TrainState(
-            params=new_params, opt=new_opt, qm=new_qm, bc=new_bc,
+            params=new_params, opt=new_opt, pstate=new_pstate,
             step=state.step + 1, rng=state.rng, grad_residual=residual)
         return new_state, metrics
 

@@ -20,9 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import configs, policies
 from repro.configs.base import reduced
-from repro.core import sfp
 from repro.distributed import pipeline as pp, sharding as shd
 from repro.models import common
 from repro.models.model import DecoderModel
@@ -45,7 +44,7 @@ def test_sharded_vs_single():
     batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
 
     # single-device reference
-    model0 = DecoderModel(cfg, sfp.SFPPolicy())
+    model0 = DecoderModel(cfg, policies.get("none"))
     step0 = jax.jit(step_mod.make_train_step(model0, tc))
     state0 = step_mod.init_state(model0, jax.random.PRNGKey(0), tc)
     s0, m0 = step0(state0, batch)
@@ -53,7 +52,7 @@ def test_sharded_vs_single():
     # sharded
     mesh = make_mesh()
     rules = shd.rules_for(mesh)
-    model1 = DecoderModel(cfg, sfp.SFPPolicy(), mesh=mesh)
+    model1 = DecoderModel(cfg, policies.get("none"), mesh=mesh)
     step1 = step_mod.make_train_step(model1, tc)
     state1 = step_mod.init_state(model1, jax.random.PRNGKey(0), tc)
     param_sh = shd.tree_shardings(mesh, model1.param_axes(), rules)
@@ -63,8 +62,7 @@ def test_sharded_vs_single():
     state_sh = TrainState(
         params=param_sh,
         opt=state1.opt._replace(m=param_sh, v=param_sh, count=repl),
-        qm=jax.tree.map(lambda _: repl, state1.qm),
-        bc=jax.tree.map(lambda _: repl, state1.bc),
+        pstate=jax.tree.map(lambda _: repl, state1.pstate),
         step=repl, rng=repl, grad_residual=None)
     batch_sh = {k: NamedSharding(mesh, P("data", None)) for k in batch}
     with mesh:

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import footprint, sfp
+from repro import policies
+from repro.core import footprint
 from repro.models import cnn
 from repro.optim import adamw
 
@@ -66,7 +67,7 @@ def test_cnn_trains_on_synthetic_blobs():
 
 
 def test_cnn_qm_quantized_forward_close():
-    pol = sfp.SFPPolicy(mode=sfp.MODE_QM, container="bit_exact")
+    pol = policies.get("qm", container="bit_exact")
     m = cnn.CNN(cnn.RESNET8, pol)
     params = m.init(jax.random.PRNGKey(0))
     batch = cnn.synthetic_images(jax.random.PRNGKey(1), 4, cnn.RESNET8)

@@ -8,10 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs
+from repro import configs, policies
 from repro.configs.base import reduced
-from repro.core import sfp
-from repro.models.model import DecoderModel, init_run_state
+from repro.models.model import DecoderModel
 from repro.optim.schedule import Schedule
 from repro.train import step as step_mod
 
@@ -23,8 +22,7 @@ pytestmark = pytest.mark.slow  # ~3 min of reduced-config train steps
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward_and_train_step(arch):
     cfg = reduced(configs.get(arch))
-    model = DecoderModel(cfg, sfp.SFPPolicy(mode=sfp.MODE_QM,
-                                            container="sfp8"))
+    model = DecoderModel(cfg, policies.get("qm", container="sfp8"))
     tc = step_mod.TrainConfig(
         schedule=Schedule(total_steps=10, warmup_steps=1),
         num_microbatches=2)
@@ -38,7 +36,7 @@ def test_smoke_forward_and_train_step(arch):
             (B, cfg.prefix_tokens, cfg.d_model), cfg.compute_dtype)
 
     # forward shapes
-    run = init_run_state(cfg, jax.random.PRNGKey(2))
+    run = model.run_state(jax.random.PRNGKey(2))
     logits, _ = model.forward(state.params, tokens, run,
                               cond_embeddings=batch.get("cond_embeddings"))
     assert logits.shape == (B, S, cfg.padded_vocab)

@@ -3,18 +3,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import policies
 from repro.train import loop as loop_mod
-from repro.train.state import TrainState, QMState
-from repro.core import bitchop
+from repro.train.state import TrainState
 from repro.optim import adamw
+
+_DIMS = policies.ScopeDims(n_periods=1, n_rem=0, man_bits=7, exp_bits=8)
 
 
 def _mini_state():
     params = {"w": jnp.zeros((4,))}
     return TrainState(
         params=params, opt=adamw.init(params),
-        qm=QMState(jnp.zeros(1), jnp.zeros(1), jnp.zeros(0), jnp.zeros(0)),
-        bc=bitchop.init(bitchop.BitChopConfig()),
+        pstate=policies.get("qm+bitchop").init_state(_DIMS),
         step=jnp.zeros((), jnp.int32), rng=jax.random.PRNGKey(0),
         grad_residual=None)
 

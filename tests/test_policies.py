@@ -1,0 +1,281 @@
+"""Precision-policy registry: resolution, composition, bit-identity with
+the pre-registry QM/BitChop implementations, state round-trips, and
+end-to-end training under the new policies (qe / bitwave / qm+qe)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, policies
+from repro.configs.base import reduced
+from repro.core import bitchop, containers as C, quantum_mantissa as qm
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import synthetic
+from repro.models.model import DecoderModel
+from repro.optim import adamw
+from repro.optim.schedule import Schedule
+from repro.train import step as step_mod
+
+DIMS = policies.ScopeDims(n_periods=3, n_rem=2, man_bits=7, exp_bits=8)
+
+
+# ---------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------
+
+
+def test_registry_names_and_resolution():
+    assert {"none", "static", "qm", "qe", "bitchop", "bitwave"} <= set(
+        policies.names())
+    for name in policies.names():
+        assert policies.get(name).name == name
+
+
+def test_unknown_and_duplicate_raise():
+    with pytest.raises(KeyError):
+        policies.get("quantum-flux")
+    with pytest.raises(KeyError):
+        policies.get("qm+qm")
+    with pytest.raises(TypeError):
+        policies.get("bitchop", gamma=0.5)  # not a bitchop knob
+
+
+def test_kwargs_route_to_matching_subpolicy():
+    p = policies.get("qm+bitchop", gamma=0.7, warmup_steps=3,
+                     container="sfp8")
+    by = {s.name: s for s in p.policies}
+    assert by["qm"].gamma == 0.7 and by["bitchop"].warmup_steps == 3
+    assert all(s.container == "sfp8" for s in p.policies)
+
+
+def test_composite_properties_and_decision():
+    p = policies.get("qm+qe")
+    assert p.name == "qm+qe"
+    assert p.adapts_exponent and p.has_stash_grad and p.quantizes_weights
+    st = p.init_state(DIMS)
+    view = p.forward_view(st.learn, p.control_view(st.ctrl, DIMS), DIMS)
+    sl = jax.tree.map(lambda a: a[0], p.scan_slices(view, DIMS))
+    d = p.act_decision(sl, jax.random.PRNGKey(0), DIMS)
+    assert int(d.man_bits) == 7 and int(d.exp_bits) == 8  # init = full
+
+
+def test_legacy_sfppolicy_shim_coerces():
+    from repro.core import sfp
+    with pytest.deprecated_call():
+        pol = policies.coerce(sfp.SFPPolicy(mode="qm", container="sfp16"))
+    assert isinstance(pol, policies.QMPolicy) and pol.container == "sfp16"
+    with pytest.deprecated_call():
+        assert isinstance(policies.coerce(sfp.SFPPolicy()),
+                          policies.NonePolicy)
+    assert isinstance(policies.coerce(None), policies.NonePolicy)
+    assert isinstance(policies.coerce("bitwave"), policies.BitWavePolicy)
+
+
+# ---------------------------------------------------------------------
+# Bit-identity with the pre-refactor implementations
+# ---------------------------------------------------------------------
+
+
+def test_qm_act_decision_bit_identical_to_legacy_formula():
+    """The registry QM must reproduce the pre-refactor stash decision:
+    stochastic_bitlength(n, fold_in(key, 7), man_bits)."""
+    pol = policies.get("qm")
+    st = pol.init_state(DIMS)
+    learn = {k: v - jnp.arange(v.size, dtype=jnp.float32) * 0.7
+             for k, v in st.learn.items()}
+    view = pol.forward_view(learn, {}, DIMS)
+    slices = pol.scan_slices(view, DIMS)
+    for i in range(DIMS.n_periods):
+        for salt in range(5):
+            key = jax.random.fold_in(jax.random.PRNGKey(3), salt)
+            d = pol.act_decision(jax.tree.map(lambda a: a[i], slices),
+                                 key, DIMS)
+            legacy = C.stochastic_bitlength(
+                learn["act"][i], jax.random.fold_in(key, 7), DIMS.man_bits)
+            assert int(d.man_bits) == int(legacy)
+            assert int(d.exp_bits) == DIMS.exp_bits
+    # remainder scopes slice act_rem
+    r = pol.rem_slice(view, 1, DIMS)
+    key = jax.random.PRNGKey(9)
+    d = pol.act_decision(r, key, DIMS)
+    legacy = C.stochastic_bitlength(
+        learn["act_rem"][1], jax.random.fold_in(key, 7), DIMS.man_bits)
+    assert int(d.man_bits) == int(legacy)
+
+
+def test_qm_weight_quantize_bit_identical_to_qm_quantize():
+    pol = policies.get("qm")
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 16), jnp.bfloat16)
+    n = jnp.asarray(3.4, jnp.float32)
+    key = jax.random.PRNGKey(4)
+    got = pol.quantize_weight(w, {"act": n, "w": n}, key, DIMS)
+    want = qm.qm_quantize(w, n, key)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_bitchop_observe_bit_identical_to_legacy_update():
+    pol = policies.get("bitchop", warmup_steps=2)
+    cfg = bitchop.BitChopConfig(warmup_steps=2, max_bits=DIMS.man_bits)
+    ctrl = pol.init_state(DIMS).ctrl
+    legacy = bitchop.init(cfg)
+    losses = [3.0, 2.5, 2.6, 2.0, 1.5, 1.6, 1.4, 1.2]
+    for i, l in enumerate(losses):
+        ctrl = pol.observe(ctrl, jnp.asarray(l), i == 4, DIMS)
+        legacy = bitchop.update(legacy, jnp.asarray(l), cfg, lr_changed=i == 4)
+    for a, b in zip(ctrl, legacy):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    got = pol.control_view(ctrl, DIMS)["act"]
+    want = bitchop.effective_bits(legacy, cfg)
+    assert int(got) == int(want)
+
+
+def test_qm_update_learn_matches_legacy_sgd():
+    pol = policies.get("qm", lr=0.1, min_bits=0.0)
+    st = pol.init_state(DIMS)
+    grads = jax.tree.map(
+        lambda a: jnp.full_like(a, 12.3), st.learn)  # big grad -> clip
+    new = pol.update_learn(st.learn, grads, DIMS)
+    for k in st.learn:
+        want = jnp.clip(st.learn[k] - 0.1 * grads[k], 0.0, 7.0)
+        np.testing.assert_array_equal(np.asarray(new[k]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------
+# QE / BitWave mechanics
+# ---------------------------------------------------------------------
+
+
+def test_qe_decision_draws_reduced_exponent():
+    pol = policies.get("qe")
+    learn = {"act": jnp.full((3,), 4.0, jnp.float32),
+             "w": jnp.full((3,), 4.0, jnp.float32),
+             "act_rem": jnp.zeros((2,)), "w_rem": jnp.zeros((2,))}
+    sl = jax.tree.map(lambda a: a[0], pol.scan_slices(learn, DIMS))
+    d = pol.act_decision(sl, jax.random.PRNGKey(0), DIMS)
+    assert int(d.exp_bits) == 4 and int(d.man_bits) == DIMS.man_bits
+    # min clamp: learned value below the floor still yields >= 2 bits
+    r = pol.rem_slice(learn, 0, DIMS)
+    d = pol.act_decision(r, jax.random.PRNGKey(1), DIMS)
+    assert int(d.exp_bits) >= C.MIN_EXP_BITS
+
+
+def test_bitwave_shrinks_both_fields_on_improving_loss():
+    pol = policies.get("bitwave", warmup_steps=2)
+    ctrl = pol.init_state(DIMS).ctrl
+    for i in range(12):
+        ctrl = pol.observe(ctrl, jnp.asarray(3.0 - 0.25 * i), False, DIMS)
+    assert int(ctrl.n_man) < DIMS.man_bits
+    assert int(ctrl.n_exp) < DIMS.exp_bits
+    view = pol.control_view(ctrl, DIMS)
+    d = pol.act_decision(view, jax.random.PRNGKey(0), DIMS)
+    assert int(d.man_bits) == int(ctrl.n_man)
+    assert int(d.exp_bits) == int(ctrl.n_exp)
+
+
+def test_bitwave_holds_full_precision_after_lr_change():
+    pol = policies.get("bitwave", warmup_steps=1, lr_change_hold=5)
+    ctrl = pol.init_state(DIMS).ctrl
+    for i in range(8):
+        ctrl = pol.observe(ctrl, jnp.asarray(3.0 - 0.3 * i), False, DIMS)
+    shrunk = (int(ctrl.n_man), int(ctrl.n_exp))
+    assert shrunk < (DIMS.man_bits, DIMS.exp_bits)
+    ctrl = pol.observe(ctrl, jnp.asarray(0.5), True, DIMS)  # LR change
+    view = pol.control_view(ctrl, DIMS)
+    assert int(view["act"]) == DIMS.man_bits
+    assert int(view["act_e"]) == DIMS.exp_bits
+
+
+def test_modeled_footprint_reports_exponent_savings():
+    pol = policies.get("bitwave")
+    st = pol.init_state(DIMS)
+    ctrl = st.ctrl._replace(n_man=jnp.asarray(2, jnp.int32),
+                            n_exp=jnp.asarray(4, jnp.int32))
+    fp = policies.modeled_footprint(
+        pol, policies.PolicyState(learn=st.learn, ctrl=ctrl), DIMS)
+    assert fp["bits_per_value"] == 1 + 2 + 4
+    assert fp["vs_bf16"] == pytest.approx(7 / 16)
+
+
+# ---------------------------------------------------------------------
+# Train-step integration (reduced config, a few steps each)
+# ---------------------------------------------------------------------
+
+
+def _train(policy, n_steps, arch="gemma2-2b", seed=0, **red):
+    cfg = reduced(configs.get(arch), **red)
+    model = DecoderModel(cfg, policy)
+    tc = step_mod.TrainConfig(
+        opt=adamw.AdamWConfig(lr=5e-3),
+        schedule=Schedule(total_steps=n_steps, warmup_steps=2, base_lr=5e-3))
+    step = jax.jit(step_mod.make_train_step(model, tc))
+    state = step_mod.init_state(model, jax.random.PRNGKey(seed), tc)
+    dcfg = synthetic.SyntheticConfig(vocab=cfg.vocab, seq_len=32,
+                                     global_batch=4, seed=seed)
+    corpus = synthetic.MarkovCorpus(dcfg)
+    hist = []
+    for i in range(n_steps):
+        b = {k: jnp.asarray(v) for k, v in corpus.batch(i).items()}
+        state, m = step(state, b)
+        hist.append({k: float(np.asarray(v)) for k, v in m.items()})
+    return model, state, hist
+
+
+@pytest.mark.slow
+def test_qe_trains_and_bits_fall():
+    pol = policies.get("qe", container="bit_exact", gamma=1.0, lr=0.4)
+    model, state, hist = _train(pol, 25)
+    assert np.isfinite(hist[-1]["xent"])
+    assert hist[-1]["qe_act_mean"] < 8.0  # penalty pushes exponent bits down
+    assert float(jnp.min(state.pstate.learn["act"])) >= C.MIN_EXP_BITS
+
+
+@pytest.mark.slow
+def test_bitwave_trains_and_adjusts_both():
+    pol = policies.get("bitwave", container="sfp8", warmup_steps=4)
+    model, state, hist = _train(pol, 25)
+    assert np.isfinite(hist[-1]["xent"])
+    bits = [(h["bw_man_bits"], h["bw_exp_bits"]) for h in hist]
+    assert min(b[0] for b in bits) < 7 or min(b[1] for b in bits) < 8
+
+
+@pytest.mark.slow
+def test_qm_plus_qe_composes_and_checkpoint_roundtrips(tmp_path):
+    pol = policies.get("qm+qe", container="bit_exact", gamma=0.5, lr=0.3)
+    model, state, hist = _train(pol, 20)
+    assert np.isfinite(hist[-1]["xent"])
+    # both learned fields move in one run
+    assert hist[-1]["qm_act_mean"] < 7.0
+    assert hist[-1]["qe_act_mean"] < 8.0
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(20, state, extra={"policy": pol.name})
+    assert mgr.read_extra(20) == {"policy": pol.name}
+    like = jax.tree.map(jnp.zeros_like, state)
+    back = mgr.restore(20, like)
+    for a, b in zip(jax.tree.leaves(state.pstate), jax.tree.leaves(back.pstate)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # restoring into a different policy's state tree fails loudly
+    other = step_mod.init_state(
+        DecoderModel(reduced(configs.get("gemma2-2b")),
+                     policies.get("bitwave")),
+        jax.random.PRNGKey(0), step_mod.TrainConfig())
+    with pytest.raises(ValueError, match="precision policy"):
+        mgr.restore(20, other)
+
+
+def test_policy_state_checkpoint_roundtrip_fast(tmp_path):
+    """Controller ints + learned floats survive the generic manager."""
+    pol = policies.get("qm+bitwave")
+    st = pol.init_state(DIMS)
+    ctrl = dict(st.ctrl)
+    ctrl["bitwave"] = ctrl["bitwave"]._replace(n_exp=jnp.asarray(3, jnp.int32))
+    st = policies.PolicyState(learn=st.learn, ctrl=ctrl)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, st, extra={"policy": pol.name})
+    back = mgr.restore(1, jax.tree.map(jnp.zeros_like, st))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(back.ctrl["bitwave"].n_exp) == 3

@@ -1,0 +1,153 @@
+"""containers.truncate_exponent edge cases + the Quantum Exponent VJP.
+
+Covers the satellite checklist: subnormal flush, inf/nan preservation,
+saturation at the reduced exponent range, and a property test against a
+pure-Python bit-twiddling oracle.
+"""
+import math
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import containers as C, quantum_exponent as QE
+
+
+def _oracle(v: float, e: int) -> float:
+    """Pure-Python truncate_exponent for one fp32 value."""
+    e = max(C.MIN_EXP_BITS, min(e, 8))
+    if math.isnan(v) or math.isinf(v):
+        return v
+    bits = struct.unpack("<I", struct.pack("<f", np.float32(v)))[0]
+    exp = (bits >> 23) & 0xFF
+    bias_e = 2 ** (e - 1) - 1
+    lo, hi = 1 - bias_e, (2 ** e - 2) - bias_e
+    unb = exp - 127
+    if exp == 0 or unb < lo:  # zero/subnormal or underflow: flush
+        return math.copysign(0.0, v)
+    if unb > hi:              # overflow: clamp exponent, keep mantissa
+        new = (bits & 0x807FFFFF) | ((hi + 127) << 23)
+        return struct.unpack("<f", struct.pack("<I", new))[0]
+    return float(np.float32(v))
+
+
+def test_zero_and_subnormal_flush():
+    tiny = np.float32(1e-40)  # fp32 subnormal
+    x = jnp.asarray([0.0, -0.0, tiny, -tiny], jnp.float32)
+    for e in (2, 4, 8):
+        out = np.asarray(C.truncate_exponent(x, e))
+        np.testing.assert_array_equal(out, np.zeros(4, np.float32))
+        # signed zero: the sign bit survives the flush
+        assert np.signbit(out[1]) and np.signbit(out[3])
+        assert not np.signbit(out[0]) and not np.signbit(out[2])
+
+
+def test_underflow_flushes_normals_below_range():
+    # e=4: bias 7, normal range [-6, 7] -> 2^-7 flushes, 2^-6 survives
+    x = jnp.asarray([2.0 ** -7, 2.0 ** -6, -(2.0 ** -7)], jnp.float32)
+    out = np.asarray(C.truncate_exponent(x, 4))
+    assert out[0] == 0.0 and out[2] == 0.0 and np.signbit(out[2])
+    assert out[1] == 2.0 ** -6
+
+
+def test_overflow_saturates_keeping_mantissa():
+    # e=4: max unbiased exponent 7 -> magnitudes clamp into [128, 256)
+    x = jnp.asarray([1000.0, -1000.0, 1.75 * 2.0 ** 20], jnp.float32)
+    out = np.asarray(C.truncate_exponent(x, 4))
+    assert out[0] == 1000.0 / 2.0 ** 2  # 1000 = 1.953*2^9 -> 1.953*2^7
+    assert out[1] == -out[0]
+    assert out[2] == 1.75 * 2.0 ** 7  # mantissa bits preserved
+    assert (np.abs(out) < 2.0 ** 8).all()
+
+
+def test_inf_nan_preserved():
+    x = jnp.asarray([np.inf, -np.inf, np.nan], jnp.float32)
+    out = np.asarray(C.truncate_exponent(x, 3))
+    assert np.isposinf(out[0]) and np.isneginf(out[1]) and np.isnan(out[2])
+
+
+def test_full_width_identity_for_normals():
+    x = jnp.asarray([1.5, -3.0, 2.0 ** 127, 2.0 ** -126], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(C.truncate_exponent(x, 8)),
+                                  np.asarray(x))
+
+
+def test_idempotent_and_monotone_range():
+    x = (jax.random.normal(jax.random.PRNGKey(0), (512,), jnp.float32)
+         * jnp.exp2(jax.random.randint(jax.random.PRNGKey(1), (512,),
+                                       -40, 40).astype(jnp.float32)))
+    for e in (2, 3, 5, 8):
+        q1 = C.truncate_exponent(x, e)
+        q2 = C.truncate_exponent(q1, e)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        # a wider budget keeps at least every value the narrow one kept
+        wide = np.asarray(C.truncate_exponent(x, min(e + 1, 8)))
+        kept = np.asarray(q1) != 0
+        assert (wide[kept] != 0).all()
+
+
+def test_bf16_supported():
+    x = jnp.asarray([1.0, 1000.0, 2.0 ** -20], jnp.bfloat16)
+    out = C.truncate_exponent(x, 4)
+    assert out.dtype == jnp.bfloat16
+    assert float(out[2]) == 0.0  # below e=4 range
+
+
+def test_property_vs_python_oracle():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.floats(width=32, allow_nan=False),
+                    min_size=1, max_size=64),
+           st.integers(0, 10))
+    def check(vals, e):
+        x = jnp.asarray(vals, jnp.float32)
+        got = np.asarray(C.truncate_exponent(x, e))
+        want = np.asarray([_oracle(v, e) for v in vals], np.float32)
+        np.testing.assert_array_equal(got, want)
+
+    check()
+
+
+# ---------------------------------------------------------------------
+# qe_quantize: STE + expectation-derivative estimator
+# ---------------------------------------------------------------------
+
+
+def test_qe_quantize_matches_truncation_at_integer_e():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,), jnp.float32) * 1e4
+    q = QE.qe_quantize(x, jnp.asarray(4.0), jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.asarray(C.truncate_exponent(x, 4)))
+
+
+def test_qe_grad_x_is_straight_through():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(
+        QE.qe_quantize(x, jnp.asarray(3.0), jax.random.PRNGKey(1))))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(64, np.float32))
+
+
+def test_qe_grad_e_is_expectation_derivative():
+    # Spread exponents so T(x, floor) != T(x, floor+1): the estimator must
+    # equal sum(g * (T(x, e+1) - T(x, e))) exactly.
+    x = (jax.random.normal(jax.random.PRNGKey(0), (512,), jnp.float32)
+         * jnp.exp2(jax.random.randint(jax.random.PRNGKey(1), (512,),
+                                       -30, 30).astype(jnp.float32)))
+    e = jnp.asarray(4.5, jnp.float32)
+    de = jax.grad(lambda e: jnp.sum(
+        QE.qe_quantize(x, e, jax.random.PRNGKey(2))), argnums=0)(e)
+    want = float(jnp.sum(C.truncate_exponent(x, 5)
+                         - C.truncate_exponent(x, 4)))
+    assert abs(float(de) - want) < 1e-3 * max(1.0, abs(want))
+    assert float(de) != 0.0
+
+
+def test_qe_deterministic_rounds_up():
+    x = jnp.asarray([2.0 ** -20, 1.0], jnp.float32)
+    q = QE.qe_quantize_deterministic(x, jnp.asarray(4.2))
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.asarray(C.truncate_exponent(x, 5)))

@@ -7,14 +7,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs
+from repro import configs, policies
 from repro.configs.base import reduced
-from repro.core import bitchop, quantum_mantissa as qmod, sfp
 from repro.data import synthetic
 from repro.models.model import DecoderModel
 from repro.optim import adamw
 from repro.optim.schedule import Schedule
 from repro.train import step as step_mod
+
+
+QM_KW = dict(gamma=0.02, init_bits=7.0, lr=0.1)
 
 
 def _setup(policy, n_steps=30, arch="mistral-large-123b", **tc_kw):
@@ -23,7 +25,6 @@ def _setup(policy, n_steps=30, arch="mistral-large-123b", **tc_kw):
     tc = step_mod.TrainConfig(
         opt=adamw.AdamWConfig(lr=5e-3),
         schedule=Schedule(total_steps=n_steps, warmup_steps=2, base_lr=5e-3),
-        qm=qmod.QMConfig(gamma=0.02, init_bits=7.0, lr=0.1),
         **tc_kw)
     step = jax.jit(step_mod.make_train_step(model, tc))
     state = step_mod.init_state(model, jax.random.PRNGKey(0), tc)
@@ -45,7 +46,7 @@ def _run(step, state, corpus, n):
 
 @pytest.mark.slow
 def test_loss_decreases_baseline():
-    _, step, state, corpus = _setup(sfp.SFPPolicy(mode=sfp.MODE_NONE), 30)
+    _, step, state, corpus = _setup(policies.get("none"), 30)
     state, hist = _run(step, state, corpus, 30)
     first = np.mean([h["xent"] for h in hist[:5]])
     last = np.mean([h["xent"] for h in hist[-5:]])
@@ -55,21 +56,21 @@ def test_loss_decreases_baseline():
 @pytest.mark.slow
 def test_loss_decreases_with_qm_and_bits_fall():
     _, step, state, corpus = _setup(
-        sfp.SFPPolicy(mode=sfp.MODE_QM, container="bit_exact"), 40)
+        policies.get("qm", container="bit_exact", **QM_KW), 40)
     state, hist = _run(step, state, corpus, 40)
     first = np.mean([h["xent"] for h in hist[:5]])
     last = np.mean([h["xent"] for h in hist[-5:]])
     assert last < first - 0.1
     assert hist[-1]["qm_act_mean"] < 7.0  # penalty drives bits down
     assert hist[-1]["qm_w_mean"] < 7.0
-    assert np.isfinite(hist[-1]["qm_penalty"])
+    assert np.isfinite(hist[-1]["policy_penalty"])
 
 
 @pytest.mark.slow
 def test_bitchop_mode_runs_and_adjusts():
     _, step, state, corpus = _setup(
-        sfp.SFPPolicy(mode=sfp.MODE_BITCHOP, container="sfp8"), 40,
-        bc=bitchop.BitChopConfig(warmup_steps=4, max_bits=7))
+        policies.get("bitchop", container="sfp8", warmup_steps=4,
+                     max_bits=7), 40)
     state, hist = _run(step, state, corpus, 40)
     bits = [h["bc_bits"] for h in hist]
     assert min(bits) < 7.0  # improving loss -> shrinks below full
@@ -78,7 +79,7 @@ def test_bitchop_mode_runs_and_adjusts():
 
 @pytest.mark.slow
 def test_grad_compression_convergence_parity():
-    pol = sfp.SFPPolicy(mode=sfp.MODE_NONE)
+    pol = policies.get("none")
     _, step_c, state_c, corpus = _setup(pol, 30, grad_compress_bits=5)
     _, step_n, state_n, _ = _setup(pol, 30)
     state_c, hist_c = _run(step_c, state_c, corpus, 30)
@@ -92,7 +93,7 @@ def test_microbatching_equivalence():
     """Same data, 1 vs 4 microbatches: losses must match closely (grad
     accumulation is a mean; RNG per microbatch differs only for QM draws,
     so compare in policy-none mode)."""
-    pol = sfp.SFPPolicy(mode=sfp.MODE_NONE)
+    pol = policies.get("none")
     cfg, step1, state1, corpus = _setup(pol, 6, num_microbatches=1)
     _, step4, state4, _ = _setup(pol, 6, num_microbatches=4)
     state1, h1 = _run(step1, state1, corpus, 6)
@@ -103,8 +104,7 @@ def test_microbatching_equivalence():
 @pytest.mark.slow
 def test_static_policy_matches_gist_style():
     _, step, state, corpus = _setup(
-        sfp.SFPPolicy(mode=sfp.MODE_STATIC, static_act_bits=3,
-                      container="sfp8"), 20)
+        policies.get("static", static_act_bits=3, container="sfp8"), 20)
     state, hist = _run(step, state, corpus, 20)
     assert hist[-1]["xent"] < hist[0]["xent"] + 0.1
 
@@ -112,7 +112,7 @@ def test_static_policy_matches_gist_style():
 @pytest.mark.slow
 def test_moe_arch_trains():
     _, step, state, corpus = _setup(
-        sfp.SFPPolicy(mode=sfp.MODE_QM, container="bit_exact"), 12,
+        policies.get("qm", container="bit_exact", **QM_KW), 12,
         arch="olmoe-1b-7b")
     state, hist = _run(step, state, corpus, 12)
     assert np.isfinite(hist[-1]["xent"])
