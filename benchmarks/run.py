@@ -15,9 +15,9 @@ OUT = Path(__file__).resolve().parent.parent / "experiments"
 
 def main() -> None:
     from benchmarks import (bench_codecs, bench_decode, bench_policies,
-                            fig_bitchop, fig_gecko, fig_qm_bitlengths,
-                            fig_relative_compression, table1_footprint,
-                            table2_perf_energy)
+                            bench_serve, fig_bitchop, fig_gecko,
+                            fig_qm_bitlengths, fig_relative_compression,
+                            table1_footprint, table2_perf_energy)
 
     rows = []
     results = {}
@@ -60,6 +60,9 @@ def main() -> None:
                     f"{r['policies']['qm']['overhead_vs_none']:.2f}x;"
                     "qm+qe_overhead="
                     f"{r['policies']['qm+qe']['overhead_vs_none']:.2f}x")
+    bench("bench_serve", bench_serve.run,
+          lambda r: "paged_bytes_vs_bf16="
+                    f"{r['points'][0]['paged_bytes_vs_bf16']:.3f}")
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=2,
@@ -73,6 +76,9 @@ def main() -> None:
     # Headline artifact for the policy registry (per-step overhead).
     (OUT.parent / "BENCH_policies.json").write_text(
         json.dumps(results["bench_policies"], indent=2, default=str))
+    # Headline artifact for the paged serving engine (cache bytes/step).
+    (OUT.parent / "BENCH_serve.json").write_text(
+        json.dumps(results["bench_serve"], indent=2, default=str))
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

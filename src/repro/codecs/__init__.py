@@ -17,13 +17,14 @@ Registered containers:
               stream (paper §IV-C), byte-aligned; lossless for bf16
 
 New containers register via codecs.register() and become available to all
-call sites at once.
+call sites at once; parametric families (the policy-derived
+``sfp{8|16}-m{K}e{E}`` geometries) resolve lazily via register_factory().
 """
 from repro.codecs.base import (Codec, PackedTensor, get, names, register,
-                               unpack)
+                               register_factory, unpack)
 from repro.codecs.bit_exact import BIT_EXACT, BitExactCodec
 from repro.codecs.gecko import GECKO8, Gecko8Codec
-from repro.codecs.sfp import SFP8, SFP16, SFPCodec, fields_for
+from repro.codecs.sfp import SFP8, SFP16, SFPCodec, fields_for, maybe_codec
 
 # The paper's default realized container (and the KV-cache default).
 DEFAULT_CONTAINER = SFP8
@@ -32,10 +33,11 @@ register(BitExactCodec())
 register(SFPCodec(SFP8))
 register(SFPCodec(SFP16))
 register(Gecko8Codec())
+register_factory(maybe_codec)
 
 __all__ = [
-    "Codec", "PackedTensor", "get", "names", "register", "unpack",
-    "fields_for", "DEFAULT_CONTAINER",
+    "Codec", "PackedTensor", "get", "names", "register", "register_factory",
+    "unpack", "fields_for", "DEFAULT_CONTAINER",
     "BIT_EXACT", "SFP8", "SFP16", "GECKO8",
     "BitExactCodec", "SFPCodec", "Gecko8Codec",
 ]

@@ -152,6 +152,7 @@ class Codec(abc.ABC):
 
 
 _REGISTRY: Dict[str, Codec] = {}
+_FACTORIES = []
 
 
 def register(codec: Codec) -> Codec:
@@ -160,13 +161,29 @@ def register(codec: Codec) -> Codec:
     return codec
 
 
+def register_factory(factory) -> None:
+    """Register a name -> Codec-or-None resolver for parametric families.
+
+    Families with unbounded name spaces (the policy-derived ``sfp*-m*e*``
+    containers) cannot pre-register every instance; ``get`` consults
+    factories for unknown names and caches the constructed codec, so a
+    parametric container behaves exactly like a registered one from the
+    first use on.
+    """
+    _FACTORIES.append(factory)
+
+
 def get(name: str) -> Codec:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(
-            f"unknown container codec {name!r}; registered: {names()}"
-        ) from None
+        pass
+    for factory in _FACTORIES:
+        codec = factory(name)
+        if codec is not None:
+            return register(codec)
+    raise KeyError(
+        f"unknown container codec {name!r}; registered: {names()}")
 
 
 def names():

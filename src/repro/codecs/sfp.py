@@ -1,4 +1,4 @@
-"""Fixed-width SFP container codecs (sfp8 / sfp16).
+"""Fixed-width SFP container codecs (sfp8 / sfp16 / parametric sfp*-m*e*).
 
 Owns the container-name -> payload-geometry mapping (kernels are
 format-agnostic bit machines taking a ``PackFields``):
@@ -11,10 +11,18 @@ One shared 8-bit base exponent per 128-lane group (a Gecko column base).
 Mantissa / BitChop truncation and the container encoding happen in a
 single pass over the tensor (one HBM read instead of the old
 mantissa_quantize -> sfp_compress two-kernel sequence).
+
+Parametric names realize *policy-learned* geometries (deployment mode,
+paper §IV-A4): ``sfp{8|16}-m{K}e{E}`` is a K-mantissa-bit,
+E-delta-exponent-bit payload in an 8/16-bit word (e.g. ``sfp8-m3e4`` is
+sfp8 by another name). They resolve through the codec factory hook, so a
+serving pool can derive its container from a trained checkpoint's
+PrecisionDecision without pre-registering every geometry.
 """
 from __future__ import annotations
 
 import math
+import re
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +35,8 @@ from repro.kernels.ref import GROUP, PackFields
 SFP8 = "sfp8"
 SFP16 = "sfp16"
 
+_PARAM_NAME = re.compile(r"sfp(8|16)-m(\d+)e(\d+)$")
+
 
 def fields_for(name: str, dtype_or_spec) -> PackFields:
     """Resolve a container name + source dtype to its payload geometry."""
@@ -37,7 +47,22 @@ def fields_for(name: str, dtype_or_spec) -> PackFields:
     if name == SFP16:
         man_keep = 10 if spec.man_bits == 23 else 7
         return PackFields(man_keep=man_keep, dexp_bits=5, payload_bits=16)
+    m = _PARAM_NAME.match(name)
+    if m:
+        payload, man, dexp = (int(g) for g in m.groups())
+        # Clamp to what the word and the source dtype can actually hold —
+        # the *name* records the learned decision; the realized geometry
+        # never exceeds the payload (sign + dexp + man <= word) or keeps
+        # more mantissa bits than the source has.
+        dexp = max(1, min(dexp, payload - 2))
+        man = max(1, min(man, payload - 1 - dexp, spec.man_bits))
+        return PackFields(man_keep=man, dexp_bits=dexp, payload_bits=payload)
     raise ValueError(f"not an SFP container: {name!r}")
+
+
+def maybe_codec(name: str):
+    """Codec factory for parametric ``sfp{8|16}-m{K}e{E}`` names."""
+    return SFPCodec(name) if _PARAM_NAME.match(name) else None
 
 
 def _nd_layout(shape) -> bool:

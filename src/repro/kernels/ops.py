@@ -214,3 +214,29 @@ def packed_flash_decode(q, k_packed: Packed, v_packed: Packed, pos, *,
         q, k_packed.payload, k_packed.bases, v_packed.payload,
         v_packed.bases, pos, fields, window=window, softcap=softcap,
         block_l=_pfd.DEFAULT_BLOCK_L)  # kernel-matching accumulation order
+
+
+def paged_flash_decode(q, k_packed: Packed, v_packed: Packed,
+                       tables, pos, *, fields: PackFields,
+                       softcap=None) -> jax.Array:
+    """One-token decode attention over a paged SFP-packed KV block pool.
+
+    The continuous-batching serving step: pool parts are
+    (P_blocks, block_l, D) shared across requests, ``tables`` (B, nb)
+    maps each row's logical blocks to physical pool blocks, and ``pos``
+    (B,) carries per-row decode positions. On pallas/interpret the block
+    table is a scalar-prefetch operand and the gather happens inside the
+    kernel grid (no contiguous per-request cache in HBM); on the ref
+    backend this is the gather-unpack-attend oracle with the identical
+    block recurrence. Global attention only.
+    """
+    b = backend()
+    if b in ("pallas", "interpret"):
+        return _pfd.paged_flash_decode(
+            q, k_packed.payload, k_packed.bases, v_packed.payload,
+            v_packed.bases, jnp.asarray(tables, jnp.int32),
+            jnp.asarray(pos, jnp.int32), fields=fields, softcap=softcap,
+            interpret=(b == "interpret"))
+    return _ref.paged_flash_decode(
+        q, k_packed.payload, k_packed.bases, v_packed.payload,
+        v_packed.bases, tables, pos, fields, softcap=softcap)

@@ -18,10 +18,19 @@ unpacked block — K/V are never repeated, in HBM or VMEM.
 Grid is (batch, kv_blocks) with the kv index innermost; VMEM scratch
 carries the running (max, denominator, numerator) across kv blocks. Ring
 slot validity (local sliding-window caches) is computed in-kernel from the
-scalar decode position via ``ref.decode_kv_mask``.
+decode position (scalar, or one per batch row — continuous-batching
+slots) via ``ref.decode_kv_mask``.
 
-Oracle: ``ref.packed_flash_decode`` (unpack-then-attend with the same
-block recurrence) — bit-exact in interpret mode.
+``paged_flash_decode`` is the continuous-batching variant: KV blocks live
+in a request-agnostic pool and each row's logical blocks are gathered
+through its block table *inside the grid* — the table is a scalar-prefetch
+operand consumed by the BlockSpec index_maps, so each (row, block) step
+DMAs its physical block straight from the HBM pool. Same recurrence, same
+bit machine, same masks.
+
+Oracles: ``ref.packed_flash_decode`` / ``ref.paged_flash_decode``
+(unpack-then-attend with the same block recurrence) — bit-exact in
+interpret mode.
 """
 from __future__ import annotations
 
@@ -105,7 +114,8 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
 
     q: (B, 1, H, hd); payload (B, L, D) uint8/uint16 and bases
     (B, L, D // 128) uint8 in the rank-preserving ``sfp_pack_nd`` layout
-    (D = KH * hd, D % 128 == 0). ``pos`` is the scalar absolute decode
+    (D = KH * hd, D % 128 == 0). ``pos`` is the absolute decode position —
+    a scalar, or (B,) for continuous-batching slots each at their own
     position; ``window`` not None means an L-slot ring buffer (local
     attention). Returns (B, 1, H, hd) in q's dtype.
     """
@@ -129,7 +139,8 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
     grid = (B, L // block_l)
 
     qg = q.reshape(B, KH, rep, hd)  # q head h shares kv head h // rep
-    pos2 = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    pos2 = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1, 1), (B, 1))
     scale = 1.0 / (hd ** 0.5)
 
     out = pl.pallas_call(
@@ -138,7 +149,7 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
                           fields=fields, spec=spec),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),                # pos
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),          # per-row pos
             pl.BlockSpec((1, KH, rep, hd), lambda b, j: (b, 0, 0, 0)),
             pl.BlockSpec((1, block_l, D), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, block_l, G), lambda b, j: (b, j, 0)),
@@ -154,4 +165,143 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
         ],
         interpret=interpret,
     )(pos2, qg, k_payload, k_bases, v_payload, v_bases)
+    return out.reshape(B, 1, H, hd)
+
+
+def _paged_kernel(tab_ref, pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, block_l: int, nb: int,
+                  KH: int, hd: int, softcap: Optional[float], scale: float,
+                  fields: kref.PackFields, spec):
+    """One (batch row, logical KV block) step over the paged pool.
+
+    The DMA gather already happened: the grid spec's index_map routed this
+    step's physical block (``tab_ref[b, j]``) into kp/kb/vp/vb, so the body
+    is the contiguous decode kernel's on logical slots — the recurrence,
+    masking and bit machine are shared, which is what makes paged decode
+    bit-exact against the contiguous kernel over the same logical cache.
+    """
+    b = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[b]
+    G = (KH * hd) // kref.GROUP
+    L = nb * block_l
+
+    def unpack(p_ref, b_ref):
+        p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
+        bb = b_ref[0].astype(jnp.int32).reshape(block_l, G, 1)
+        x = kref._unpack_words(p, bb, fields, spec)
+        return x.reshape(block_l, KH, hd).astype(jnp.float32)
+
+    k = unpack(kp_ref, kb_ref)
+    v = unpack(vp_ref, vb_ref)
+    q = q_ref[0].astype(jnp.float32)
+
+    s = jnp.einsum("hgd,lhd->hgl", q, k) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # Masking is on *logical* slots: logical blocks past the row's
+    # allocation point at the reserved trash block, and their slots exceed
+    # pos — an exact no-op in the recurrence (p == 0, alpha == 1).
+    slots = ki * block_l + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_l), 2)
+    valid = kref.decode_kv_mask(pos, L, None, slots=slots)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.einsum("hgl,lhd->hgd", p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nb - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fields", "softcap",
+                                             "interpret"))
+def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
+                       k_bases: jax.Array, v_payload: jax.Array,
+                       v_bases: jax.Array, tables: jax.Array,
+                       pos: jax.Array, *, fields: kref.PackFields,
+                       softcap: Optional[float] = None,
+                       interpret: bool = True) -> jax.Array:
+    """One-token attention over a *paged* SFP-packed KV block pool.
+
+    The serving engine's continuous-batching decode step: pool parts are
+    (P_blocks, block_l, D) payload / (P_blocks, block_l, D // 128) bases
+    shared by every request; ``tables`` (B, nb) int32 maps each batch
+    row's logical KV blocks to physical pool blocks, and ``pos`` (B,) is
+    each row's absolute decode position. The block table is a scalar-
+    prefetch operand, so the *gather happens inside the kernel grid*: each
+    (b, j) step's index_map DMAs physical block ``tables[b, j]`` straight
+    from the HBM pool into VMEM — no contiguous per-request cache ever
+    materializes. Logical blocks past a row's allocation must point at a
+    valid (trash) physical block; position masking makes them exact
+    no-ops. Global attention only (local ring buffers are window-bounded
+    and stay per-slot contiguous). Returns (B, 1, H, hd) in q's dtype.
+
+    Oracle: ``ref.paged_flash_decode`` — bit-exact in interpret mode.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, one, H, hd = q.shape
+    assert one == 1, q.shape
+    n_phys, block_l, D = k_payload.shape
+    KH = D // hd
+    assert KH * hd == D and D % kref.GROUP == 0, (D, hd)
+    rep = H // KH
+    assert rep * KH == H, (H, KH)
+    G = D // kref.GROUP
+    nb = tables.shape[1]
+    spec = containers.spec_for(jnp.dtype(q.dtype))
+
+    qg = q.reshape(B, KH, rep, hd)
+    pos1 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    tables = tables.astype(jnp.int32)
+    scale = 1.0 / (hd ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (tables, pos) — available to index_maps
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, KH, rep, hd),
+                         lambda b, j, tab, pos: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_l, D),
+                         lambda b, j, tab, pos: (tab[b, j], 0, 0)),
+            pl.BlockSpec((1, block_l, G),
+                         lambda b, j, tab, pos: (tab[b, j], 0, 0)),
+            pl.BlockSpec((1, block_l, D),
+                         lambda b, j, tab, pos: (tab[b, j], 0, 0)),
+            pl.BlockSpec((1, block_l, G),
+                         lambda b, j, tab, pos: (tab[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KH, rep, hd),
+                               lambda b, j, tab, pos: (b, 0, 0, 0)),
+        scratch_shapes=[
+            _vmem_scratch((KH, rep, 1)),
+            _vmem_scratch((KH, rep, 1)),
+            _vmem_scratch((KH, rep, hd)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_l=block_l, nb=nb, KH=KH,
+                          hd=hd, softcap=softcap, scale=scale, fields=fields,
+                          spec=spec),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, rep, hd), q.dtype),
+        interpret=interpret,
+    )(tables, pos1, qg, k_payload, k_bases, v_payload, v_bases)
     return out.reshape(B, 1, H, hd)

@@ -268,7 +268,8 @@ def decode_kv_mask(pos, L: int, window: Optional[int] = None, slots=None):
     caches are L-slot ring buffers (L <= window): slot s holds the latest
     position p <= pos with p === s (mod L), valid while inside the window.
     ``slots`` defaults to arange(L); kernels pass their block-relative
-    slot indices (padded slots >= L are masked off).
+    slot indices (padded slots >= L are masked off). ``pos`` may carry
+    leading batch dims (broadcast against ``slots``).
     """
     if slots is None:
         slots = jnp.arange(L)
@@ -294,7 +295,9 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
 
     q: (B, 1, H, hd); payload (B, L, KH*hd), bases (B, L, KH*hd // 128) —
     the rank-preserving layout of ``sfp_pack_nd``. GQA is grouped: q head
-    h reads kv head h // (H // KH).
+    h reads kv head h // (H // KH). ``pos`` is scalar (whole batch at one
+    position) or (B,) — one decode position per batch row (the serving
+    engine's continuous-batching slots).
     """
     B, _, H, hd = q.shape
     L, D = k_payload.shape[1], k_payload.shape[2]
@@ -302,6 +305,7 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
     rep = H // KH
     G = D // GROUP
     spec = containers.spec_for(jnp.dtype(q.dtype))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
     # Kernel-identical blocking: shrink to a divisor of L (the kernel never
     # pads the cache — that would copy the packed arrays every step).
     bl = L if block_l is None else min(block_l, L)
@@ -333,7 +337,7 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
             s = jnp.einsum("hgd,lhd->hgl", qf[b], k_c) * scale
             if softcap is not None:
                 s = softcap * jnp.tanh(s / softcap)
-            valid = decode_kv_mask(pos, L, window,
+            valid = decode_kv_mask(pos[b], L, window,
                                    slots=ki * bl + jnp.arange(bl))
             s = jnp.where(valid[None, None, :], s, NEG_INF)
             m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -346,6 +350,41 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
         outs.append(acc / jnp.maximum(l, 1e-30))
     o = jnp.stack(outs, axis=0)
     return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def paged_gather(part: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather pool blocks into per-row contiguous sequences.
+
+    ``part`` is one packed pool part (P_blocks, block_l, ...) — payload or
+    bases; ``tables`` (B, nb) holds physical block ids per logical block
+    (invalid logical blocks point at the reserved trash block and are
+    masked by position downstream). Returns (B, nb * block_l, ...).
+    """
+    g = part[tables]                      # (B, nb, block_l, ...)
+    return g.reshape(g.shape[0], -1, *g.shape[3:])
+
+
+def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
+                       k_bases: jax.Array, v_payload: jax.Array,
+                       v_bases: jax.Array, tables: jax.Array, pos,
+                       fields: PackFields, *,
+                       softcap: Optional[float] = None) -> jax.Array:
+    """Gather-unpack-attend oracle for the paged flash-decode kernel.
+
+    Pool parts are (P_blocks, block_l, D) / (P_blocks, block_l, D // 128)
+    in the ``sfp_pack_nd`` layout; ``tables`` (B, nb) maps each row's
+    logical KV blocks to physical pool blocks; ``pos`` is (B,) or scalar.
+    Gathers each row's blocks into a contiguous packed cache, then runs
+    the exact block recurrence of ``packed_flash_decode`` (block_l = the
+    pool block), so the Pallas paged kernel validates bit-for-bit in
+    interpret mode. Paged caches are global-attention only (local ring
+    buffers are window-bounded and stay per-slot contiguous).
+    """
+    block_l = k_payload.shape[1]
+    return packed_flash_decode(
+        q, paged_gather(k_payload, tables), paged_gather(k_bases, tables),
+        paged_gather(v_payload, tables), paged_gather(v_bases, tables),
+        pos, fields, window=None, softcap=softcap, block_l=block_l)
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,29 @@
-"""Serving launcher: prefill + batched greedy decode.
+"""Serving launcher: batch mode, or a continuous-batching request-trace
+simulator over the paged compressed-KV engine.
+
+Batch mode (one prefill + one jitted decode loop, the PR 2 path — now
+reachable with a compressed cache from the CLI):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --preset tiny \
-      --batch 4 --prompt-len 32 --max-new 16
+      --batch 4 --prompt-len 32 --max-new 16 --kv-container sfp8
+
+Trace mode simulates production traffic: Poisson request arrivals with
+mixed prompt/output lengths, driven through the scheduler's admission /
+continuous-batching / preemption machinery on a virtual clock:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --preset tiny \
+      --trace --requests 16 --arrival-rate 2.0 --kv-container sfp8 \
+      --max-slots 8 --max-len 256
+
+Policy-aware precision (paper §IV-A4 deployment mode): point
+``--policy-ckpt`` at a training run's checkpoint directory and the KV
+container geometry is derived from the learned PrecisionDecision stamped
+in its manifest (see serve/precision.py) — overriding --kv-container.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -15,28 +33,27 @@ import numpy as np
 from repro import configs
 from repro.configs.base import reduced
 from repro.models.model import DecoderModel
-from repro.serve import engine
+from repro.serve import engine, precision
+from repro.serve.scheduler import Request, Scheduler
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--preset", default="tiny", choices=["tiny", "small",
-                                                         "full"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def _build_model(args):
     cfg = configs.get(args.arch)
     if args.preset == "tiny":
         cfg = reduced(cfg)
     elif args.preset == "small":
         cfg = reduced(cfg, n_layers=max(2 * len(cfg.period), 4), d_model=256)
-
-    model = DecoderModel(cfg)
+    container = args.kv_container
+    if args.policy_ckpt:
+        container = precision.container_from_checkpoint(args.policy_ckpt)
+        print(f"policy-aware container from {args.policy_ckpt}: {container}")
+    model = DecoderModel(cfg, kv_container=container)
     params = model.init(jax.random.PRNGKey(args.seed))
+    return cfg, model, params, container
+
+
+def run_batch(args) -> None:
+    cfg, model, params, container = _build_model(args)
     prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab)
     cond = (jnp.zeros((args.batch, cfg.prefix_tokens, cfg.d_model),
@@ -46,9 +63,117 @@ def main():
                           cond_embeddings=cond)
     dt = time.time() - t0
     toks = args.batch * args.max_new
-    print(f"arch={cfg.name} generated {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s)")
+    print(f"arch={cfg.name} kv={container or 'raw'} generated {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s)")
     print("sample:", np.asarray(res.tokens[0]).tolist())
+
+
+def make_trace(args, vocab: int):
+    """Poisson arrivals (exponential gaps at --arrival-rate req/s) with
+    prompt/output lengths drawn uniformly from the given ranges."""
+    rng = np.random.RandomState(args.seed + 2)
+    lo_p, hi_p = args.prompt_len_min, args.prompt_len_max
+    lo_n, hi_n = args.max_new_min, args.max_new_max
+    t = 0.0
+    reqs = []
+    for i in range(args.requests):
+        t += rng.exponential(1.0 / args.arrival_rate)
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.randint(0, vocab,
+                               size=rng.randint(lo_p, hi_p + 1)
+                               ).astype(np.int32),
+            max_new=int(rng.randint(lo_n, hi_n + 1)),
+            arrival=t))
+    return reqs
+
+
+def run_trace(args) -> None:
+    cfg, model, params, container = _build_model(args)
+    if container is None:
+        raise SystemExit("--trace needs a packed cache: pass --kv-container "
+                         "(or --policy-ckpt)")
+    eng = engine.PagedEngine(model, params, max_slots=args.max_slots,
+                             max_len=args.max_len,
+                             num_blocks=args.num_blocks)
+    reqs = make_trace(args, cfg.vocab)
+    # Time-to-first-token in scheduler steps, per request (streaming
+    # callback: fires the step each token is produced).
+    ttft = {}
+    sched = Scheduler(eng, on_token=lambda uid, tok, done:
+                      ttft.setdefault(uid, sched.stats.decode_steps))
+
+    # Virtual clock: admission sees arrivals as wall-clock-free step time
+    # (one scheduler step advances it by --step-dt), so the same trace
+    # replays identically on any hardware.
+    clock = {"t": 0.0}
+
+    def now():
+        clock["t"] += args.step_dt
+        return clock["t"]
+
+    t0 = time.time()
+    out = sched.run(reqs, now_fn=now)
+    dt = time.time() - t0
+    total = int(sum(len(v) for v in out.values()))
+    s = sched.stats
+    pool = eng.pool.stats()
+    report = {
+        "arch": cfg.name, "container": container,
+        "requests": len(reqs), "emitted_tokens": total,
+        "wall_s": round(dt, 2), "tok_per_s": round(total / max(dt, 1e-9), 1),
+        "decode_steps": s.decode_steps,
+        "mean_batch_occupancy": round(total / max(s.decode_steps, 1), 2),
+        "preemptions": s.preemptions,
+        "mean_ttft_steps": round(float(np.mean(list(ttft.values()))), 2),
+        "pool_blocks": pool.num_blocks, "pool_peak_used": pool.peak_used,
+        "block_l": eng.block_l, "max_slots": eng.max_slots,
+        "max_len": eng.max_len,
+    }
+    print(json.dumps(report, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "small",
+                                                         "full"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-container", default=None,
+                    help="registry codec for the packed KV cache (sfp8, "
+                    "sfp16, sfp8-m3e4, ...); None = raw bf16 cache")
+    ap.add_argument("--policy-ckpt", default=None,
+                    help="checkpoint dir of a trained policy run; the KV "
+                    "container geometry is derived from its stamped "
+                    "PrecisionDecision (overrides --kv-container)")
+    # batch mode
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    # trace mode (continuous batching over the paged pool)
+    ap.add_argument("--trace", action="store_true",
+                    help="simulate a Poisson request trace through the "
+                    "paged engine + scheduler")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean request arrivals per virtual second")
+    ap.add_argument("--step-dt", type=float, default=0.1,
+                    help="virtual seconds one scheduler step advances")
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--prompt-len-max", type=int, default=48)
+    ap.add_argument("--max-new-min", type=int, default=4)
+    ap.add_argument("--max-new-max", type=int, default=24)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="pool capacity in packed blocks (default: full "
+                    "residency for every slot)")
+    args = ap.parse_args()
+
+    if args.trace:
+        run_trace(args)
+    else:
+        run_batch(args)
 
 
 if __name__ == "__main__":

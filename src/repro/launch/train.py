@@ -131,12 +131,21 @@ def main():
             return out
         return (to_batch(b) for b in it)
 
+    def ckpt_extra(state):
+        # Stamp the policy's *current* decision summary alongside the run
+        # identity: policy-aware serving (serve/precision.py) derives the
+        # KV pool's container geometry from these learned bitlengths via
+        # CheckpointManager.read_extra — no state restore needed.
+        d = model.policy.decision_summary(state.pstate, model.dims)
+        return {"policy": model.policy.name, "container": args.container,
+                "decision": {"man_bits": float(d["man_bits"]),
+                             "exp_bits": float(d["exp_bits"])}}
+
     lc = loop_mod.LoopConfig(
         total_steps=args.steps, ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir, metrics_file=args.metrics,
         log_every=max(1, args.steps // 50),
-        ckpt_extra={"policy": model.policy.name,
-                    "container": args.container})
+        ckpt_extra=ckpt_extra)
     res = loop_mod.run(train_step, state, batches, lc)
     last = res.history[-1]
     print(json.dumps({k: last[k] for k in

@@ -285,7 +285,12 @@ def decode_attend(q: jax.Array, k_c: jax.Array, v_c: jax.Array,
 
     # Ring-slot validity shared with the packed flash-decode kernel, so the
     # fused and unpack-fallback decode paths agree on cache semantics.
-    valid = ops.decode_kv_mask(pos, L, window)
+    # ``pos`` may be scalar or (B,) — continuous-batching slots each sit at
+    # their own decode position.
+    if jnp.ndim(pos) == 0:
+        valid = ops.decode_kv_mask(pos, L, window)[None]          # (1, L)
+    else:
+        valid = ops.decode_kv_mask(pos[:, None], L, window)       # (B, L)
 
     rep = H // KH
     qg = q.reshape(B, 1, KH, rep, hd)
@@ -294,7 +299,7 @@ def decode_attend(q: jax.Array, k_c: jax.Array, v_c: jax.Array,
                    preferred_element_type=jnp.float32) * scale
     if cfg.attn_softcap is not None:
         s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(k_c.dtype), v_c,
                    preferred_element_type=jnp.float32)

@@ -394,11 +394,20 @@ class DecoderModel:
                             for i, k in enumerate(cfg.remainder)}
         return cache
 
-    def _decode_slot(self, slot_params, h, slot_cache, pos, kind):
+    def _decode_slot(self, slot_params, h, slot_cache, pos, kind,
+                     tables=None):
         cfg = self.cfg
         hn = common.rmsnorm(slot_params["pre_norm"], h)
         if kind in (GLOBAL, LOCAL):
-            if self.kv_container is not None:
+            if tables is not None and kind == GLOBAL:
+                # Paged pool: blocks gathered through the block table
+                # inside the kernel; local ring layers stay per-slot
+                # contiguous (window-bounded) and take the packed path
+                # below with per-row positions.
+                out, new_cache = _kvcache().attention_decode_paged(
+                    slot_params["attn"], hn, slot_cache, tables, pos, cfg,
+                    container=self.kv_container)
+            elif self.kv_container is not None:
                 out, new_cache = _kvcache().attention_decode_packed(
                     slot_params["attn"], hn, slot_cache, pos, cfg, kind=kind,
                     container=self.kv_container)
@@ -505,10 +514,20 @@ class DecoderModel:
                                 valid_vocab=cfg.vocab)
         return logits, cache
 
-    def decode_step(self, params, cache, token: jax.Array, pos: jax.Array
+    def decode_step(self, params, cache, token: jax.Array, pos: jax.Array,
+                    tables: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Any]:
         """One decode step. token: (B, 1) int32; pos: scalar int32 absolute
-        position (prefix + generated so far). Returns (logits (B, 1, V), cache)."""
+        position (prefix + generated so far). Returns (logits (B, 1, V), cache).
+
+        With ``tables`` (B, nb) this is the continuous-batching paged
+        step: ``pos`` becomes (B,) per-slot positions (idle slots carry
+        pos 0 and a trash-block table row; their logits are garbage the
+        engine discards), global attention layers in ``cache`` hold
+        ``kvcache.PagedKV`` pool slices addressed through the tables, and
+        local ring / SSD / RGLRU layers hold per-slot dense state.
+        Requires ``kv_container`` in that mode.
+        """
         shd.set_active_mesh(self.mesh, self.rules)
         cfg = self.cfg
         scale = (cfg.d_model ** 0.5) if cfg.emb_scale else None
@@ -519,7 +538,7 @@ class DecoderModel:
             new_c = {}
             for i, kind in enumerate(cfg.period):
                 h, nc = self._decode_slot(p[f"slot{i}"], h, c[f"slot{i}"],
-                                          pos, kind)
+                                          pos, kind, tables=tables)
                 new_c[f"slot{i}"] = nc
             return h, new_c
 
@@ -530,10 +549,18 @@ class DecoderModel:
             new_cache["rem"] = {}
             for i, kind in enumerate(cfg.remainder):
                 h, nc = self._decode_slot(params["rem"][f"slot{i}"], h,
-                                          cache["rem"][f"slot{i}"], pos, kind)
+                                          cache["rem"][f"slot{i}"], pos,
+                                          kind, tables=tables)
                 new_cache["rem"][f"slot{i}"] = nc
         h = common.rmsnorm(params["final_norm"], h)
         logits = common.unembed(params, h, tied=cfg.tie_embeddings,
                                 softcap=cfg.final_softcap,
                                 valid_vocab=cfg.vocab)
         return logits, new_cache
+
+    def decode_step_paged(self, params, cache, token: jax.Array,
+                          pos: jax.Array, tables: jax.Array
+                          ) -> Tuple[jax.Array, Any]:
+        """Paged decode step (see ``decode_step`` with ``tables``)."""
+        assert self.kv_container is not None, "paged decode needs a codec"
+        return self.decode_step(params, cache, token, pos, tables=tables)

@@ -1,1 +1,3 @@
-"""Serving substrate: prefill/decode engine, (compressed) KV cache."""
+"""Serving substrate: prefill/decode engine, (compressed) KV cache, the
+paged packed-KV block pool, the continuous-batching scheduler, and
+policy-aware precision resolution (learned bitlengths -> pool codec)."""

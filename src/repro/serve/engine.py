@@ -1,5 +1,17 @@
 """Serving engine: prefill + decode with (optionally compressed) KV cache.
 
+Two serving modes share the model:
+
+* **Contiguous** (``generate``): one prefill + one jitted ``lax.scan``
+  decode loop over a per-request cache. Compiled functions are memoized
+  per (model, shape) so repeated requests never recompile.
+* **Paged** (``PagedEngine``): the continuous-batching substrate. A fixed
+  number of batch *slots* share one codec-packed KV block pool
+  (serve/pool.py); one jitted fixed-shape decode step advances every
+  active slot at its own position, gathering KV blocks through the
+  scalar-prefetched block table inside the paged flash-decode kernel.
+  Request queueing/admission/preemption live above, in serve/scheduler.py.
+
 `cache_axes` mirrors DecoderModel.init_cache structurally and assigns the
 logical sharding: batch over (pod, data), the KV sequence dim over `model`
 (flash-decoding style — XLA's softmax reductions over the sharded dim
@@ -12,11 +24,15 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import codecs
 from repro.configs.base import ArchConfig, GLOBAL, LOCAL, SSD
+from repro.kernels import ops
 from repro.models import attention, mamba2, rglru
 from repro.models.model import DecoderModel
 from repro.serve import kvcache as _kvcache
+from repro.serve import pool as _pool
 
 
 def _slot_axes(kind: str, model: DecoderModel, batch: int, max_len: int):
@@ -109,21 +125,246 @@ def make_decode_loop(model: DecoderModel, n_steps: int):
     return jax.jit(loop, donate_argnums=(1,))
 
 
+# Compiled prefill/decode-loop functions, memoized per model instance:
+# jax's jit cache keys on function identity, so rebuilding the closure on
+# every generate() call recompiled prefill AND the scan loop each time.
+# The cache hangs off the model itself — NOT a module-level
+# WeakKeyDictionary: the cached closures capture the model, and any
+# globally-rooted map whose values reference their key would pin every
+# model (plus all its XLA executables) for the process lifetime. On the
+# instance, cache and model form an ordinary garbage cycle that dies with
+# the model. Below the statics key, jax handles per-input-shape caching.
+_CACHE_ATTR = "_serve_compiled"
+
+
+def compiled(model: DecoderModel, key: Tuple, build):
+    per_model = model.__dict__.setdefault(_CACHE_ATTR, {})
+    if key not in per_model:
+        per_model[key] = build()
+    return per_model[key]
+
+
 def generate(model: DecoderModel, params, prompt: jax.Array, max_new: int,
              max_len: Optional[int] = None,
              cond_embeddings: Optional[jax.Array] = None) -> GenerationResult:
-    """Greedy batched generation: jitted prefill + one jitted scan loop."""
+    """Greedy batched generation: jitted prefill + one jitted scan loop.
+
+    Compiled functions are memoized on the model keyed by (max_len,
+    n_steps), so repeated requests with the same budget reuse both
+    executables instead of re-tracing them per call.
+    """
     B, S = prompt.shape
     P = model.cfg.prefix_tokens if cond_embeddings is not None else 0
     max_len = max_len or (P + S + max_new)
-    prefill = jax.jit(make_prefill_step(model, max_len))
+    prefill = compiled(model, ("prefill", max_len),
+                       lambda: jax.jit(make_prefill_step(model, max_len)))
     logits, cache = prefill(params, prompt, cond_embeddings)
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
     if max_new > 1:
-        loop = make_decode_loop(model, max_new - 1)
+        loop = compiled(model, ("decode_loop", max_new - 1),
+                        lambda: make_decode_loop(model, max_new - 1))
         toks, cache = loop(params, cache, tok,
                            jnp.asarray(P + S, jnp.int32))
         out.append(jnp.moveaxis(toks[..., 0], 0, 1))  # (n, B, 1) -> (B, n)
     return GenerationResult(tokens=jnp.concatenate(out, axis=1),
                             steps=max_new)
+
+
+# ---------------------------------------------------------------------------
+# Paged continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+class PagedEngine:
+    """Fixed-shape batch-slot serving over a paged packed-KV block pool.
+
+    ``max_slots`` requests decode together in one jitted step; each
+    global-attention layer stores KV in codec-packed physical blocks
+    (``block_l`` = the flash-decode kernel block) shared across slots and
+    addressed through per-slot block tables. Local ring layers and
+    SSD/RGLRU states are window/width-bounded, so they stay per-slot
+    dense. Idle slots run the same step on the reserved trash block and
+    their outputs are discarded — the executable never re-specializes as
+    requests come and go, which is what makes continuous batching free of
+    recompiles.
+
+    The engine is mechanism only: it owns device memory, the block pool
+    and the compiled step; admission, preemption and streaming live in
+    ``serve/scheduler.py``.
+    """
+
+    def __init__(self, model: DecoderModel, params, *, max_slots: int = 8,
+                 max_len: int = 256, num_blocks: Optional[int] = None):
+        if model.kv_container is None:
+            raise ValueError("PagedEngine needs a model with kv_container "
+                             "set (the pool stores packed blocks)")
+        cfg = model.cfg
+        if cfg.prefix_tokens:
+            raise NotImplementedError(
+                "prefix-conditioned archs are not paged-served yet")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.container = model.kv_container
+        self.block_l = ops.DECODE_BLOCK_L
+        # The pool block is the kernel block; rounding max_len up keeps
+        # prefill's packed cache (cache_len) and the pool block grid the
+        # same length, so prefill rows scatter into whole blocks.
+        self.max_len = -(-max_len // self.block_l) * self.block_l
+        self.nmax = self.max_len // self.block_l
+        self.max_slots = int(max_slots)
+        if num_blocks is None:
+            num_blocks = self.max_slots * self.nmax  # full residency
+        self.pool = _pool.BlockPool(num_blocks, self.max_slots, self.nmax,
+                                    self.block_l)
+        # Fail fast if the codec cannot page (no fixed-width geometry).
+        _kvcache.paged_block_spec(cfg, 1, self.block_l, self.container)
+        self.mem = self._init_mem()
+        self._step = jax.jit(self._step_fn, donate_argnums=(1,))
+        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+        self.decode_steps = 0
+
+    # -- device memory ---------------------------------------------------
+
+    def _slot_mem(self, kind: str):
+        cfg = self.cfg
+        if kind == GLOBAL:
+            # +1: physical block 0 is the trash block (pool.TRASH_BLOCK).
+            return _kvcache.paged_block_init(
+                cfg, self.pool.num_blocks + 1, self.block_l, self.container)
+        if kind == LOCAL:
+            return _kvcache.packed_cache_init(cfg, kind, self.max_slots,
+                                              self.max_len, self.container)
+        if kind == SSD:
+            return mamba2.ssd_cache_init(cfg, self.max_slots,
+                                         cfg.compute_dtype)
+        return rglru.lru_cache_init(cfg, self.max_slots, cfg.compute_dtype)
+
+    def _init_mem(self):
+        cfg = self.cfg
+        per = {f"slot{i}": self._slot_mem(k)
+               for i, k in enumerate(cfg.period)}
+        periods = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), per)
+        mem = {"periods": periods}
+        if cfg.remainder:
+            mem["rem"] = {f"slot{i}": self._slot_mem(k)
+                          for i, k in enumerate(cfg.remainder)}
+        return mem
+
+    def cache_bytes(self) -> Dict[str, float]:
+        """Realized pool bytes (total device allocation) and the bytes
+        actually *live* (allocated blocks), per the host block accounting."""
+        leaves = jax.tree_util.tree_leaves(self.mem)
+        total = float(sum(l.size * l.dtype.itemsize for l in leaves))
+        frac = self.pool.used_blocks / max(1, self.pool.num_blocks)
+        return {"total": total, "live_block_fraction": frac}
+
+    # -- prefill ---------------------------------------------------------
+
+    def _scatter_fn(self, mem, pref_cache, slot, ids):
+        """Write one request's prefill cache into slot ``slot``.
+
+        Global layers scatter block-reshaped packed rows to the physical
+        ids in ``ids`` (unallocated logical blocks point at the trash
+        block and receive identical packed-zero rows — harmless); per-slot
+        layers overwrite their slot row wholesale.
+        """
+        nmax, bl = self.nmax, self.block_l
+
+        def put_blocks(pool_arr, part, leading):
+            if leading:
+                blk = part[:, 0].reshape(part.shape[0], nmax, bl,
+                                         *part.shape[3:])
+                return pool_arr.at[:, ids].set(blk)
+            blk = part[0].reshape(nmax, bl, *part.shape[2:])
+            return pool_arr.at[ids].set(blk)
+
+        def set_slot(m, p, leading):
+            def arr(ma, pa):
+                return (ma.at[:, slot].set(pa[:, 0]) if leading
+                        else ma.at[slot].set(pa[0]))
+
+            def one(ma, pa):
+                if isinstance(ma, codecs.PackedTensor):
+                    return codecs.PackedTensor(
+                        ma.codec, ma.shape, ma.dtype,
+                        {k: arr(ma.data[k], pa.data[k]) for k in ma.data})
+                return arr(ma, pa)
+
+            return jax.tree.map(
+                one, m, p,
+                is_leaf=lambda x: isinstance(x, codecs.PackedTensor))
+
+        def scatter_kind(kind, m, p, leading):
+            if kind == GLOBAL:
+                return _kvcache.PagedKV(
+                    k_payload=put_blocks(m.k_payload, p.k.data["payload"],
+                                         leading),
+                    k_bases=put_blocks(m.k_bases, p.k.data["bases"],
+                                       leading),
+                    v_payload=put_blocks(m.v_payload, p.v.data["payload"],
+                                         leading),
+                    v_bases=put_blocks(m.v_bases, p.v.data["bases"],
+                                       leading))
+            return set_slot(m, p, leading)
+
+        out = {"periods": {
+            f"slot{i}": scatter_kind(kind, mem["periods"][f"slot{i}"],
+                                     pref_cache["periods"][f"slot{i}"], True)
+            for i, kind in enumerate(self.cfg.period)}}
+        if self.cfg.remainder:
+            out["rem"] = {
+                f"slot{i}": scatter_kind(kind, mem["rem"][f"slot{i}"],
+                                         pref_cache["rem"][f"slot{i}"],
+                                         False)
+                for i, kind in enumerate(self.cfg.remainder)}
+        return out
+
+    def prefill_into_slot(self, slot: int, prompt: np.ndarray) -> int:
+        """Prefill one request into ``slot``; returns its first token.
+
+        The slot's block table must already cover the prompt
+        (``pool.alloc_upto``). Uses the model's packed prefill at the
+        engine-wide ``max_len``, so every compile is shared across slots
+        and the packed rows are bit-identical to the contiguous serving
+        path at the same budget.
+        """
+        prompt = np.asarray(prompt)
+        assert prompt.ndim == 1 and prompt.size >= 1, prompt.shape
+        if prompt.size >= self.max_len:
+            raise ValueError(f"prompt ({prompt.size}) must leave decode "
+                             f"room inside max_len ({self.max_len})")
+        prefill = compiled(
+            self.model, ("prefill", self.max_len),
+            lambda: jax.jit(make_prefill_step(self.model, self.max_len)))
+        logits, pref_cache = prefill(self.params, jnp.asarray(prompt)[None],
+                                     None)
+        ids = jnp.asarray(self.pool.tables[slot], jnp.int32)
+        self.mem = self._scatter(self.mem, pref_cache,
+                                 jnp.asarray(slot, jnp.int32), ids)
+        return int(jnp.argmax(logits[0, -1]))
+
+    # -- decode ----------------------------------------------------------
+
+    def _step_fn(self, params, mem, tables, toks, pos):
+        logits, mem = self.model.decode_step_paged(params, mem, toks, pos,
+                                                   tables)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, mem
+
+    def decode(self, toks: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """One batched decode step over every slot.
+
+        ``toks``/``pos`` are (max_slots,) host arrays; idle slots carry
+        token 0 at position 0 with a trash-block table row, and their
+        returned tokens are meaningless. Returns (max_slots,) next tokens.
+        """
+        tables = jnp.asarray(self.pool.tables)
+        nxt, self.mem = self._step(
+            self.params, self.mem, tables,
+            jnp.asarray(toks, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32))
+        self.decode_steps += 1
+        return np.asarray(nxt)

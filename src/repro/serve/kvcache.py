@@ -92,12 +92,22 @@ def packed_cache_axes(cfg: ArchConfig, kind: str, batch: int, max_len: int,
 def _splice(cache_pt: codecs.PackedTensor, new_pt: codecs.PackedTensor,
             slot) -> codecs.PackedTensor:
     """Write one packed token row into the ring buffer (every part shares
-    the sequence axis at dim 1)."""
-    data = {
-        k: jax.lax.dynamic_update_slice_in_dim(cache_pt.data[k],
-                                               new_pt.data[k], slot, axis=1)
-        for k in cache_pt.data
-    }
+    the sequence axis at dim 1).
+
+    ``slot`` is a scalar (whole batch writes one slot) or (B,) — one slot
+    per batch row (continuous-batching decode, rows at distinct
+    positions).
+    """
+    if jnp.ndim(slot) == 0:
+        data = {
+            k: jax.lax.dynamic_update_slice_in_dim(
+                cache_pt.data[k], new_pt.data[k], slot, axis=1)
+            for k in cache_pt.data
+        }
+    else:
+        rows = jnp.arange(slot.shape[0])
+        data = {k: cache_pt.data[k].at[rows, slot].set(new_pt.data[k][:, 0])
+                for k in cache_pt.data}
     return codecs.PackedTensor(cache_pt.codec, cache_pt.shape,
                                cache_pt.dtype, data)
 
@@ -124,8 +134,11 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
     L = cache.k.shape[1]
     dtype = h_tok.dtype
 
-    q, k_new, v_new = attention._project_qkv(
-        params, h_tok, cfg, jnp.full((1,), pos, jnp.int32))
+    # pos: scalar (shared decode position) or (B,) per-row positions
+    # (continuous-batching slots).
+    positions = (jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0
+                 else jnp.asarray(pos, jnp.int32)[:, None])
+    q, k_new, v_new = attention._project_qkv(params, h_tok, cfg, positions)
     # As in attention_decode: the new token's K/V must arrive replicated
     # over `model` (the packed cache shards its L dim there), or GSPMD
     # reshards the whole ring buffer on every splice.
@@ -169,3 +182,101 @@ def pack_prefill_cache(cache_kv: attention.KVCache,
     B, L, KH, hd = cache_kv.k.shape
     return PackedKV(k=codec.pack(cache_kv.k.reshape(B, L, KH * hd)),
                     v=codec.pack(cache_kv.v.reshape(B, L, KH * hd)))
+
+
+# ---------------------------------------------------------------------------
+# Paged pool attention (continuous-batching serving engine)
+# ---------------------------------------------------------------------------
+
+
+class PagedKV(NamedTuple):
+    """One global-attention layer's slice of the packed block pool.
+
+    Physical blocks shared by every request: payload (P_blocks, block_l, D)
+    uint8/uint16 and bases (P_blocks, block_l, D // 128) uint8 in the
+    ``sfp_pack_nd`` layout. Which blocks belong to which request lives
+    outside, in the engine's block tables — the pool itself is request-
+    agnostic, which is what lets freed blocks recycle instantly.
+    """
+
+    k_payload: jax.Array
+    k_bases: jax.Array
+    v_payload: jax.Array
+    v_bases: jax.Array
+
+
+def paged_block_spec(cfg: ArchConfig, num_blocks: int, block_l: int,
+                     container: Optional[str] = None) -> PagedKV:
+    """ShapeDtypeStruct skeleton of one layer's pool slice."""
+    D = cfg.n_kv_heads * cfg.head_dim_
+    assert D % 128 == 0, (D, "KV feature dim must align to 128 lanes")
+    codec = _codec(container)
+    fields = codec.pack_fields(cfg.compute_dtype)
+    if fields is None:
+        raise ValueError(
+            f"paged KV pools need a fixed-width payload geometry; codec "
+            f"{codec.name!r} has none (pack_fields() is None)")
+    pd = jnp.dtype(fields.payload_dtype)
+    payload = jax.ShapeDtypeStruct((num_blocks, block_l, D), pd)
+    bases = jax.ShapeDtypeStruct((num_blocks, block_l, D // 128), jnp.uint8)
+    return PagedKV(k_payload=payload, k_bases=bases,
+                   v_payload=payload, v_bases=bases)
+
+
+def paged_block_init(cfg: ArchConfig, num_blocks: int, block_l: int,
+                     container: Optional[str] = None) -> PagedKV:
+    spec = paged_block_spec(cfg, num_blocks, block_l, container)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def attention_decode_paged(params, h_tok: jax.Array, paged: PagedKV,
+                           tables: jax.Array, pos: jax.Array,
+                           cfg: ArchConfig, *,
+                           container: Optional[str] = None
+                           ) -> Tuple[jax.Array, PagedKV]:
+    """One continuous-batching decode step over the paged block pool.
+
+    ``tables`` (B, nb) int32 maps each batch row's logical KV blocks to
+    physical pool blocks; ``pos`` (B,) is each row's absolute decode
+    position. The new token's K/V row is packed and scattered into the
+    row's current block (idle rows must point at the reserved trash
+    block), then attention reads the pool directly through the paged
+    flash-decode kernel — the gather happens inside the kernel grid via
+    the scalar-prefetched block table. Global attention only (local ring
+    buffers are window-bounded and stay per-slot contiguous). The pool is
+    a single-host structure; multi-host pool sharding is future work.
+    """
+    codec = _codec(container)
+    B = h_tok.shape[0]
+    hd, H, KH = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    D = KH * hd
+    block_l = paged.k_payload.shape[1]
+    dtype = h_tok.dtype
+    fields = codec.pack_fields(dtype)
+    assert fields is not None, codec.name
+
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = attention._project_qkv(params, h_tok, cfg,
+                                             pos[:, None])
+
+    # Pack only the new rows, then scatter each into its block slot.
+    k_pt = codec.pack(k_new.reshape(B, 1, D).astype(dtype))
+    v_pt = codec.pack(v_new.reshape(B, 1, D).astype(dtype))
+    rows = jnp.arange(B)
+    phys = tables[rows, pos // block_l]
+    off = pos % block_l
+    paged = PagedKV(
+        k_payload=paged.k_payload.at[phys, off].set(
+            k_pt.data["payload"][:, 0]),
+        k_bases=paged.k_bases.at[phys, off].set(k_pt.data["bases"][:, 0]),
+        v_payload=paged.v_payload.at[phys, off].set(
+            v_pt.data["payload"][:, 0]),
+        v_bases=paged.v_bases.at[phys, off].set(v_pt.data["bases"][:, 0]))
+
+    o = ops.paged_flash_decode(
+        q.astype(dtype),
+        ops.Packed(payload=paged.k_payload, bases=paged.k_bases),
+        ops.Packed(payload=paged.v_payload, bases=paged.v_bases),
+        tables, pos, fields=fields, softcap=cfg.attn_softcap)
+    out = o.reshape(B, 1, H * hd) @ params["wo"]
+    return out, paged

@@ -1,0 +1,136 @@
+"""Paged packed-KV block pool: host-side allocator for the serving engine.
+
+The serving analogue of the paper's containers-at-the-memory-interface: KV
+bytes live *packed* in fixed-size physical blocks (one block = the packed
+flash-decode kernel's KV block — ``ops.DECODE_BLOCK_L`` token rows), and a
+request owns blocks, not a contiguous region. Device memory is one
+request-agnostic pool slice per global-attention layer
+(``kvcache.PagedKV``); this module owns everything host-side: the free
+list, per-slot block tables, admission accounting and eviction. Because
+blocks are codec-packed, pool capacity is measured in *compressed* bytes —
+an sfp8 pool holds ~2x the tokens of a raw bf16 cache in the same HBM
+footprint, which is exactly the admission-throughput win the scheduler
+converts into tok/s.
+
+Physical block 0 is reserved as the *trash block*: idle engine slots (and
+logical blocks past a row's allocation) point their table entries at it,
+so the jitted fixed-shape decode step can always scatter/gather without
+branching — writes to block 0 are garbage by construction and never read
+through a valid position mask.
+
+The codec geometry is uniform across the pool (one container name — possibly
+a policy-derived ``sfp*-m*e*`` geometry, see serve/precision.py); blocks
+are not retyped on free/realloc.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+TRASH_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_l: int) -> int:
+    """Physical blocks needed to hold ``n_tokens`` KV rows."""
+    return max(0, -(-int(n_tokens) // block_l))
+
+
+@dataclasses.dataclass
+class PoolStats:
+    num_blocks: int      # allocatable blocks (trash block excluded)
+    free_blocks: int
+    used_blocks: int
+    peak_used: int
+
+
+class BlockPool:
+    """Free list + per-slot block tables over ``num_blocks`` physical blocks.
+
+    ``num_blocks`` counts *allocatable* blocks; one extra trash block is
+    implicit (physical id 0), so device pool arrays must be sized
+    ``num_blocks + 1``. Tables are dense numpy (max_slots, max_logical)
+    int32 handed to the jitted step each call; unallocated entries point
+    at the trash block.
+    """
+
+    def __init__(self, num_blocks: int, max_slots: int, max_logical: int,
+                 block_l: int):
+        assert num_blocks >= 1 and max_slots >= 1 and max_logical >= 1
+        self.num_blocks = int(num_blocks)
+        self.block_l = int(block_l)
+        self.max_slots = int(max_slots)
+        self.max_logical = int(max_logical)
+        # LIFO free list: physical ids 1..num_blocks (0 is trash).
+        self._free: List[int] = list(range(self.num_blocks, 0, -1))
+        self._owned: Dict[int, List[int]] = {}  # slot -> physical ids
+        self.tables = np.full((max_slots, max_logical), TRASH_BLOCK,
+                              np.int32)
+        self.peak_used = 0
+
+    # -- accounting ------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def stats(self) -> PoolStats:
+        return PoolStats(num_blocks=self.num_blocks,
+                         free_blocks=self.free_blocks,
+                         used_blocks=self.used_blocks,
+                         peak_used=self.peak_used)
+
+    def slot_blocks(self, slot: int) -> int:
+        return len(self._owned.get(slot, ()))
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Admission gate: blocks covering the prompt KV rows *and* the
+        first decode token must fit, so a fresh request always takes its
+        first step without immediately preempting someone. (That is one
+        extra block only when the prompt lands exactly on a block
+        boundary — a blanket +1 would leave one slot's worth of pool
+        permanently idle at full residency.)"""
+        return blocks_for(n_tokens + 1, self.block_l) <= self.free_blocks
+
+    # -- allocation ------------------------------------------------------
+
+    def alloc_upto(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover positions [0, n_tokens).
+
+        Returns False (allocating nothing) if the pool cannot supply every
+        missing block — the caller then preempts someone and retries.
+        """
+        need = blocks_for(n_tokens, self.block_l)
+        if need > self.max_logical:
+            raise ValueError(
+                f"request needs {need} blocks > max_logical "
+                f"{self.max_logical} (engine max_len too small)")
+        owned = self._owned.setdefault(slot, [])
+        missing = need - len(owned)
+        if missing <= 0:
+            return True
+        if missing > len(self._free):
+            return False
+        for _ in range(missing):
+            phys = self._free.pop()
+            self.tables[slot, len(owned)] = phys
+            owned.append(phys)
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return True
+
+    def free_slot(self, slot: int) -> int:
+        """Release every block ``slot`` owns (finish or preemption);
+        returns the number of blocks recycled."""
+        owned = self._owned.pop(slot, [])
+        self._free.extend(reversed(owned))
+        self.tables[slot, :] = TRASH_BLOCK
+        return len(owned)
+
+    def reset(self) -> None:
+        for slot in list(self._owned):
+            self.free_slot(slot)

@@ -1,0 +1,72 @@
+"""Policy-aware serving precision: learned bitlengths -> pool codec geometry.
+
+The paper's deployment round-up (§IV-A4): bitlengths learned during
+training (Quantum Mantissa / Quantum Exponent / BitWave) carry over to
+inference. Training stamps its final per-run ``PrecisionDecision`` summary
+into every checkpoint manifest (``CheckpointManager.save(extra=...)`` via
+the train loop); this module reads it back with ``read_extra`` and derives
+the serving KV pool's container from it — a parametric
+``sfp{8|16}-m{K}e{E}`` geometry (codecs/sfp.py) whose payload word holds
+exactly the learned mantissa bits and a delta-exponent field sized to the
+learned exponent range.
+
+No policy state is restored and no model leaves are touched: the decision
+summary is tiny JSON metadata, so a serving host can size its pool before
+it ever loads weights.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def container_for_decision(man_bits: float, exp_bits: float) -> str:
+    """Map a (possibly fractional) learned decision to a container name.
+
+    Learned bitlengths are deployed rounded up (a fractional bit cannot be
+    stored); the delta-exponent field gets the learned exponent bitlength
+    (clamped to [2, 7] — the shared 128-lane base absorbs the rest of the
+    range, and deltas below 2 bits cannot distinguish zero from
+    saturation). The payload word is the smallest of 8/16 that fits
+    sign + dexp + mantissa.
+    """
+    man = max(1, int(math.ceil(man_bits - 1e-9)))
+    dexp = max(2, min(7, int(math.ceil(exp_bits - 1e-9))))
+    payload = 8 if 1 + dexp + man <= 8 else 16
+    man = min(man, payload - 1 - dexp)
+    return f"sfp{payload}-m{man}e{dexp}"
+
+
+def decision_from_extra(extra: Dict[str, Any]) -> Optional[Dict[str, float]]:
+    d = extra.get("decision")
+    if not isinstance(d, dict):
+        return None
+    try:
+        return {"man_bits": float(d["man_bits"]),
+                "exp_bits": float(d["exp_bits"])}
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def container_from_checkpoint(ckpt_dir: str,
+                              step: Optional[int] = None) -> str:
+    """Serving container for a trained run's checkpoint directory.
+
+    Prefers the stamped PrecisionDecision summary (policy-learned
+    geometry); falls back to the container the run trained with, then to
+    the registry default. Raises if the directory holds no checkpoints.
+    """
+    from repro import codecs
+
+    mgr = CheckpointManager(ckpt_dir)
+    if step is None:
+        step = mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    extra = mgr.read_extra(step)
+    decision = decision_from_extra(extra)
+    if decision is not None:
+        return container_for_decision(**decision)
+    return extra.get("container") or codecs.DEFAULT_CONTAINER

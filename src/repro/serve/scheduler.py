@@ -1,0 +1,219 @@
+"""Continuous-batching request scheduler over the paged serving engine.
+
+vLLM-style control loop, sized down to this repo's engine: a FIFO request
+queue, admission gated on free packed blocks (the pool measures capacity
+in *compressed* bytes, so a tighter container admits more concurrent
+requests), prefill/decode interleaving (each ``step()`` first admits
+arrived requests — one prefill each — then advances every running slot by
+one batched decode step), slot recycling (a finished request frees its
+blocks and its slot in the same step; the next pending request takes them
+without recompiling anything), and recompute-preemption (when the pool
+cannot supply a running request's next block, the youngest other request
+is evicted, its blocks freed, and it re-enters the queue with its
+already-emitted tokens folded into the prompt — emitted tokens are never
+retracted).
+
+Tokens stream per request: every emitted token fires ``on_token(uid,
+token, done)`` (scheduler-wide and per-request callbacks) the step it is
+produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.engine import PagedEngine
+
+OnToken = Callable[[Any, int, bool], None]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is in the caller's clock
+    (the trace simulator drives a virtual clock); ``on_token`` streams
+    this request's tokens as they are produced."""
+
+    uid: Any
+    prompt: np.ndarray          # (S,) int32 token ids
+    max_new: int
+    arrival: float = 0.0
+    on_token: Optional[OnToken] = None
+
+
+@dataclasses.dataclass
+class _Running:
+    req: Request
+    slot: int
+    admit_seq: int
+    n_ctx: int                  # tokens whose KV is in the pool (prompt')
+    last_tok: int               # most recent emitted token (next step's input)
+    emitted: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    admitted: int = 0
+    finished: int = 0
+    preemptions: int = 0
+    decode_steps: int = 0
+    emitted_tokens: int = 0
+
+
+class Scheduler:
+    def __init__(self, engine: PagedEngine,
+                 on_token: Optional[OnToken] = None):
+        self.engine = engine
+        self.on_token = on_token
+        self.pending: "deque[Request]" = deque()
+        self.running: Dict[int, _Running] = {}
+        self.free_slots = list(range(engine.max_slots - 1, -1, -1))
+        self.finished: Dict[Any, np.ndarray] = {}
+        self.stats = SchedulerStats()
+        self._admit_seq = 0
+        # Full per-uid emission history: survives recompute-preemption
+        # (_Running.emitted only tracks the current residency — its length
+        # is what the requeued max_new is discounted by).
+        self._history: Dict[Any, List[int]] = {}
+
+    # -- queue -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and not self.running
+
+    # -- internals -------------------------------------------------------
+
+    def _emit(self, st: _Running, tok: int) -> Tuple[Any, int, bool]:
+        st.emitted.append(int(tok))
+        st.last_tok = int(tok)
+        self._history.setdefault(st.req.uid, []).append(int(tok))
+        self.stats.emitted_tokens += 1
+        done = (len(st.emitted) >= st.req.max_new
+                or st.n_ctx + 1 >= self.engine.max_len)
+        for cb in (st.req.on_token, self.on_token):
+            if cb is not None:
+                cb(st.req.uid, int(tok), done)
+        return (st.req.uid, int(tok), done)
+
+    def _finish(self, st: _Running) -> None:
+        self.engine.pool.free_slot(st.slot)
+        del self.running[st.slot]
+        self.free_slots.append(st.slot)
+        self.finished[st.req.uid] = np.asarray(
+            self._history.get(st.req.uid, st.emitted), np.int32)
+        self.stats.finished += 1
+
+    def _preempt(self, st: _Running) -> None:
+        """Recompute-preemption: fold emitted tokens into the prompt and
+        requeue at the front; the victim's blocks and slot free now."""
+        self.engine.pool.free_slot(st.slot)
+        del self.running[st.slot]
+        self.free_slots.append(st.slot)
+        req = st.req
+        if st.emitted:
+            req = dataclasses.replace(
+                req, prompt=np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(st.emitted, np.int32)]),
+                max_new=req.max_new - len(st.emitted))
+        self.pending.appendleft(req)
+        self.stats.preemptions += 1
+
+    def _admit(self, now: Optional[float],
+               emitted: List[Tuple[Any, int, bool]]) -> None:
+        pool = self.engine.pool
+        while self.pending and self.free_slots:
+            req = self.pending[0]
+            if now is not None and req.arrival > now:
+                break  # FIFO: later arrivals queue behind
+            n0 = int(np.asarray(req.prompt).size)
+            if not pool.can_admit(n0):
+                from repro.serve.pool import blocks_for
+                if blocks_for(n0 + 1, pool.block_l) > pool.num_blocks:
+                    raise RuntimeError(
+                        f"pool of {pool.num_blocks} blocks cannot ever "
+                        f"admit a request of {n0} prompt tokens")
+                break  # transient: blocks free up as running requests end
+            self.pending.popleft()
+            slot = self.free_slots.pop()
+            ok = pool.alloc_upto(slot, n0)
+            assert ok, "can_admit guaranteed the blocks"
+            tok0 = self.engine.prefill_into_slot(slot, req.prompt)
+            self._admit_seq += 1
+            st = _Running(req=req, slot=slot, admit_seq=self._admit_seq,
+                          n_ctx=n0, last_tok=tok0)
+            self.running[slot] = st
+            self.stats.admitted += 1
+            emitted.append(self._emit(st, tok0))
+            if emitted[-1][2]:  # max_new == 1 (or budget exhausted)
+                self._finish(st)
+
+    def _ensure_blocks(self) -> None:
+        """Every running slot needs its next position's block before the
+        batched step; when the pool runs dry the *youngest* running
+        request (possibly the requester itself) is preempted — oldest-
+        first priority, so head-of-line requests always drain."""
+        pool = self.engine.pool
+        for slot in sorted(self.running,
+                           key=lambda s: self.running[s].admit_seq):
+            st = self.running.get(slot)
+            if st is None:  # preempted earlier this round
+                continue
+            while not pool.alloc_upto(slot, st.n_ctx + 1):
+                victim = max(self.running.values(),
+                             key=lambda r: r.admit_seq)
+                if victim.slot == slot and len(self.running) == 1:
+                    raise RuntimeError(
+                        f"pool of {pool.num_blocks} blocks cannot hold one "
+                        f"request of {st.n_ctx + 1} tokens")
+                self._preempt(victim)
+                if victim.slot == slot:
+                    break  # requester preempted itself; skip its step
+
+    # -- the loop --------------------------------------------------------
+
+    def step(self, now: Optional[float] = None
+             ) -> List[Tuple[Any, int, bool]]:
+        """Admit arrived requests, then advance every running slot one
+        token. Returns the (uid, token, done) tuples emitted this step."""
+        emitted: List[Tuple[Any, int, bool]] = []
+        self._admit(now, emitted)
+        if not self.running:
+            return emitted
+        self._ensure_blocks()
+
+        toks = np.zeros(self.engine.max_slots, np.int32)
+        pos = np.zeros(self.engine.max_slots, np.int32)
+        for st in self.running.values():
+            toks[st.slot] = st.last_tok
+            pos[st.slot] = st.n_ctx  # the input token's absolute position
+        nxt = self.engine.decode(toks, pos)
+        self.stats.decode_steps += 1
+
+        for st in list(self.running.values()):
+            st.n_ctx += 1
+            _, _, done = res = self._emit(st, int(nxt[st.slot]))
+            emitted.append(res)
+            if done:
+                self._finish(st)
+        return emitted
+
+    def run(self, requests=None, now_fn=None, max_steps: int = 100_000
+            ) -> Dict[Any, np.ndarray]:
+        """Drive until every submitted request finishes. ``now_fn`` feeds
+        the admission clock (trace simulation); None admits on submit
+        order only."""
+        if requests:
+            for r in requests:
+                self.submit(r)
+        for _ in range(max_steps):
+            if self.idle:
+                return dict(self.finished)
+            self.step(now=None if now_fn is None else now_fn())
+        raise RuntimeError(f"scheduler did not drain in {max_steps} steps")

@@ -36,8 +36,10 @@ class LoopConfig:
     max_restarts: int = 3
     # JSON-able run metadata recorded in every checkpoint manifest (e.g.
     # the precision-policy name, so restores can sanity-check the state
-    # tree they are about to fill).
-    ckpt_extra: Optional[Dict[str, Any]] = None
+    # tree they are about to fill). May be a callable(state) -> dict so
+    # per-save dynamic metadata — the policy's *current* PrecisionDecision
+    # summary, which policy-aware serving reads back — is stamped too.
+    ckpt_extra: Optional[Any] = None
 
 
 def _scalarize(v):
@@ -45,6 +47,10 @@ def _scalarize(v):
     trajectories); both must survive the JSONL sink."""
     a = np.asarray(v)
     return a.tolist() if a.ndim else float(a)
+
+
+def _resolve_extra(extra, state):
+    return extra(state) if callable(extra) else extra
 
 
 @dataclasses.dataclass
@@ -102,7 +108,7 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
                 step += 1
                 if mgr is not None and step % cfg.ckpt_every == 0:
                     mgr.save(step, state, blocking=False,
-                             extra=cfg.ckpt_extra)
+                             extra=_resolve_extra(cfg.ckpt_extra, state))
         except KeyboardInterrupt:
             raise
         except Exception as e:
@@ -120,6 +126,7 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
             continue
 
     if mgr is not None:
-        mgr.save(step, state, blocking=True, extra=cfg.ckpt_extra)
+        mgr.save(step, state, blocking=True,
+                 extra=_resolve_extra(cfg.ckpt_extra, state))
     return LoopResult(state=state, history=history, restarts=restarts,
                       straggler_steps=stragglers)

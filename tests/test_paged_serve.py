@@ -1,0 +1,387 @@
+"""Paged serving engine: block pool invariants, scheduler mechanics
+(admission gating, preemption, slot recycling, streaming), paged-vs-
+contiguous token equivalence under continuous batching, and policy-aware
+container resolution from checkpoint metadata."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs, configs
+from repro.configs.base import reduced
+from repro.kernels import ops
+from repro.models.model import DecoderModel
+from repro.serve import engine, kvcache, precision
+from repro.serve.pool import TRASH_BLOCK, BlockPool, blocks_for
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _model(name, container, **over):
+    cfg = dataclasses.replace(reduced(configs.get(name)), dtype="float32",
+                              **over)
+    return cfg, DecoderModel(cfg, kv_container=container)
+
+
+def _prompts(rng, cfg, sizes):
+    return [rng.randint(0, cfg.vocab, size=s).astype(np.int32)
+            for s in sizes]
+
+
+# ---------------------------------------------------------------------------
+# Block pool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_trash_invariants():
+    pool = BlockPool(num_blocks=4, max_slots=2, max_logical=3, block_l=16)
+    assert blocks_for(0, 16) == 0 and blocks_for(1, 16) == 1
+    assert blocks_for(16, 16) == 1 and blocks_for(17, 16) == 2
+    assert pool.free_blocks == 4
+    assert pool.alloc_upto(0, 33)  # 3 blocks
+    assert pool.used_blocks == 3
+    assert TRASH_BLOCK not in pool.tables[0, :3]
+    assert pool.tables[0, 2] != TRASH_BLOCK
+    assert not pool.alloc_upto(1, 17)   # needs 2, only 1 free
+    assert pool.free_blocks == 1        # failed alloc takes nothing
+    assert pool.alloc_upto(1, 16)
+    assert pool.free_blocks == 0
+    assert pool.free_slot(0) == 3
+    assert pool.free_blocks == 3
+    assert (pool.tables[0] == TRASH_BLOCK).all()
+    # growing an existing allocation is idempotent below the watermark
+    assert pool.alloc_upto(1, 8) and pool.used_blocks == 1
+    with pytest.raises(ValueError):
+        pool.alloc_upto(1, 16 * 3 + 1)  # > max_logical
+
+
+def test_pool_admission_gate_keeps_decode_headroom():
+    pool = BlockPool(num_blocks=3, max_slots=2, max_logical=4, block_l=16)
+    assert pool.can_admit(47)       # prompt + first token fit 3 blocks
+    assert not pool.can_admit(48)   # block-aligned prompt needs a 4th
+    pool.alloc_upto(0, 17)          # 2 blocks used, 1 free
+    assert pool.can_admit(15) and not pool.can_admit(16)
+    # Full residency must be reachable: a one-block pool admits a request
+    # whose prompt + first token fit one block (B=1 bench regression).
+    tiny = BlockPool(num_blocks=1, max_slots=1, max_logical=1, block_l=128)
+    assert tiny.can_admit(120) and not tiny.can_admit(128)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-driven generation == per-request engine.generate
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_matches_generate_staggered():
+    """>= 8 requests with mixed prompt/output lengths and staggered
+    arrivals, decoded as a continuous batch over the sfp8 pool, must emit
+    exactly the tokens per-request generate emits at the same budget
+    (fused interpret kernels on both sides — bit-exact packed paths)."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    sizes = [5, 9, 5, 12, 9, 5, 7, 9]
+    news = [4, 3, 5, 2, 4, 3, 2, 3]
+    reqs = [Request(uid=i, prompt=p, max_new=n, arrival=0.3 * i)
+            for i, (p, n) in enumerate(zip(_prompts(rng, cfg, sizes), news))]
+    ops.force_backend("interpret")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=3, max_len=128)
+        sched = Scheduler(eng)
+        clock = {"t": 0.0}
+
+        def now():
+            clock["t"] += 0.25
+            return clock["t"]
+
+        out = sched.run(reqs, now_fn=now)
+        assert sched.stats.preemptions == 0  # full-residency pool
+        assert sched.stats.admitted == len(reqs)
+        for r in reqs:
+            want = engine.generate(model, params,
+                                   jnp.asarray(r.prompt)[None],
+                                   max_new=r.max_new, max_len=eng.max_len)
+            np.testing.assert_array_equal(out[r.uid],
+                                          np.asarray(want.tokens[0]))
+    finally:
+        ops.force_backend(None)
+    # Slots were recycled: more requests than slots, all finished.
+    assert len(out) == len(reqs) > eng.max_slots
+
+
+def test_scheduler_matches_generate_gqa4():
+    """GQA 4 (one kv head shared by four q heads) through the whole
+    engine: grouped q heads share gathered pool blocks in the paged
+    kernel; tokens must equal per-request generate."""
+    cfg, model = _model("mistral-large-123b", "sfp16", n_kv_heads=1,
+                        head_dim=128)
+    assert cfg.n_heads // cfg.n_kv_heads == 4
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    reqs = [Request(uid=i, prompt=p, max_new=3)
+            for i, p in enumerate(_prompts(rng, cfg, [5, 8]))]
+    ops.force_backend("interpret")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128)
+        out = Scheduler(eng).run(reqs)
+        for r in reqs:
+            want = engine.generate(model, params,
+                                   jnp.asarray(r.prompt)[None],
+                                   max_new=r.max_new, max_len=eng.max_len)
+            np.testing.assert_array_equal(out[r.uid],
+                                          np.asarray(want.tokens[0]))
+    finally:
+        ops.force_backend(None)
+
+
+@pytest.mark.slow
+def test_scheduler_matches_generate_ring_wrap_and_block_crossing():
+    """gemma3 (5x local + global): decode past the sliding window wraps
+    the per-slot packed rings, and one long prompt crosses the 128-row
+    pool block boundary mid-decode — tokens must still equal generate."""
+    cfg, model = _model("gemma3-12b", "sfp16", window=16)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    reqs = [
+        Request(uid=0, prompt=_prompts(rng, cfg, [8])[0], max_new=20),
+        Request(uid=1, prompt=_prompts(rng, cfg, [126])[0], max_new=5),
+        Request(uid=2, prompt=_prompts(rng, cfg, [5])[0], max_new=3),
+    ]
+    ops.force_backend("interpret")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=3, max_len=160)
+        out = Scheduler(eng).run(reqs)
+        for r in reqs:
+            want = engine.generate(model, params,
+                                   jnp.asarray(r.prompt)[None],
+                                   max_new=r.max_new, max_len=eng.max_len)
+            np.testing.assert_array_equal(out[r.uid],
+                                          np.asarray(want.tokens[0]))
+    finally:
+        ops.force_backend(None)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler mechanics (ref backend: fast, no bit-exactness needed)
+# ---------------------------------------------------------------------------
+
+
+def _run_ref(model, params, reqs, **eng_kw):
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, **eng_kw)
+        sched = Scheduler(eng)
+        out = sched.run(reqs)
+    finally:
+        ops.force_backend(None)
+    return eng, sched, out
+
+
+def test_scheduler_slot_recycling_and_streaming():
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    stream = []
+    reqs = [Request(uid=i, prompt=p, max_new=3,
+                    on_token=lambda uid, tok, done:
+                    stream.append((uid, tok, done)))
+            for i, p in enumerate(_prompts(rng, cfg, [4] * 5))]
+    eng, sched, out = _run_ref(model, params, reqs, max_slots=2,
+                               max_len=128)
+    assert sorted(out) == [0, 1, 2, 3, 4]
+    assert all(len(v) == 3 for v in out.values())
+    assert sched.stats.finished == 5 and sched.stats.admitted == 5
+    # Streaming: per uid, tokens arrive in order and exactly the last
+    # carries done=True; the stream equals the final results.
+    per = {}
+    for uid, tok, done in stream:
+        per.setdefault(uid, []).append((tok, done))
+    for uid, toks in per.items():
+        assert [t for t, _ in toks] == out[uid].tolist()
+        assert [d for _, d in toks] == [False, False, True]
+    # Pool fully drained after the run — everything recycled.
+    assert eng.pool.used_blocks == 0
+
+
+def test_scheduler_admission_gated_on_free_blocks():
+    """With a pool that fits one request's blocks (plus headroom), the
+    second request must queue until the first finishes."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    reqs = [Request(uid=i, prompt=p, max_new=2)
+            for i, p in enumerate(_prompts(rng, cfg, [4, 4]))]
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128,
+                                 num_blocks=1)
+        sched = Scheduler(eng)
+        for r in reqs:
+            sched.submit(r)
+        first = sched.step()
+        # Only request 0 admitted: it holds the pool's single block, so
+        # request 1 queues despite a free slot.
+        assert {uid for uid, _, _ in first} == {0}
+        assert sched.stats.admitted == 1 and len(sched.pending) == 1
+        out = sched.run()
+    finally:
+        ops.force_backend(None)
+    assert all(len(out[i]) == 2 for i in (0, 1))
+    assert sched.stats.preemptions == 0
+
+
+def test_scheduler_preempts_youngest_and_recovers():
+    """Two long requests crossing a block boundary with a 3-block pool:
+    the younger is evicted (recompute), re-admitted after the older
+    drains, and still emits its full budget — with every token recorded
+    across the preemption."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(4)
+    reqs = [Request(uid=i, prompt=p, max_new=6)
+            for i, p in enumerate(_prompts(rng, cfg, [126, 126]))]
+    eng, sched, out = _run_ref(model, params, reqs, max_slots=2,
+                               max_len=256, num_blocks=3)
+    assert sched.stats.preemptions >= 1
+    assert all(len(out[i]) == 6 for i in (0, 1))
+    assert eng.pool.used_blocks == 0
+
+
+def test_single_oversized_request_raises():
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(5)
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=256,
+                                 num_blocks=1)
+        # Prompt + first token can never fit the pool: rejected up front.
+        req = Request(uid=0, prompt=_prompts(rng, cfg, [129])[0], max_new=2)
+        with pytest.raises(RuntimeError, match="cannot ever admit"):
+            Scheduler(eng).run([req])
+        # Admissible but outgrows the pool mid-decode with nobody left to
+        # preempt: raises at the growth point instead of spinning.
+        req2 = Request(uid=1, prompt=_prompts(rng, cfg, [126])[0],
+                       max_new=8)
+        with pytest.raises(RuntimeError, match="cannot hold"):
+            Scheduler(eng).run([req2])
+    finally:
+        ops.force_backend(None)
+
+
+def test_paged_engine_rejects_raw_and_unfuseable_codecs():
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="float32")
+    params = DecoderModel(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_container"):
+        engine.PagedEngine(DecoderModel(cfg), params)
+    with pytest.raises(ValueError, match="fixed-width"):
+        engine.PagedEngine(DecoderModel(cfg, kv_container="gecko8"), params)
+
+
+def test_generate_memoizes_compiled_functions():
+    """Repeated generate() calls with the same budget must reuse the
+    compiled prefill and decode-loop callables (no per-call re-jit)."""
+    cfg, model = _model("mistral-large-123b", None)
+    model = DecoderModel(cfg)  # raw cache is fine for this
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.asarray(np.arange(6, dtype=np.int32))[None]
+    r1 = engine.generate(model, params, prompt, max_new=3)
+    cache = model.__dict__[engine._CACHE_ATTR]
+    keys1 = set(cache)
+    fns1 = dict(cache)
+    r2 = engine.generate(model, params, prompt, max_new=3)
+    assert set(cache) == keys1
+    for k in keys1:
+        assert cache[k] is fns1[k]
+    np.testing.assert_array_equal(np.asarray(r1.tokens),
+                                  np.asarray(r2.tokens))
+    # the memo must not immortalize the model: it lives on the instance
+    # (an ordinary garbage cycle), not in any module-level registry.
+    import gc
+    import weakref
+    ref = weakref.ref(model)
+    del model, cache, fns1, r1, r2
+    gc.collect()
+    assert ref() is None
+
+
+# ---------------------------------------------------------------------------
+# Policy-aware precision
+# ---------------------------------------------------------------------------
+
+
+def test_container_for_decision_mapping():
+    assert precision.container_for_decision(3.0, 4.0) == "sfp8-m3e4"
+    assert precision.container_for_decision(2.3, 3.7) == "sfp8-m3e4"
+    assert precision.container_for_decision(7.0, 5.0) == "sfp16-m7e5"
+    # exponent clamps into the delta field range
+    assert precision.container_for_decision(3.0, 8.0) == "sfp16-m3e7"
+    assert precision.container_for_decision(1.0, 1.0) == "sfp8-m1e2"
+
+
+def test_parametric_sfp_codec_resolves_and_roundtrips():
+    codec = codecs.get("sfp8-m3e4")  # sfp8 by another name
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 128), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(codec.roundtrip(x), np.float32),
+        np.asarray(codecs.get("sfp8").roundtrip(x), np.float32))
+    # learned geometry narrower than sfp16's default
+    c2 = codecs.get("sfp16-m5e3")
+    f = c2.pack_fields(jnp.float32)
+    assert (f.man_keep, f.dexp_bits, f.payload_bits) == (5, 3, 16)
+    y = c2.roundtrip(x)
+    assert np.isfinite(np.asarray(y)).all()
+    with pytest.raises(KeyError):
+        codecs.get("sfp12-m3e4")  # only 8/16-bit payload words exist
+
+
+def test_container_from_checkpoint_decision_stamp(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": np.zeros((2, 2), np.float32)}
+    mgr.save(1, state, extra={"policy": "qm+qe", "container": "sfp8",
+                              "decision": {"man_bits": 4.2,
+                                           "exp_bits": 5.6}})
+    name = precision.container_from_checkpoint(str(tmp_path))
+    assert name == "sfp16-m5e6"
+    # the derived container is servable end-to-end
+    f = codecs.get(name).pack_fields(jnp.float32)
+    assert f.payload_bits == 16 and f.man_keep == 5 and f.dexp_bits == 6
+
+    # legacy checkpoints without a decision fall back to the run container
+    mgr2 = CheckpointManager(str(tmp_path / "legacy"))
+    mgr2.save(1, state, extra={"policy": "qm", "container": "sfp16"})
+    assert precision.container_from_checkpoint(
+        str(tmp_path / "legacy")) == "sfp16"
+    mgr3 = CheckpointManager(str(tmp_path / "bare"))
+    mgr3.save(1, state)
+    assert (precision.container_from_checkpoint(str(tmp_path / "bare"))
+            == codecs.DEFAULT_CONTAINER)
+    with pytest.raises(FileNotFoundError):
+        precision.container_from_checkpoint(str(tmp_path / "empty"))
+
+
+def test_paged_engine_serves_policy_derived_container():
+    """End to end: a pool built from a policy-derived parametric geometry
+    generates tokens identical to contiguous generate with that codec."""
+    cfg, model = _model("mistral-large-123b",
+                        precision.container_for_decision(6.0, 5.0))
+    assert model.kv_container == "sfp16-m6e5"
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(6)
+    reqs = [Request(uid=i, prompt=p, max_new=3)
+            for i, p in enumerate(_prompts(rng, cfg, [5, 7]))]
+    ops.force_backend("interpret")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128)
+        out = Scheduler(eng).run(reqs)
+        for r in reqs:
+            want = engine.generate(model, params,
+                                   jnp.asarray(r.prompt)[None],
+                                   max_new=r.max_new, max_len=eng.max_len)
+            np.testing.assert_array_equal(out[r.uid],
+                                          np.asarray(want.tokens[0]))
+    finally:
+        ops.force_backend(None)
