@@ -1,26 +1,46 @@
 """Codec subsystem benchmark: fused quantize+pack vs the two-kernel
-sequence, plus realized footprints of every registered container.
+sequence, plus realized footprints of every registered container — now
+including the *dense* variable payload-width family.
 
 The paper's hardware compressor fuses the mantissa quantizer with the
 container packer so a tensor crosses the memory boundary once. The TPU
-realization is kernels/sfp_pack.py's ``sfp_quantize_pack``; this benchmark
-measures the same fusion on the reference backend — two separately
-compiled executables (the old ops.mantissa_quantize -> ops.sfp_compress_nd
+realization is kernels/sfp_pack.py's ``sfp_quantize_pack`` (fixed-lane)
+and kernels/bitplane_pack.py (dense bit planes); this benchmark measures
+the same fusion on the reference backend — two separately compiled
+executables (the old ops.mantissa_quantize -> ops.sfp_compress_nd
 sequence, which materializes the quantized intermediate) against the
-single-pass fused pack.
+single-pass fused pack — and prices the realized packed bytes of each
+container via ``codecs.packed_bits`` (plane layout + bases, not idealized
+bit counts).
 
-Emitted as BENCH_codecs.json by benchmarks/run.py.
+Headline: dense ``sfp-m2e4`` stores 7 bits/value + 8 bits per 128-lane
+group = 7.06 bits — 0.44x of bf16 and 0.22x of fp32, below the 0.504x
+floor any fixed 8-bit lane imposes; ``sfp-m1e2`` (4 bits/value) reaches
+0.25x of bf16. The run *asserts* the regression guard the CI smoke relies
+on: dense sfp-m2e4 packed bytes < fixed-lane sfp8 packed bytes on the
+bench shape.
+
+Emitted as BENCH_codecs.json standalone (``--quick`` for the CI smoke
+shape) or via benchmarks/run.py.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 SHAPE = (8192, 8192)   # 128 MB of bf16 activations: memory-bound regime
+SHAPE_QUICK = (1024, 1024)
 BITS = 3               # where Quantum Mantissa lands (paper Fig 4)
 ITERS = 10
+ITERS_QUICK = 3
+# Dense geometries probed alongside the registry: the policy-derived
+# deployment points (QM ~2-3 mantissa bits, QE ~4-5 exponent bits).
+DENSE_PROBES = ("sfp-m1e2", "sfp-m2e4", "sfp-m3e5")
+OUT = Path(__file__).resolve().parent.parent / "BENCH_codecs.json"
 
 
 def _median_ms(fn, iters=ITERS) -> float:
@@ -34,54 +54,101 @@ def _median_ms(fn, iters=ITERS) -> float:
     return ts[len(ts) // 2] * 1e3
 
 
-def run() -> dict:
+def run(quick: bool = False) -> dict:
     from repro import codecs
     from repro.kernels import ops, ref
 
+    shape = SHAPE_QUICK if quick else SHAPE
+    iters = ITERS_QUICK if quick else ITERS
     ops.force_backend("ref")
     try:
-        x = (jax.random.normal(jax.random.PRNGKey(0), SHAPE, jnp.float32)
+        x = (jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
              ).astype(jnp.bfloat16)
         fields = codecs.fields_for(codecs.SFP8, x.dtype)
+        dense_fields = codecs.fields_for("sfp-m2e4", x.dtype)
         n = jnp.int32(BITS)
 
         quant = jax.jit(lambda x, n: ref.mantissa_truncate(x, n))
         pack = jax.jit(lambda q: ref.sfp_pack_nd(q, fields))
         fused = jax.jit(lambda x, n: ref.sfp_pack_nd(x, fields, n=n))
+        dense_fused = jax.jit(
+            lambda x, n: ref.bitplane_pack_nd(x, dense_fields, n=n))
 
         two_ms = _median_ms(
-            lambda: jax.block_until_ready(pack(quant(x, n))))
+            lambda: jax.block_until_ready(pack(quant(x, n))), iters)
         fused_ms = _median_ms(
-            lambda: jax.block_until_ready(fused(x, n)))
+            lambda: jax.block_until_ready(fused(x, n)), iters)
+        dense_ms = _median_ms(
+            lambda: jax.block_until_ready(dense_fused(x, n)), iters)
 
         # Bit-exactness of the fusion (same payload, same bases).
         p2, b2 = pack(quant(x, n))
         p1, b1 = fused(x, n)
         exact = bool(jnp.all(p1 == p2)) and bool(jnp.all(b1 == b2))
+        # Dense plane fusion: pack(quant(x)) == fused dense pack.
+        dp2, db2 = jax.jit(
+            lambda q: ref.bitplane_pack_nd(q, dense_fields))(quant(x, n))
+        dp1, db1 = dense_fused(x, n)
+        dense_exact = bool(jnp.all(dp1 == dp2)) and bool(jnp.all(db1 == db2))
 
-        # Realized footprint of each registered container on a small probe.
+        # Realized footprint of each container on a small probe — packed
+        # bytes as materialized (payload planes/words + bases), so dense
+        # geometries price their true 1 + E + K bits per value.
         probe = x[:64]
+        names = sorted(set(codecs.names()) | set(DENSE_PROBES))
         footprints = {
             name: float(codecs.get(name).packed_bits(probe)) / probe.size
-            for name in codecs.names()
+            for name in names
         }
     finally:
         ops.force_backend(None)
 
+    m2e4 = footprints["sfp-m2e4"]
+    sfp8 = footprints["sfp8"]
+    dense_vs_fixed = {
+        "sfp-m2e4_bits_per_value": m2e4,
+        "sfp8_bits_per_value": sfp8,
+        "sfp-m2e4_vs_bf16": m2e4 / 16.0,
+        "sfp-m2e4_vs_fp32": m2e4 / 32.0,
+        "sfp-m1e2_vs_bf16": footprints["sfp-m1e2"] / 16.0,
+        # the fixed-lane floor: the cheapest 8-bit-lane container vs bf16
+        "fixed_lane_floor_vs_bf16": sfp8 / 16.0,
+        "below_fixed_lane_floor": m2e4 < sfp8,
+    }
+    # Regression guard (CI quick-smoke): realized dense bytes must beat
+    # the fixed lane — this is the whole point of the bit-plane layout.
+    assert m2e4 < sfp8, (m2e4, sfp8)
+
     return {
         "backend": "ref",
         "container": codecs.SFP8,
-        "shape": list(SHAPE),
+        "dense_container": "sfp-m2e4",
+        "shape": list(shape),
         "dtype": "bfloat16",
         "bits": BITS,
         "two_kernel_ms": two_ms,
         "fused_ms": fused_ms,
+        "dense_fused_ms": dense_ms,
         "speedup": two_ms / fused_ms,
         "bit_exact_fusion": exact,
+        "bit_exact_dense_fusion": dense_exact,
         "bits_per_value": footprints,
+        "dense_vs_fixed": dense_vs_fixed,
     }
 
 
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller shape + fewer iters (CI smoke); the "
+                         "dense-vs-fixed regression guard still asserts")
+    args = ap.parse_args(argv)
+    r = run(quick=args.quick)
+    OUT.write_text(json.dumps(r, indent=2))
+    print(json.dumps(r, indent=2))
+    print(f"wrote {OUT}")
+
+
 if __name__ == "__main__":
-    import json
-    print(json.dumps(run(), indent=2))
+    main()

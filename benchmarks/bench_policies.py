@@ -3,11 +3,20 @@
 The paper's methods only pay off if the adaptation machinery is cheap
 relative to the step it shrinks: this benchmark times one jitted train
 step of the reduced gemma2-2b config under every registry policy (and the
-composed qm+qe) and reports ms/step plus the overhead ratio against the
-full-precision baseline. Emitted as BENCH_policies.json (repo root)
-standalone or via benchmarks/run.py; the CI quick-smoke runs --quick
-(fewer policies, fewer iters) on every push and the nightly emits the
-full sweep.
+composed qm+qe) and reports, per policy:
+
+  * ms/step plus the overhead ratio against the full-precision baseline,
+    and
+  * the *realized* packed stash bytes/step: the policy's current decision
+    maps to a dense ``sfp-m{K}e{E}`` container (codecs.dense_name) and is
+    priced at that geometry's true bits/value (payload planes + group
+    bases) over the per-step stash volume — the same units
+    BENCH_codecs.json reports, so the two artifacts agree on what a
+    decision costs in bytes.
+
+Emitted as BENCH_policies.json (repo root) standalone or via
+benchmarks/run.py; the CI quick-smoke runs --quick (fewer policies, fewer
+iters) on every push and the nightly emits the full sweep.
 """
 from __future__ import annotations
 
@@ -60,6 +69,13 @@ def run(quick: bool = False) -> dict:
         opt=adamw.AdamWConfig(lr=5e-3),
         schedule=Schedule(total_steps=100, warmup_steps=4, base_lr=5e-3))
 
+    from repro import codecs
+
+    # Stash values crossing the memory boundary per step: one activation
+    # tensor per scanned period plus the remainder layers.
+    stash_vals = (8 * 64 * cfg.d_model
+                  * (cfg.n_periods + len(cfg.remainder)))
+
     results = {}
     for name in names:
         model = DecoderModel(cfg, policies.get(name, container="bit_exact"))
@@ -72,16 +88,39 @@ def run(quick: bool = False) -> dict:
 
         results[name] = {"ms_per_step": _median_ms(one, iters)}
 
+        # Advance a few real steps so controller/learned decisions move
+        # off their full-width init, then price the realized container.
+        for _ in range(iters):
+            state, _m = step(state, batch)
+        d = model.policy.decision_summary(state.pstate, model.dims)
+        if model.policy.enabled:
+            container = codecs.dense_name(d["man_bits"], d["exp_bits"])
+            f = codecs.fields_for(container, cfg.compute_dtype)
+            bits_per_value = f.payload_bits + 8.0 / 128.0  # payload + base
+        else:
+            container = None
+            bits_per_value = 16.0  # raw bf16 stash
+        results[name].update({
+            "decision": {k: float(v) for k, v in d.items()},
+            "realized_container": container,
+            "realized_bits_per_value": bits_per_value,
+            "packed_stash_bytes_per_step": stash_vals * bits_per_value / 8,
+        })
+
     base = results["none"]["ms_per_step"]
+    base_bytes = results["none"]["packed_stash_bytes_per_step"]
     for name in names:
         results[name]["overhead_vs_none"] = (
             results[name]["ms_per_step"] / base)
+        results[name]["packed_bytes_vs_none"] = (
+            results[name]["packed_stash_bytes_per_step"] / base_bytes)
 
     return {
         "arch": cfg.name,
         "config": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
                    "batch": 8, "seq": 64},
         "container": "bit_exact",
+        "stash_values_per_step": stash_vals,
         "iters": iters,
         "policies": results,
     }

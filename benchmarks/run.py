@@ -51,7 +51,9 @@ def main() -> None:
                     f"gist_vs_bf16={r['gist']:.3f}")
     bench("bench_codecs", bench_codecs.run,
           lambda r: f"fused_speedup={r['speedup']:.2f}x;"
-                    f"bit_exact={r['bit_exact_fusion']}")
+                    f"bit_exact={r['bit_exact_fusion']};"
+                    "dense_m2e4_vs_bf16="
+                    f"{r['dense_vs_fixed']['sfp-m2e4_vs_bf16']:.3f}")
     bench("bench_decode", bench_decode.run,
           lambda r: "sfp8_fused_bytes_vs_bf16="
                     f"{r['points'][0]['fused_bytes_vs_bf16']['sfp8_fused']:.3f}")

@@ -17,14 +17,18 @@ Registered containers:
               stream (paper §IV-C), byte-aligned; lossless for bf16
 
 New containers register via codecs.register() and become available to all
-call sites at once; parametric families (the policy-derived
-``sfp{8|16}-m{K}e{E}`` geometries) resolve lazily via register_factory().
+call sites at once; parametric families resolve lazily via
+register_factory(): the *dense* ``sfp-m{K}e{E}`` geometries (variable
+payload width 1 + E + K bits/value, stored as byte-aligned bit planes —
+the policy-learned bitlengths realized as actual bytes) and the legacy
+fixed-lane ``sfp{8|16}-m{K}e{E}`` family.
 """
 from repro.codecs.base import (Codec, PackedTensor, get, names, register,
                                register_factory, unpack)
 from repro.codecs.bit_exact import BIT_EXACT, BitExactCodec
 from repro.codecs.gecko import GECKO8, Gecko8Codec
-from repro.codecs.sfp import SFP8, SFP16, SFPCodec, fields_for, maybe_codec
+from repro.codecs.sfp import (SFP8, SFP16, SFPCodec, dense_fields,
+                              dense_name, fields_for, maybe_codec)
 
 # The paper's default realized container (and the KV-cache default).
 DEFAULT_CONTAINER = SFP8
@@ -37,7 +41,7 @@ register_factory(maybe_codec)
 
 __all__ = [
     "Codec", "PackedTensor", "get", "names", "register", "register_factory",
-    "unpack", "fields_for", "DEFAULT_CONTAINER",
-    "BIT_EXACT", "SFP8", "SFP16", "GECKO8",
+    "unpack", "fields_for", "dense_fields", "dense_name",
+    "DEFAULT_CONTAINER", "BIT_EXACT", "SFP8", "SFP16", "GECKO8",
     "BitExactCodec", "SFPCodec", "Gecko8Codec",
 ]

@@ -1,10 +1,14 @@
-"""Fixed-width SFP container codecs (sfp8 / sfp16 / parametric sfp*-m*e*).
+"""SFP container codecs: fixed-lane words and dense bit-plane payloads.
 
 Owns the container-name -> payload-geometry mapping (kernels are
 format-agnostic bit machines taking a ``PackFields``):
 
-  sfp8  byte = sign<<7 | dexp4<<3 | man3           (bf16-range payload)
-  sfp16 word = sign<<15 | dexp5<<10 | manK<<(10-K) (K=10 fp32 / 7 bf16)
+  sfp8       byte = sign<<7 | dexp4<<3 | man3           (bf16-range payload)
+  sfp16      word = sign<<15 | dexp5<<10 | manK<<(10-K) (K=10 fp32 / 7 bf16)
+  sfp-m{K}e{E}  *dense* payload: P = 1 + E + K bits/value (any width 3..16)
+             stored as P byte-aligned bit planes per 128-lane group
+             (kernels/bitplane_pack.py) — the learned bitlengths become
+             real bytes instead of rounding up to an 8/16-bit lane.
 
 One shared 8-bit base exponent per 128-lane group (a Gecko column base).
 ``pack(x, bits)`` uses the *fused* quantize+pack kernel — the Quantum
@@ -13,11 +17,13 @@ single pass over the tensor (one HBM read instead of the old
 mantissa_quantize -> sfp_compress two-kernel sequence).
 
 Parametric names realize *policy-learned* geometries (deployment mode,
-paper §IV-A4): ``sfp{8|16}-m{K}e{E}`` is a K-mantissa-bit,
-E-delta-exponent-bit payload in an 8/16-bit word (e.g. ``sfp8-m3e4`` is
-sfp8 by another name). They resolve through the codec factory hook, so a
-serving pool can derive its container from a trained checkpoint's
-PrecisionDecision without pre-registering every geometry.
+paper §IV-A4) through the codec factory hook, so a serving pool can derive
+its container from a trained checkpoint's PrecisionDecision without
+pre-registering every geometry. Dense names whose payload lands exactly on
+a lane width (P == 8 or 16) resolve to the fixed-lane word layout — same
+bits per value, simpler kernel — so sfp8/sfp16 survive as the fast path.
+The legacy fixed-lane family ``sfp{8|16}-m{K}e{E}`` stays resolvable for
+old checkpoints.
 """
 from __future__ import annotations
 
@@ -36,6 +42,43 @@ SFP8 = "sfp8"
 SFP16 = "sfp16"
 
 _PARAM_NAME = re.compile(r"sfp(8|16)-m(\d+)e(\d+)$")
+_DENSE_NAME = re.compile(r"sfp-m(\d+)e(\d+)$")
+
+MIN_PAYLOAD_BITS = 3   # sign + 1 dexp + 1 mantissa
+MAX_PAYLOAD_BITS = 16
+
+
+def dense_fields(man: int, dexp: int, spec: containers.FloatSpec
+                 ) -> PackFields:
+    """Dense geometry for a (mantissa, delta-exponent) bit budget.
+
+    The realized widths are clamped to what a <=16-bit payload and the
+    source dtype can hold; the payload is exactly 1 + dexp + man bits. A
+    budget landing on a lane width (8/16) keeps the fixed-lane word layout
+    — identical bits per value, cheaper unpack.
+    """
+    dexp = max(1, min(int(dexp), 8))
+    man = max(1, min(int(man), spec.man_bits, MAX_PAYLOAD_BITS - 1 - dexp))
+    payload = 1 + dexp + man
+    assert MIN_PAYLOAD_BITS <= payload <= MAX_PAYLOAD_BITS, payload
+    return PackFields(man_keep=man, dexp_bits=dexp, payload_bits=payload,
+                      dense=payload not in (8, 16))
+
+
+def dense_name(man_bits: float, exp_bits: float) -> str:
+    """Map a (possibly fractional) learned decision to a dense container.
+
+    Learned bitlengths are deployed rounded up (a fractional bit cannot be
+    stored); the delta-exponent field gets the learned exponent bitlength
+    clamped to [2, 7] (the shared 128-lane base absorbs the rest of the
+    range, and deltas below 2 bits cannot distinguish zero from
+    saturation). The payload is 1 + dexp + man bits — dense bit planes
+    unless it lands exactly on a lane width.
+    """
+    man = max(1, int(math.ceil(man_bits - 1e-9)))
+    dexp = max(2, min(7, int(math.ceil(exp_bits - 1e-9))))
+    man = min(man, MAX_PAYLOAD_BITS - 1 - dexp)
+    return f"sfp-m{man}e{dexp}"
 
 
 def fields_for(name: str, dtype_or_spec) -> PackFields:
@@ -47,6 +90,10 @@ def fields_for(name: str, dtype_or_spec) -> PackFields:
     if name == SFP16:
         man_keep = 10 if spec.man_bits == 23 else 7
         return PackFields(man_keep=man_keep, dexp_bits=5, payload_bits=16)
+    m = _DENSE_NAME.match(name)
+    if m:
+        man, dexp = (int(g) for g in m.groups())
+        return dense_fields(man, dexp, spec)
     m = _PARAM_NAME.match(name)
     if m:
         payload, man, dexp = (int(g) for g in m.groups())
@@ -61,8 +108,11 @@ def fields_for(name: str, dtype_or_spec) -> PackFields:
 
 
 def maybe_codec(name: str):
-    """Codec factory for parametric ``sfp{8|16}-m{K}e{E}`` names."""
-    return SFPCodec(name) if _PARAM_NAME.match(name) else None
+    """Codec factory for parametric SFP names: the dense ``sfp-m{K}e{E}``
+    family and the legacy fixed-lane ``sfp{8|16}-m{K}e{E}`` family."""
+    if _DENSE_NAME.match(name) or _PARAM_NAME.match(name):
+        return SFPCodec(name)
+    return None
 
 
 def _nd_layout(shape) -> bool:
@@ -78,8 +128,9 @@ class SFPCodec(base.Codec):
         return fields_for(self.name, dtype)
 
     def pack_fields(self, dtype) -> PackFields:
-        """SFP payloads have a fixed word geometry — consumers (the packed
-        flash-decode kernel) may decompress them inline."""
+        """SFP payloads have a fixed geometry per dtype — consumers (the
+        packed flash-decode kernel) may decompress them inline, words and
+        bit planes alike."""
         return self._fields(dtype)
 
     def pack(self, x: jax.Array, bits=None) -> base.PackedTensor:
@@ -109,7 +160,9 @@ class SFPCodec(base.Codec):
 
         Matches pack()'s materialized arrays exactly: the flat layout
         zero-pads the tail to a full 128-lane row, and those pad lanes
-        occupy real payload bytes.
+        occupy real payload bits (plane bytes for dense geometries, lane
+        words for fixed ones — ``payload_bits`` is the realized width in
+        both layouts).
         """
         f = self._fields(x.dtype)
         n = int(math.prod(x.shape)) if x.shape else 1

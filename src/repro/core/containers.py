@@ -185,7 +185,7 @@ def exponent_range(e: jax.Array, spec: FloatSpec):
     return lo, hi
 
 
-def truncate_exponent(x: jax.Array, e) -> jax.Array:
+def truncate_exponent(x: jax.Array, e, bias_offset=0) -> jax.Array:
     """Clamp ``x`` to the exponent range of an ``e``-bit container.
 
     The exponent-side analogue of eq. (5): values whose unbiased exponent
@@ -197,12 +197,25 @@ def truncate_exponent(x: jax.Array, e) -> jax.Array:
     [MIN_EXP_BITS, spec.exp_bits], and at e == spec.exp_bits the only
     effect is the flush of source subnormals (FTZ semantics).
 
+    ``bias_offset`` (int, traced ok) shifts the representable window by
+    that many binades — an AdaptivFloat-style per-tensor exponent bias: a
+    positive offset spends the e-bit range on larger magnitudes, a
+    negative one on smaller. The shifted window is clipped to the source
+    container's own normal range (there is nowhere else to encode it).
+
     Not differentiable — see quantum_exponent.qe_quantize for the STE +
-    bitlength-gradient wrapper.
+    bitlength-gradient wrapper (and policies/afloat.py for the learned
+    bias offset).
     """
     spec = spec_for(x)
     sign, exp, man = split_fields(x)
     lo, hi = exponent_range(e, spec)
+    if not (isinstance(bias_offset, int) and bias_offset == 0):
+        b = jnp.asarray(bias_offset, jnp.int32)
+        src_lo = 1 - spec.bias
+        src_hi = (spec.exp_mask - 1) - spec.bias
+        lo = jnp.clip(lo + b, src_lo, src_hi)
+        hi = jnp.clip(hi + b, src_lo, src_hi)
     unb = exp.astype(jnp.int32) - spec.bias
     special = exp == spec.exp_mask          # inf / nan: keep verbatim
     underflow = (~special) & (unb < lo)     # incl. exp==0 (zero/subnormal)

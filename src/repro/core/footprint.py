@@ -149,6 +149,43 @@ def container_realized_bits(x: jax.Array, container: str) -> int:
     return int(codecs.get(container).packed_bits(x))
 
 
+def container_realized_report(x: jax.Array, container: str
+                              ) -> FootprintReport:
+    """Realized container footprint with a field-level breakdown.
+
+    Prices what the packed arrays actually occupy — payload planes/words
+    plus the shared group bases — not the idealized per-field bit counts:
+    for SFP geometries the sign/mantissa/dexp planes are attributed to
+    their fields (each plane is ``padded_n`` real bits, tail rows padded
+    to 128 lanes) and the 8-bit group bases land in ``metadata_bits``, so
+    ``total_bits == codecs.get(container).packed_bits(x)`` exactly. Codecs
+    without a fixed payload geometry report their whole realized stream
+    as ``exponent+mantissa`` via packed_bits with zero metadata split.
+    """
+    from repro import codecs  # local import: codecs accounts via footprint
+
+    n = int(x.size)
+    codec = codecs.get(container)
+    fields = codec.pack_fields(x.dtype)
+    total = int(codec.packed_bits(x))
+    if fields is None:
+        return FootprintReport(n_values=n, sign_bits=0, mantissa_bits=0,
+                               exponent_bits=total, metadata_bits=0)
+    groups = -(-n // 128)
+    padded_n = groups * 128
+    return FootprintReport(
+        n_values=n,
+        sign_bits=padded_n,
+        mantissa_bits=padded_n * fields.man_keep,
+        exponent_bits=padded_n * fields.dexp_bits,
+        # group bases + fixed-lane slack bits the payload word wastes
+        # (zero for dense geometries: payload == 1 + E + K there), plus
+        # any flat-layout tail padding already inside padded_n
+        metadata_bits=total - padded_n * (1 + fields.man_keep
+                                          + fields.dexp_bits),
+    )
+
+
 def tensor_group_numels(tree) -> Dict[str, int]:
     """Flatten a pytree of arrays to {path: numel} for QM lambda weights."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]

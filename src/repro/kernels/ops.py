@@ -20,6 +20,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bitplane_pack as _bp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gecko_pack as _gp
 from repro.kernels import mantissa_quant as _mq
@@ -65,12 +66,24 @@ def mantissa_quantize(x: jax.Array, n) -> jax.Array:
 
 
 # -- SFP containers ----------------------------------------------------------
+#
+# Every entry point dispatches on ``fields.dense``: fixed-lane geometries
+# (payload_bits 8/16) go through the word kernels in sfp_pack.py, dense
+# sub-byte/odd-width geometries through the bit-plane kernels in
+# bitplane_pack.py. Callers never branch — the PackFields carries the
+# layout, the Packed pair carries either words or planes.
 
 def sfp_compress(x: jax.Array, fields: PackFields) -> Packed:
     b = backend()
     if b in ("pallas", "interpret"):
-        payload, bases = _sp.sfp_pack(x, fields=fields,
-                                      interpret=(b == "interpret"))
+        interp = (b == "interpret")
+        if fields.dense:
+            payload, bases = _bp.bitplane_pack(x, fields=fields,
+                                               interpret=interp)
+        else:
+            payload, bases = _sp.sfp_pack(x, fields=fields, interpret=interp)
+    elif fields.dense:
+        payload, bases = _ref.bitplane_pack(x, fields)
     else:
         payload, bases = _ref.sfp_pack(x, fields)
     return Packed(payload=payload, bases=bases)
@@ -80,9 +93,13 @@ def sfp_decompress(packed: Packed, shape: tuple, dtype,
                    fields: PackFields) -> jax.Array:
     b = backend()
     if b in ("pallas", "interpret"):
-        return _sp.sfp_unpack(packed.payload, packed.bases, shape=tuple(shape),
-                              dtype=jnp.dtype(dtype), fields=fields,
-                              interpret=(b != "pallas"))
+        unpack = _bp.bitplane_unpack if fields.dense else _sp.sfp_unpack
+        return unpack(packed.payload, packed.bases, shape=tuple(shape),
+                      dtype=jnp.dtype(dtype), fields=fields,
+                      interpret=(b != "pallas"))
+    if fields.dense:
+        return _ref.bitplane_unpack(packed.payload, packed.bases,
+                                    tuple(shape), jnp.dtype(dtype), fields)
     return _ref.sfp_unpack(packed.payload, packed.bases, tuple(shape),
                            jnp.dtype(dtype), fields)
 
@@ -92,7 +109,8 @@ def sfp_compress_nd(x: jax.Array, fields: PackFields, n=None) -> Packed:
 
     ``n`` (optional traced scalar) fuses Q(M, n) mantissa truncation into
     the pack — a single HBM read instead of the mantissa_quantize ->
-    sfp_compress_nd two-kernel sequence.
+    sfp_compress_nd two-kernel sequence. Dense geometries emit bit planes:
+    payload (*lead, (D//128) * P * 16) uint8 instead of (*lead, D) words.
     """
     b = backend()
     if b in ("pallas", "interpret"):
@@ -100,28 +118,47 @@ def sfp_compress_nd(x: jax.Array, fields: PackFields, n=None) -> Packed:
         # no-op relayout on device. Interpret mode mirrors it for tests.
         rows = x.reshape(-1, _ref.GROUP)
         interp = (b == "interpret")
-        if n is None:
+        if fields.dense:
+            if n is None:
+                payload, bases = _bp.bitplane_pack(rows, fields=fields,
+                                                   interpret=interp)
+            else:
+                payload, bases = _bp.bitplane_quantize_pack(
+                    rows, n, fields=fields, interpret=interp)
+        elif n is None:
             payload, bases = _sp.sfp_pack(rows, fields=fields,
                                           interpret=interp)
         else:
             payload, bases = _sp.sfp_quantize_pack(rows, n, fields=fields,
                                                    interpret=interp)
-        return Packed(payload=payload.reshape(x.shape),
+        cols = fields.nd_payload_cols(x.shape[-1])
+        return Packed(payload=payload.reshape(*x.shape[:-1], cols),
                       bases=bases.reshape(*x.shape[:-1],
                                           x.shape[-1] // _ref.GROUP))
-    payload, bases = _ref.sfp_pack_nd(x, fields, n=n)
+    if fields.dense:
+        payload, bases = _ref.bitplane_pack_nd(x, fields, n=n)
+    else:
+        payload, bases = _ref.sfp_pack_nd(x, fields, n=n)
     return Packed(payload=payload, bases=bases)
 
 
 def sfp_decompress_nd(packed: Packed, dtype, fields: PackFields) -> jax.Array:
     b = backend()
     if b in ("pallas", "interpret"):
-        shape = packed.payload.shape
-        rows = packed.payload.reshape(-1, _ref.GROUP)
+        G = packed.bases.shape[-1]
+        shape = packed.bases.shape[:-1] + (G * _ref.GROUP,)
+        if fields.dense:
+            rows = packed.payload.reshape(-1, fields.group_payload_bytes)
+            unpack = _bp.bitplane_unpack
+        else:
+            rows = packed.payload.reshape(-1, _ref.GROUP)
+            unpack = _sp.sfp_unpack
         bases = packed.bases.reshape(-1, 1)
-        out = _sp.sfp_unpack(rows, bases, shape=shape, dtype=jnp.dtype(dtype),
-                             fields=fields, interpret=(b != "pallas"))
-        return out
+        return unpack(rows, bases, shape=shape, dtype=jnp.dtype(dtype),
+                      fields=fields, interpret=(b != "pallas"))
+    if fields.dense:
+        return _ref.bitplane_unpack_nd(packed.payload, packed.bases,
+                                       jnp.dtype(dtype), fields)
     return _ref.sfp_unpack_nd(packed.payload, packed.bases, jnp.dtype(dtype),
                               fields)
 
@@ -130,10 +167,18 @@ def sfp_quantize_compress(x: jax.Array, n, fields: PackFields) -> Packed:
     """Fused Q(M, n) + flat pack: one pass over ``x`` (single HBM read)."""
     b = backend()
     if b in ("pallas", "interpret"):
-        payload, bases = _sp.sfp_quantize_pack(x, n, fields=fields,
-                                               interpret=(b == "interpret"))
+        interp = (b == "interpret")
+        if fields.dense:
+            payload, bases = _bp.bitplane_quantize_pack(
+                x, n, fields=fields, interpret=interp)
+        else:
+            payload, bases = _sp.sfp_quantize_pack(x, n, fields=fields,
+                                                   interpret=interp)
         return Packed(payload=payload, bases=bases)
-    payload, bases = _ref.sfp_pack(x, fields, n=n)
+    if fields.dense:
+        payload, bases = _ref.bitplane_pack(x, fields, n=n)
+    else:
+        payload, bases = _ref.sfp_pack(x, fields, n=n)
     return Packed(payload=payload, bases=bases)
 
 

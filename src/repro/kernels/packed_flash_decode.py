@@ -6,7 +6,10 @@ simulated: each grid step DMAs one packed KV block (payload words + the
 per-128-lane shared base exponents) from HBM into VMEM, expands it inline
 with the same bit logic as ``sfp_pack._unpack_kernel`` (PackFields
 geometry), and feeds the online-softmax accumulator of
-``flash_attention.py``. The bf16 cache never materializes in HBM, so the
+``flash_attention.py``. Dense geometries (``fields.dense``) store the
+payload as byte-aligned bit planes (kernels/bitplane_pack.py) — the
+in-kernel decompressor first re-expands the planes into payload words, so
+the HBM read shrinks to the true 1 + E + K bits per value. The bf16 cache never materializes in HBM, so the
 decode step's dominant read shrinks by the container ratio (~2x for sfp8)
 instead of paying packed-read + bf16-write + bf16-read like the
 unpack-then-attend fallback.
@@ -67,7 +70,13 @@ def _decode_kernel(pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref, o_ref,
     def unpack(p_ref, b_ref):
         # Inline decompressor: identical bit machine to sfp_pack's
         # _unpack_kernel, run on the packed block already resident in VMEM.
-        p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
+        # Dense geometries first expand their byte-aligned bit planes back
+        # into payload words (bitplane_pack's layout) — still in VMEM.
+        if fields.dense:
+            pl_ = p_ref[0].reshape(block_l, G, fields.group_payload_bytes)
+            p = kref.plane_unpack_words(pl_, fields.payload_bits)
+        else:
+            p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
         b = b_ref[0].astype(jnp.int32).reshape(block_l, G, 1)
         x = kref._unpack_words(p, b, fields, spec)
         return x.reshape(block_l, KH, hd).astype(jnp.float32)
@@ -112,21 +121,26 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
                         interpret: bool = True) -> jax.Array:
     """One-token attention over an SFP-packed (B, L, KH*hd) KV cache.
 
-    q: (B, 1, H, hd); payload (B, L, D) uint8/uint16 and bases
-    (B, L, D // 128) uint8 in the rank-preserving ``sfp_pack_nd`` layout
-    (D = KH * hd, D % 128 == 0). ``pos`` is the absolute decode position —
-    a scalar, or (B,) for continuous-batching slots each at their own
-    position; ``window`` not None means an L-slot ring buffer (local
-    attention). Returns (B, 1, H, hd) in q's dtype.
+    q: (B, 1, H, hd); payload (B, L, fields.nd_payload_cols(D)) — 8/16-bit
+    words, or uint8 bit planes for dense geometries — and bases
+    (B, L, D // 128) uint8 in the rank-preserving ``sfp_pack_nd`` /
+    ``bitplane_pack_nd`` layout (D = KH * hd, D % 128 == 0). ``pos`` is
+    the absolute decode position — a scalar, or (B,) for
+    continuous-batching slots each at their own position; ``window`` not
+    None means an L-slot ring buffer (local attention). Returns
+    (B, 1, H, hd) in q's dtype.
     """
     B, one, H, hd = q.shape
     assert one == 1, q.shape
-    L, D = k_payload.shape[1], k_payload.shape[2]
+    L, G = k_bases.shape[1], k_bases.shape[2]
+    D = G * kref.GROUP
     KH = D // hd
-    assert KH * hd == D and D % kref.GROUP == 0, (D, hd)
+    assert KH * hd == D, (D, hd)
+    assert k_payload.shape[2] == fields.nd_payload_cols(D), (
+        k_payload.shape, fields)
     rep = H // KH
     assert rep * KH == H, (H, KH)
-    G = D // kref.GROUP
+    Dp = k_payload.shape[2]
     spec = containers.spec_for(jnp.dtype(q.dtype))
 
     # Never pad the cache arrays: padding would copy the whole packed cache
@@ -151,9 +165,9 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
         in_specs=[
             pl.BlockSpec((1, 1), lambda b, j: (b, 0)),          # per-row pos
             pl.BlockSpec((1, KH, rep, hd), lambda b, j: (b, 0, 0, 0)),
-            pl.BlockSpec((1, block_l, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_l, Dp), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, block_l, G), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, block_l, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_l, Dp), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, block_l, G), lambda b, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, KH, rep, hd), lambda b, j: (b, 0, 0, 0)),
@@ -194,7 +208,11 @@ def _paged_kernel(tab_ref, pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref,
     L = nb * block_l
 
     def unpack(p_ref, b_ref):
-        p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
+        if fields.dense:
+            pl_ = p_ref[0].reshape(block_l, G, fields.group_payload_bytes)
+            p = kref.plane_unpack_words(pl_, fields.payload_bits)
+        else:
+            p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
         bb = b_ref[0].astype(jnp.int32).reshape(block_l, G, 1)
         x = kref._unpack_words(p, bb, fields, spec)
         return x.reshape(block_l, KH, hd).astype(jnp.float32)
@@ -259,12 +277,14 @@ def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
 
     B, one, H, hd = q.shape
     assert one == 1, q.shape
-    n_phys, block_l, D = k_payload.shape
+    n_phys, block_l, Dp = k_payload.shape
+    G = k_bases.shape[2]
+    D = G * kref.GROUP
     KH = D // hd
-    assert KH * hd == D and D % kref.GROUP == 0, (D, hd)
+    assert KH * hd == D, (D, hd)
+    assert Dp == fields.nd_payload_cols(D), (k_payload.shape, fields)
     rep = H // KH
     assert rep * KH == H, (H, KH)
-    G = D // kref.GROUP
     nb = tables.shape[1]
     spec = containers.spec_for(jnp.dtype(q.dtype))
 
@@ -279,11 +299,11 @@ def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
         in_specs=[
             pl.BlockSpec((1, KH, rep, hd),
                          lambda b, j, tab, pos: (b, 0, 0, 0)),
-            pl.BlockSpec((1, block_l, D),
+            pl.BlockSpec((1, block_l, Dp),
                          lambda b, j, tab, pos: (tab[b, j], 0, 0)),
             pl.BlockSpec((1, block_l, G),
                          lambda b, j, tab, pos: (tab[b, j], 0, 0)),
-            pl.BlockSpec((1, block_l, D),
+            pl.BlockSpec((1, block_l, Dp),
                          lambda b, j, tab, pos: (tab[b, j], 0, 0)),
             pl.BlockSpec((1, block_l, G),
                          lambda b, j, tab, pos: (tab[b, j], 0, 0)),

@@ -41,22 +41,52 @@ def mantissa_truncate(x: jax.Array, n) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 GROUP = 128
+PLANE_BYTES = GROUP // 8  # one byte-aligned bit plane of a 128-lane group
 
 
 class PackFields(NamedTuple):
-    """Payload word geometry of a fixed-width SFP container.
+    """Payload geometry of an SFP container.
 
     Kernels receive this instead of a container-name string; the registry
     in ``repro.codecs`` owns the name -> PackFields mapping.
+
+    ``dense=False`` is the fixed-lane layout: one 8/16-bit payload word
+    per value. ``dense=True`` is the bit-plane layout: the payload word is
+    ``1 + dexp_bits + man_keep`` bits wide (any width 3..16) and each of
+    its bits is stored as a contiguous byte-aligned plane over the
+    128-lane group (16 bytes/plane, Gecko-style), so a value really
+    occupies ``payload_bits`` bits — no rounding up to a lane width.
     """
 
-    man_keep: int      # mantissa bits kept in the payload
-    dexp_bits: int     # delta-exponent field width
-    payload_bits: int  # total payload word width: 8 or 16
+    man_keep: int       # mantissa bits kept in the payload
+    dexp_bits: int      # delta-exponent field width
+    payload_bits: int   # total payload word width (3..16)
+    dense: bool = False  # True -> byte-aligned bit-plane storage
+
+    @property
+    def word_dtype(self):
+        """Narrowest uint holding one payload word (kernel-internal)."""
+        return jnp.uint8 if self.payload_bits <= 8 else jnp.uint16
 
     @property
     def payload_dtype(self):
-        return jnp.uint8 if self.payload_bits == 8 else jnp.uint16
+        """Element dtype of the stored payload array (planes are bytes)."""
+        return jnp.uint8 if self.dense else self.word_dtype
+
+    @property
+    def group_payload_bytes(self) -> int:
+        """Payload bytes one 128-lane group occupies (excl. the base)."""
+        if self.dense:
+            return self.payload_bits * PLANE_BYTES
+        return GROUP * (1 if self.payload_bits <= 8 else 2)
+
+    def nd_payload_cols(self, D: int) -> int:
+        """Minor-dim width of the rank-preserving payload for a feature
+        dim ``D`` (% 128 == 0): D payload words, or (D//128) groups of
+        ``payload_bits`` 16-byte planes."""
+        if self.dense:
+            return (D // GROUP) * self.group_payload_bytes
+        return D
 
     @property
     def sign_shift(self) -> int:
@@ -109,7 +139,7 @@ def _pack_words(x: jax.Array, f: PackFields, spec: containers.FloatSpec,
 
     word = ((sign << f.sign_shift) | (dexp << f.dexp_shift)
             | (man_top << f.man_shift))
-    return word.astype(f.payload_dtype), base
+    return word.astype(f.word_dtype), base
 
 
 def _unpack_words(p: jax.Array, base: jax.Array, f: PackFields,
@@ -173,6 +203,93 @@ def sfp_unpack(payload: jax.Array, bases: jax.Array, shape: tuple,
     for s in shape:
         n *= s
     return out.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Dense bit-plane containers — oracles for kernels/bitplane_pack.py
+#
+# The variable payload-width realization: a payload word of P = 1 + E + K
+# bits (any width 3..16) is stored as P byte-aligned bit planes per
+# 128-lane group. Plane p is 16 contiguous bytes; byte i of plane p holds
+# bit p of the payload words of lanes 8i..8i+7 (bit j <-> lane 8i+j). A
+# value therefore occupies exactly P bits + the shared 8-bit group base —
+# the learned bitlengths become real bytes instead of rounding up to an
+# 8/16-bit lane.
+# ---------------------------------------------------------------------------
+
+
+def plane_pack_words(words: jax.Array, payload_bits: int) -> jax.Array:
+    """Transpose payload words (..., 128) into bit planes (..., P*16) u8."""
+    w = words.astype(jnp.int32)
+    bits = (w[..., None] >> jnp.arange(payload_bits, dtype=jnp.int32)) & 1
+    b = bits.reshape(*bits.shape[:-2], PLANE_BYTES, 8, payload_bits)
+    byte = jnp.sum(b << jnp.arange(8, dtype=jnp.int32)[None, :, None],
+                   axis=-2)                       # (..., 16, P)
+    byte = jnp.swapaxes(byte, -1, -2)             # (..., P, 16): plane-major
+    return byte.reshape(*byte.shape[:-2],
+                        payload_bits * PLANE_BYTES).astype(jnp.uint8)
+
+
+def plane_unpack_words(planes: jax.Array, payload_bits: int) -> jax.Array:
+    """Invert plane_pack_words: (..., P*16) uint8 -> (..., 128) int32."""
+    b = planes.astype(jnp.int32).reshape(*planes.shape[:-1], payload_bits,
+                                         PLANE_BYTES)
+    bits = (b[..., None] >> jnp.arange(8, dtype=jnp.int32)) & 1
+    lanes = bits.reshape(*bits.shape[:-3], payload_bits, GROUP)
+    return jnp.sum(
+        lanes << jnp.arange(payload_bits, dtype=jnp.int32)[:, None], axis=-2)
+
+
+def bitplane_pack(x: jax.Array, fields: PackFields, n=None):
+    """Dense pack: (planes (R, P*16) uint8, bases (R, 1) uint8).
+
+    Same payload-word bit machine as ``sfp_pack`` (``n`` fuses Q(M, n)),
+    then the words are transposed into byte-aligned bit planes. Rows are
+    128-lane groups of the flattened tensor, zero-padded at the tail.
+    """
+    spec = containers.spec_for(x)
+    words, base = _pack_words(_to_rows(x), fields, spec, n)
+    return plane_pack_words(words, fields.payload_bits), base.astype(jnp.uint8)
+
+
+def bitplane_unpack(planes: jax.Array, bases: jax.Array, shape: tuple,
+                    dtype, fields: PackFields) -> jax.Array:
+    spec = containers.spec_for(jnp.dtype(dtype))
+    words = plane_unpack_words(planes, fields.payload_bits)
+    out = _unpack_words(words, bases.astype(jnp.int32), fields, spec)
+    n = 1
+    for s in shape:
+        n *= s
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def bitplane_pack_nd(x: jax.Array, fields: PackFields, n=None):
+    """Rank-preserving dense pack (last dim % 128 == 0).
+
+    payload has shape (*x.shape[:-1], (D//128) * P * 16) uint8 — each
+    position's payload bytes are laid out (group, plane, 16), so one
+    sequence row owns its own bytes and splices without read-modify-write;
+    bases has shape (*x.shape[:-1], D//128) as in ``sfp_pack_nd``.
+    """
+    D = x.shape[-1]
+    assert D % GROUP == 0, (x.shape,)
+    spec = containers.spec_for(x)
+    xg = x.reshape(*x.shape[:-1], D // GROUP, GROUP)
+    words, base = _pack_words(xg, fields, spec, n)
+    planes = plane_pack_words(words, fields.payload_bits)
+    return (planes.reshape(*x.shape[:-1], fields.nd_payload_cols(D)),
+            base[..., 0].astype(jnp.uint8))
+
+
+def bitplane_unpack_nd(planes: jax.Array, bases: jax.Array, dtype,
+                       fields: PackFields) -> jax.Array:
+    spec = containers.spec_for(jnp.dtype(dtype))
+    G = bases.shape[-1]
+    p = planes.reshape(*planes.shape[:-1], G, fields.group_payload_bytes)
+    words = plane_unpack_words(p, fields.payload_bits)
+    out = _unpack_words(words, bases.astype(jnp.int32)[..., None], fields,
+                        spec)
+    return out.reshape(*planes.shape[:-1], G * GROUP)
 
 
 # ---------------------------------------------------------------------------
@@ -293,17 +410,19 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
     online-softmax block recurrence over ``block_l``-slot KV blocks, so
     the Pallas kernel validates bit-for-bit in interpret mode.
 
-    q: (B, 1, H, hd); payload (B, L, KH*hd), bases (B, L, KH*hd // 128) —
-    the rank-preserving layout of ``sfp_pack_nd``. GQA is grouped: q head
+    q: (B, 1, H, hd); payload (B, L, fields.nd_payload_cols(KH*hd)) and
+    bases (B, L, KH*hd // 128) — the rank-preserving layout of
+    ``sfp_pack_nd`` (fixed-lane words) or ``bitplane_pack_nd`` (dense bit
+    planes; the kernel expands the planes inline). GQA is grouped: q head
     h reads kv head h // (H // KH). ``pos`` is scalar (whole batch at one
     position) or (B,) — one decode position per batch row (the serving
     engine's continuous-batching slots).
     """
     B, _, H, hd = q.shape
-    L, D = k_payload.shape[1], k_payload.shape[2]
+    L, G = k_bases.shape[1], k_bases.shape[2]
+    D = G * GROUP
     KH = D // hd
     rep = H // KH
-    G = D // GROUP
     spec = containers.spec_for(jnp.dtype(q.dtype))
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
     # Kernel-identical blocking: shrink to a divisor of L (the kernel never
@@ -313,7 +432,11 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
         bl -= 1
 
     def unp(payload, bases):
-        p = payload.reshape(B, L, G, GROUP).astype(jnp.int32)
+        if fields.dense:
+            pl = payload.reshape(B, L, G, fields.group_payload_bytes)
+            p = plane_unpack_words(pl, fields.payload_bits)
+        else:
+            p = payload.reshape(B, L, G, GROUP).astype(jnp.int32)
         b = bases.reshape(B, L, G, 1).astype(jnp.int32)
         x = _unpack_words(p, b, fields, spec).reshape(B, L, KH, hd)
         return x.astype(jnp.float32)

@@ -63,7 +63,7 @@ def _pack_body(x, fields: kref.PackFields, spec, n=None):
 
     word = ((sign << fields.sign_shift) | (dexp << fields.dexp_shift)
             | (man_top << fields.man_shift))
-    return word.astype(fields.payload_dtype), base.astype(jnp.uint8)
+    return word.astype(fields.word_dtype), base.astype(jnp.uint8)
 
 
 def _pack_kernel(x_ref, payload_ref, base_ref, *, spec, fields):

@@ -257,10 +257,45 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
 
 
 def all_cells(mesh_kinds, policy):
+    """Cells of the production matrix. ``policy`` may be a comma list
+    (e.g. ``qm,qm+qe,bitwave``): every policy gets its own cell per
+    (arch, shape, mesh) point, so composed policies are first-class
+    members of the matrix rather than a side experiment."""
     for cfg in configs.ASSIGNED:
         for shape in cells_for(cfg):
             for mk in mesh_kinds:
-                yield cfg.name, shape.name, mk, policy
+                for pol in policy.split(","):
+                    yield cfg.name, shape.name, mk, pol.strip()
+
+
+def summarize_hlo_vs(results, baseline_policy: str = "qm"):
+    """Compare compiled-HLO sizes of each policy against ``baseline_policy``
+    per (arch, shape, mesh) point — the cost of a composed policy's extra
+    quantization machinery in program size."""
+    base = {(r["arch"], r["shape"], r["mesh"]): r["hlo_bytes"]
+            for r in results
+            if r.get("ok") and r["policy"] == baseline_policy
+            and "hlo_bytes" in r}
+    rows = []
+    for r in results:
+        if not r.get("ok") or "hlo_bytes" not in r:
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        if r["policy"] == baseline_policy or key not in base:
+            continue
+        rows.append({
+            "arch": key[0], "shape": key[1], "mesh": key[2],
+            "policy": r["policy"], "hlo_bytes": r["hlo_bytes"],
+            f"vs_{baseline_policy}": r["hlo_bytes"] / base[key],
+        })
+    return rows
+
+
+def _print_hlo_rows(results, baseline_policy: str = "qm"):
+    for row in summarize_hlo_vs(results, baseline_policy):
+        print(f"  hlo {row['arch']} {row['shape']} {row['mesh']} "
+              f"{row['policy']}: {row['hlo_bytes']} bytes "
+              f"({row[f'vs_{baseline_policy}']:.2f}x {baseline_policy})")
 
 
 def main():
@@ -269,10 +304,12 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
-    ap.add_argument("--policy", default="qm", metavar="NAME[+NAME...]",
+    ap.add_argument("--policy", default="qm",
+                    metavar="NAME[+NAME...][,NAME...]",
                     help="precision policy from the registry "
                          f"({'/'.join(policies.names())}), composable "
-                         "with '+', e.g. qm+qe")
+                         "with '+' and comma-separable into multiple "
+                         "matrix cells, e.g. qm,qm+qe,bitwave")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--layout", default="tp", choices=["tp", "fsdp"])
@@ -295,6 +332,7 @@ def main():
                    for cell in all_cells(mesh_kinds, args.policy)]
         ok = sum(r["ok"] for r in results)
         print(f"\n== {ok}/{len(results)} cells compiled ==")
+        _print_hlo_rows(results)
         if ok < len(results):
             for r in results:
                 if not r["ok"]:
@@ -304,14 +342,18 @@ def main():
         return
 
     assert args.arch and args.shape, "--arch/--shape or --all required"
+    results = []
     for mk in mesh_kinds:
-        r = run_cell(args.arch, args.shape, mk, args.policy, out_dir,
-                     args.force, layout=args.layout,
-                     num_microbatches=args.microbatches)
-        if r["ok"]:
-            print(json.dumps({k: r[k] for k in
-                              ("cost_analysis", "memory_analysis",
-                               "collectives") if k in r}, indent=2))
+        for pol in args.policy.split(","):
+            r = run_cell(args.arch, args.shape, mk, pol.strip(), out_dir,
+                         args.force, layout=args.layout,
+                         num_microbatches=args.microbatches)
+            results.append(r)
+            if r["ok"]:
+                print(json.dumps({k: r[k] for k in
+                                  ("cost_analysis", "memory_analysis",
+                                   "collectives") if k in r}, indent=2))
+    _print_hlo_rows(results)
 
 
 if __name__ == "__main__":

@@ -141,7 +141,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-container", default=None,
                     help="registry codec for the packed KV cache (sfp8, "
-                    "sfp16, sfp8-m3e4, ...); None = raw bf16 cache")
+                    "sfp16, dense sfp-m2e4, ...); None = raw bf16 cache")
     ap.add_argument("--policy-ckpt", default=None,
                     help="checkpoint dir of a trained policy run; the KV "
                     "container geometry is derived from its stamped "

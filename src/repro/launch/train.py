@@ -89,7 +89,9 @@ def main():
                          f"({'/'.join(policies.names())}), composable with "
                          "'+', e.g. qm+qe")
     ap.add_argument("--container", default="bit_exact",
-                    choices=codecs.names())  # every registered codec
+                    help="stash codec: any registered name "
+                         f"({'/'.join(codecs.names())}) or a parametric "
+                         "dense geometry like sfp-m2e4")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -103,11 +105,20 @@ def main():
     ap.add_argument("--qe-lr", type=float, default=0.05)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compress-bits", type=int, default=None)
+    ap.add_argument("--per-layer-stash", action="store_true",
+                    help="pack each period's stash at its own policy-"
+                         "learned dense container (model.stash_plan); the "
+                         "plan refreshes every --stash-refresh steps and "
+                         "the step re-jits when it changes")
+    ap.add_argument("--stash-refresh", type=int, default=None,
+                    help="steps between per-layer stash plan refreshes "
+                         "(default: --ckpt-every)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--metrics", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    codecs.get(args.container)  # resolve early: typos fail with the registry
 
     cfg, model, tc, batch, seq = build(args)
     print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
@@ -146,7 +157,39 @@ def main():
         ckpt_dir=args.ckpt_dir, metrics_file=args.metrics,
         log_every=max(1, args.steps // 50),
         ckpt_extra=ckpt_extra)
-    res = loop_mod.run(train_step, state, batches, lc)
+    if args.per_layer_stash:
+        # Per-layer realized containers: the stash plan is static under
+        # jit, so the loop runs in segments — every refresh boundary the
+        # plan is re-derived from the live policy state and the step
+        # re-jits only when a layer's container actually changed (learned
+        # bitlengths move slowly, so re-lowering is rare).
+        import dataclasses as _dc
+        refresh = max(1, args.stash_refresh or args.ckpt_every)
+        plan = None
+        history = []
+        res = None
+        done = int(np.asarray(state.step))
+        while done < args.steps:
+            new_plan = model.stash_plan(state.pstate)
+            if new_plan != plan:
+                plan = new_plan
+                print(f"[train] per-layer stash plan @ step {done}: "
+                      f"{','.join(plan)}")
+                model = DecoderModel(cfg, model.policy,
+                                     stash_containers=plan)
+                train_step = jax.jit(step_mod.make_train_step(model, tc),
+                                     donate_argnums=(0,))
+            seg = _dc.replace(lc, total_steps=min(done + refresh,
+                                                  args.steps),
+                              metrics_truncate=(res is None))
+            res = loop_mod.run(train_step, state, batches, seg)
+            state = res.state
+            history.extend(res.history)
+            done = int(np.asarray(state.step))
+        res = _dc.replace(res, state=state, history=history)
+        print(f"[train] final per-layer stash plan: {','.join(plan)}")
+    else:
+        res = loop_mod.run(train_step, state, batches, lc)
     last = res.history[-1]
     print(json.dumps({k: last[k] for k in
                       ("step", "loss", "xent", "qm_act_mean", "qm_w_mean",

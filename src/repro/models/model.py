@@ -73,7 +73,8 @@ def _kvcache():
 
 class DecoderModel:
     def __init__(self, cfg: ArchConfig, policy=None, mesh=None,
-                 rules=None, kv_container: Optional[str] = None):
+                 rules=None, kv_container: Optional[str] = None,
+                 stash_containers=None):
         """``policy`` is a precision policy: a ``policies.Policy``, a
         registry name (``"qm"``, ``"qm+qe"``, ...), a legacy
         ``core.sfp.SFPPolicy`` (deprecated shim), or None for full
@@ -81,12 +82,29 @@ class DecoderModel:
         serving KV cache: prefill packs the cache, decode splices packed
         token rows and attends through the fused decompress-attend kernel
         (SFP codecs on pallas/interpret) or the unpack fallback. None =
-        raw bf16/fp32 cache."""
+        raw bf16/fp32 cache.
+
+        ``stash_containers`` (optional, one codec name per period) packs
+        each period's activation stash at its *own* container geometry —
+        per-layer realized containers instead of one network-wide choice.
+        Container geometry is static under jit, so the period scan is
+        chained into per-period segments (HLO grows with n_periods);
+        derive the tuple from the live policy state with ``stash_plan``
+        and rebuild the jitted step when it changes (learned bitlengths
+        move slowly, so re-lowering is rare).
+        """
         self.cfg = cfg
         self.policy = policies.coerce(policy)
         self.mesh = mesh  # enables SPMD-manual paths (sharded embed lookup)
         self.rules = rules
         self.kv_container = kv_container
+        if stash_containers is not None:
+            stash_containers = tuple(stash_containers)
+            if len(stash_containers) != cfg.n_periods:
+                raise ValueError(
+                    f"stash_containers needs one codec per period "
+                    f"({cfg.n_periods}), got {len(stash_containers)}")
+        self.stash_containers = stash_containers
         self.man_bits = containers.spec_for(cfg.compute_dtype).man_bits
         self.dims = scope_dims(cfg)
 
@@ -236,13 +254,14 @@ class DecoderModel:
 
     def _make_codec(self, dtype):
         del dtype  # carried by the packed representation itself
+        if not self.policy.enabled:
+            return stash.identity_compress, stash.identity_decompress, None
+        return self._codec_fns(codecs.get(self.policy.container))
+
+    def _codec_fns(self, codec):
+        """Stash compress/decompress/stash_grad closures for one codec."""
         pol = self.policy
         dims = self.dims
-
-        if not pol.enabled:
-            return stash.identity_compress, stash.identity_decompress, None
-
-        codec = codecs.get(pol.container)
 
         def compress(h, x):
             # Fused quantize+pack: the mantissa-bitlength signal rides into
@@ -266,6 +285,24 @@ class DecoderModel:
                 return {"pol": pol.stash_grad(dh, h_q, x["pol"], dims)}
 
         return compress, decompress, stash_grad
+
+    def stash_plan(self, pstate: Optional[policies.PolicyState] = None
+                   ) -> Tuple[str, ...]:
+        """Per-period dense container names realized from the policy's
+        current per-layer decisions.
+
+        Host-side: call it outside jit (fresh state when ``pstate`` is
+        None), pass the result as ``stash_containers`` to a new
+        DecoderModel (or rebuild the jitted step) whenever the plan
+        changes. Each period's learned (man_bits, exp_bits) maps through
+        ``codecs.dense_name`` — so a period that converged to 2 mantissa /
+        4 exponent bits stashes 7-bit dense payloads while a
+        precision-hungry neighbour keeps a wider container.
+        """
+        pol = self.policy
+        st = pol.init_state(self.dims) if pstate is None else pstate
+        return tuple(codecs.dense_name(m, e)
+                     for m, e in pol.layer_decisions(st, self.dims))
 
     # ------------------------------------------------------------------
     # Training / prefill forward
@@ -314,9 +351,26 @@ class DecoderModel:
             xs["pol"] = pol.scan_slices(run.pol, self.dims)
 
         extras0 = jnp.zeros((), jnp.float32)
-        (h, extras), aux = stash.sfp_scan(
-            period_fn, compress, decompress, (h, extras0), xs,
-            stash_grad=stash_grad)
+        if pol.enabled and self.stash_containers is not None:
+            # Per-layer containers: each period's stash packs at its own
+            # (static) geometry, so the scan is chained into one sfp_scan
+            # segment per period — same custom-VJP remat structure, one
+            # codec per segment. aux stacks back to the scanned layout.
+            carry = (h, extras0)
+            aux_parts = []
+            for i, cname in enumerate(self.stash_containers):
+                comp, decomp, sgrad = self._codec_fns(codecs.get(cname))
+                xs_i = jax.tree.map(lambda a: a[i:i + 1], xs)
+                carry, aux_i = stash.sfp_scan(period_fn, comp, decomp,
+                                              carry, xs_i, stash_grad=sgrad)
+                aux_parts.append(aux_i)
+            h, extras = carry
+            aux = jax.tree.map(lambda *a: jnp.concatenate(a, axis=0),
+                               *aux_parts)
+        else:
+            (h, extras), aux = stash.sfp_scan(
+                period_fn, compress, decompress, (h, extras0), xs,
+                stash_grad=stash_grad)
 
         # Remainder layers (unrolled, decision applied straight-through at
         # the stash boundary).

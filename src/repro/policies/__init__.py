@@ -15,18 +15,21 @@ Registered policies:
   static  — fixed bitlengths (Gist-style ablation)
   qm      — Quantum Mantissa: learned per-scope mantissa bits (§IV-A)
   qe      — Quantum Exponent: learned per-scope exponent bits (§IV)
+  afloat  — QE + AdaptivFloat-style learned per-scope exponent *bias*
+            offsets (a related-work plugin exercising the registry and
+            the dense containers from outside the paper)
   bitchop — loss-EMA controlled network-wide mantissa bits (§IV-B)
   bitwave — BitChop's controller driving mantissa + exponent bits
 
-New strategies (AdaptivFloat-style per-tensor exponent ranges, Flexpoint
-shared-exponent controllers, ...) subclass ``Policy`` and register via
-``policies.register()``; they become available to the model, train step,
-launchers, and benchmarks at once.
+New strategies (Flexpoint shared-exponent controllers, ...) subclass
+``Policy`` and register via ``policies.register()``; they become
+available to the model, train step, launchers, and benchmarks at once.
 """
 from repro.policies.base import (Policy, PolicyState, PrecisionDecision,
                                  ScopeDims, apply_decision_ste, coerce,
                                  full_decision, get, modeled_footprint,
                                  names, register, ste_truncate)
+from repro.policies.afloat import AFloatPolicy
 from repro.policies.bitwave import BitChopPolicy, BitWavePolicy
 from repro.policies.composite import CompositePolicy
 from repro.policies.quantum import QEPolicy, QMPolicy
@@ -36,6 +39,7 @@ register(NonePolicy)
 register(StaticPolicy)
 register(QMPolicy)
 register(QEPolicy)
+register(AFloatPolicy)
 register(BitChopPolicy)
 register(BitWavePolicy)
 
@@ -43,6 +47,6 @@ __all__ = [
     "Policy", "PolicyState", "PrecisionDecision", "ScopeDims",
     "apply_decision_ste", "coerce", "full_decision", "get",
     "modeled_footprint", "names", "register", "ste_truncate",
-    "NonePolicy", "StaticPolicy", "QMPolicy", "QEPolicy",
+    "NonePolicy", "StaticPolicy", "QMPolicy", "QEPolicy", "AFloatPolicy",
     "BitChopPolicy", "BitWavePolicy", "CompositePolicy",
 ]

@@ -1,0 +1,146 @@
+"""AdaptivFloat-style policy: learned per-tensor exponent *bias* offsets.
+
+AdaptivFloat (PAPERS.md) showed that small-bit float formats work best
+when each tensor gets its own exponent bias — the representable window
+slides to where the tensor's magnitudes actually live, instead of being
+anchored at the IEEE default. This plugin brings that idea into the
+policy registry as an extension of Quantum Exponent: on top of QE's
+learned per-scope exponent *bitlengths*, ``afloat`` learns a per-scope
+*bias offset* (in binades) that shifts the e-bit window via
+``containers.truncate_exponent(..., bias_offset=...)``.
+
+The bias gradient is a two-sided finite-difference estimator inside a
+custom VJP (the same realized-quantization-difference trick as the QM/QE
+stash estimators): d loss / d bias ~= g . (q(b+1) - q(b-1)) / 2, which is
+exactly the loss sensitivity to sliding the window one binade either way.
+The value path is straight-through. Deployment maps through the same
+dense ``sfp-m{K}e{E}`` containers as QE — the bias rides in the shared
+per-128-lane base exponents, so no container change is needed; this
+policy exists to exercise the dense container stack from outside the
+paper (ROADMAP "Policy plugins from related work").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import containers
+from repro.policies import base
+from repro.policies.quantum import QEPolicy
+
+AF_ACT_SALT = 9  # decorrelate from QM (7) / QE (8) act draws
+
+
+@jax.custom_vjp
+def af_bias_shift(x, e, b):
+    """Re-clamp ``x`` to the e-bit window shifted by round(b) binades."""
+    return containers.truncate_exponent(x, e,
+                                        bias_offset=_round_bias(b))
+
+
+def _round_bias(b):
+    return jnp.round(jnp.asarray(b, jnp.float32)).astype(jnp.int32)
+
+
+def _af_fwd(x, e, b):
+    bi = _round_bias(b)
+    return containers.truncate_exponent(x, e, bias_offset=bi), (x, e, bi)
+
+
+def _af_bwd(res, g):
+    x, e, bi = res
+    gf = g.astype(jnp.float32)
+    hi = containers.truncate_exponent(x, e, bias_offset=bi + 1)
+    lo = containers.truncate_exponent(x, e, bias_offset=bi - 1)
+    db = 0.5 * jnp.sum(gf * (hi - lo).astype(jnp.float32))
+    return g, None, db  # straight-through in x; e learns via qe_quantize
+
+
+af_bias_shift.defvjp(_af_fwd, _af_bwd)
+
+_BIAS_KEYS = ("act_b", "w_b", "act_rem_b", "w_rem_b")
+
+
+@dataclasses.dataclass(frozen=True)
+class AFloatPolicy(QEPolicy):
+    """QE bitlengths + AdaptivFloat learned per-scope bias offsets."""
+
+    bias_lr: float = 0.05
+    init_bias: float = 0.0
+    max_bias: float = 64.0  # |offset| cap in binades (well past fp32 range)
+
+    name = "afloat"
+
+    # -- state: QE's bitlengths plus one bias per scope -------------------
+
+    def init_state(self, dims):
+        st = super().init_state(dims)
+        bias = lambda n: jnp.full((n,), float(self.init_bias), jnp.float32)
+        learn = dict(st.learn,
+                     act_b=bias(dims.n_periods), w_b=bias(dims.n_periods),
+                     act_rem_b=bias(dims.n_rem), w_rem_b=bias(dims.n_rem))
+        return base.PolicyState(learn=learn, ctrl=st.ctrl)
+
+    def scan_slices(self, view, dims):
+        return {"act": view["act"], "w": view["w"],
+                "act_b": view["act_b"], "w_b": view["w_b"]}
+
+    def rem_slice(self, view, i, dims):
+        return {"act": view["act_rem"][i], "w": view["w_rem"][i],
+                "act_b": view["act_rem_b"][i], "w_b": view["w_rem_b"][i]}
+
+    # -- quantizers: QE range reduction, then the learned window shift ----
+
+    def quantize_act(self, x, pslice, key, dims):
+        x = super().quantize_act(x, pslice, key, dims)
+        e = containers.stochastic_bitlength(
+            pslice["act"], jax.random.fold_in(key, AF_ACT_SALT),
+            dims.exp_bits, min_bits=containers.MIN_EXP_BITS)
+        return af_bias_shift(x, e, pslice["act_b"])
+
+    def quantize_weight(self, w, pslice, key, dims):
+        w = super().quantize_weight(w, pslice, key, dims)
+        e = containers.stochastic_bitlength(
+            pslice["w"], jax.random.fold_in(key, AF_ACT_SALT + 1),
+            dims.exp_bits, min_bits=containers.MIN_EXP_BITS)
+        return af_bias_shift(w, e, pslice["w_b"])
+
+    def stash_grad(self, dh, h_q, pslice, dims):
+        g = super().stash_grad(dh, h_q, pslice, dims)
+        g.update({k: jnp.zeros((), jnp.float32)
+                  for k in ("act_b", "w_b") if k in pslice})
+        return g
+
+    # -- loss & updates: biases are unpenalized and clip symmetrically ----
+
+    def penalty(self, learn, lam, step, dims):
+        core = {k: v for k, v in learn.items() if not k.endswith("_b")}
+        return super().penalty(core, lam, step, dims)
+
+    def update_learn(self, learn, grads, dims):
+        lo = self._min_bits(dims)
+        top = float(self._max_bits(dims))
+        out = {}
+        for k in learn:
+            if k.endswith("_b"):
+                out[k] = jnp.clip(learn[k] - self.bias_lr * grads[k],
+                                  -self.max_bias, self.max_bias)
+            else:
+                out[k] = jnp.clip(learn[k] - self.lr * grads[k], lo, top)
+        return out
+
+    # -- reporting --------------------------------------------------------
+
+    def metrics(self, state, dims):
+        m = super().metrics(state, dims)
+        return {"af_act_e_mean": m["qe_act_mean"],
+                "af_w_e_mean": m["qe_w_mean"],
+                "af_act_bias_mean": jnp.mean(state.learn["act_b"]),
+                "af_w_bias_mean": jnp.mean(state.learn["w_b"])}
+
+    def snapshot(self, state):
+        return {"act_e": state.learn["act"], "w_e": state.learn["w"],
+                "act_bias": state.learn["act_b"],
+                "w_bias": state.learn["w_b"]}

@@ -231,6 +231,15 @@ class Policy(abc.ABC):
         return {"man_bits": float(dims.man_bits),
                 "exp_bits": float(dims.exp_bits)}
 
+    def layer_decisions(self, state: PolicyState, dims: ScopeDims):
+        """Per-period deployment decisions ``[(man_bits, exp_bits), ...]``
+        (length ``dims.n_periods``) — the host-side view behind per-layer
+        realized containers (``DecoderModel.stash_plan``). Policies with
+        per-scope parameters override; network-wide controllers repeat
+        their summary."""
+        d = self.decision_summary(state, dims)
+        return [(d["man_bits"], d["exp_bits"])] * dims.n_periods
+
 
 def modeled_footprint(policy: Policy, state: PolicyState, dims: ScopeDims
                       ) -> Dict[str, float]:

@@ -137,3 +137,13 @@ class CompositePolicy(base.Policy):
             man = min(man, d["man_bits"])
             exp = min(exp, d["exp_bits"])
         return {"man_bits": man, "exp_bits": exp}
+
+    def layer_decisions(self, state, dims):
+        # Field-wise min per period, like act_decision: each sub-policy
+        # constrains the field it adapts and leaves the other full-width.
+        per_sub = [p.layer_decisions(
+            base.PolicyState(learn=state.learn[p.name],
+                             ctrl=state.ctrl[p.name]), dims)
+            for p in self.policies]
+        return [(min(d[0] for d in ds), min(d[1] for d in ds))
+                for ds in zip(*per_sub)]

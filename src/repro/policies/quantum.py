@@ -134,6 +134,13 @@ class _LearnedBitsPolicy(base.Policy):
         cat = jnp.concatenate([v.reshape(-1) for v in vals])
         return float(jnp.mean(jnp.ceil(cat)))
 
+    def _deployed_per_period(self, state, dims):
+        """Per-period deployed act bitlengths (rounded up, host floats)."""
+        lo = self._min_bits(dims)
+        top = float(self._max_bits(dims))
+        v = jnp.ceil(jnp.clip(state.learn["act"], lo, top))
+        return [float(b) for b in v]
+
 
 @dataclasses.dataclass(frozen=True)
 class QMPolicy(_LearnedBitsPolicy):
@@ -169,6 +176,10 @@ class QMPolicy(_LearnedBitsPolicy):
     def decision_summary(self, state, dims):
         return {"man_bits": self._deployed_mean(state, dims),
                 "exp_bits": float(dims.exp_bits)}
+
+    def layer_decisions(self, state, dims):
+        return [(b, float(dims.exp_bits))
+                for b in self._deployed_per_period(state, dims)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,3 +227,7 @@ class QEPolicy(_LearnedBitsPolicy):
     def decision_summary(self, state, dims):
         return {"man_bits": float(dims.man_bits),
                 "exp_bits": self._deployed_mean(state, dims)}
+
+    def layer_decisions(self, state, dims):
+        return [(float(dims.man_bits), b)
+                for b in self._deployed_per_period(state, dims)]

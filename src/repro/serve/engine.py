@@ -216,10 +216,17 @@ class PagedEngine:
         self.max_slots = int(max_slots)
         if num_blocks is None:
             num_blocks = self.max_slots * self.nmax  # full residency
-        self.pool = _pool.BlockPool(num_blocks, self.max_slots, self.nmax,
-                                    self.block_l)
-        # Fail fast if the codec cannot page (no fixed-width geometry).
+        # Fail fast if the codec cannot page (no fixed-width geometry) —
+        # and price one block in dense-packed bytes across the layers that
+        # share the pool, so admission accounting is in realized bytes.
         _kvcache.paged_block_spec(cfg, 1, self.block_l, self.container)
+        kinds = list(cfg.period) * cfg.n_periods + list(cfg.remainder)
+        self.n_global_layers = sum(k == GLOBAL for k in kinds)
+        self.block_bytes = self.n_global_layers * _kvcache.paged_block_bytes(
+            cfg, self.block_l, self.container)
+        self.pool = _pool.BlockPool(num_blocks, self.max_slots, self.nmax,
+                                    self.block_l,
+                                    block_bytes=self.block_bytes)
         self.mem = self._init_mem()
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
@@ -254,12 +261,19 @@ class PagedEngine:
         return mem
 
     def cache_bytes(self) -> Dict[str, float]:
-        """Realized pool bytes (total device allocation) and the bytes
-        actually *live* (allocated blocks), per the host block accounting."""
+        """Realized pool bytes (total device allocation) and the
+        dense-packed bytes actually *live* (allocated blocks), per the
+        host byte accounting."""
         leaves = jax.tree_util.tree_leaves(self.mem)
         total = float(sum(l.size * l.dtype.itemsize for l in leaves))
-        frac = self.pool.used_blocks / max(1, self.pool.num_blocks)
-        return {"total": total, "live_block_fraction": frac}
+        st = self.pool.stats()
+        return {"total": total,
+                "live_block_fraction":
+                    st.used_blocks / max(1, st.num_blocks),
+                "block_bytes": float(st.block_bytes),
+                "pool_capacity_bytes": float(st.capacity_bytes),
+                "pool_live_bytes": float(st.used_bytes),
+                "pool_peak_bytes": float(st.peak_bytes)}
 
     # -- prefill ---------------------------------------------------------
 

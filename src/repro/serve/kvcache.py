@@ -192,11 +192,13 @@ def pack_prefill_cache(cache_kv: attention.KVCache,
 class PagedKV(NamedTuple):
     """One global-attention layer's slice of the packed block pool.
 
-    Physical blocks shared by every request: payload (P_blocks, block_l, D)
-    uint8/uint16 and bases (P_blocks, block_l, D // 128) uint8 in the
-    ``sfp_pack_nd`` layout. Which blocks belong to which request lives
-    outside, in the engine's block tables — the pool itself is request-
-    agnostic, which is what lets freed blocks recycle instantly.
+    Physical blocks shared by every request: payload
+    (P_blocks, block_l, fields.nd_payload_cols(D)) — 8/16-bit words, or
+    uint8 bit planes for dense sub-byte geometries — and bases
+    (P_blocks, block_l, D // 128) uint8 in the ``sfp_pack_nd`` /
+    ``bitplane_pack_nd`` layout. Which blocks belong to which request
+    lives outside, in the engine's block tables — the pool itself is
+    request-agnostic, which is what lets freed blocks recycle instantly.
     """
 
     k_payload: jax.Array
@@ -205,19 +207,37 @@ class PagedKV(NamedTuple):
     v_bases: jax.Array
 
 
-def paged_block_spec(cfg: ArchConfig, num_blocks: int, block_l: int,
-                     container: Optional[str] = None) -> PagedKV:
-    """ShapeDtypeStruct skeleton of one layer's pool slice."""
-    D = cfg.n_kv_heads * cfg.head_dim_
-    assert D % 128 == 0, (D, "KV feature dim must align to 128 lanes")
+def _paged_fields(cfg: ArchConfig, container: Optional[str]):
     codec = _codec(container)
     fields = codec.pack_fields(cfg.compute_dtype)
     if fields is None:
         raise ValueError(
             f"paged KV pools need a fixed-width payload geometry; codec "
             f"{codec.name!r} has none (pack_fields() is None)")
+    return fields
+
+
+def paged_block_bytes(cfg: ArchConfig, block_l: int,
+                      container: Optional[str] = None) -> int:
+    """Dense-packed bytes one physical block occupies for *one* layer:
+    K + V payload (words or bit planes) plus the shared group bases.
+    This is the unit the pool's admission accounting is measured in."""
+    fields = _paged_fields(cfg, container)
+    D = cfg.n_kv_heads * cfg.head_dim_
+    row = (fields.nd_payload_cols(D)
+           * jnp.dtype(fields.payload_dtype).itemsize + D // 128)
+    return 2 * block_l * row
+
+
+def paged_block_spec(cfg: ArchConfig, num_blocks: int, block_l: int,
+                     container: Optional[str] = None) -> PagedKV:
+    """ShapeDtypeStruct skeleton of one layer's pool slice."""
+    D = cfg.n_kv_heads * cfg.head_dim_
+    assert D % 128 == 0, (D, "KV feature dim must align to 128 lanes")
+    fields = _paged_fields(cfg, container)
     pd = jnp.dtype(fields.payload_dtype)
-    payload = jax.ShapeDtypeStruct((num_blocks, block_l, D), pd)
+    payload = jax.ShapeDtypeStruct(
+        (num_blocks, block_l, fields.nd_payload_cols(D)), pd)
     bases = jax.ShapeDtypeStruct((num_blocks, block_l, D // 128), jnp.uint8)
     return PagedKV(k_payload=payload, k_bases=bases,
                    v_payload=payload, v_bases=bases)

@@ -12,6 +12,10 @@ an sfp8 pool holds ~2x the tokens of a raw bf16 cache in the same HBM
 footprint, which is exactly the admission-throughput win the scheduler
 converts into tok/s.
 
+A *dense* policy-derived geometry (``sfp-m{K}e{E}``, bit-plane payloads)
+pushes the same lever further: a 7-bit ``sfp-m2e4`` pool holds ~2.27x the
+tokens of raw bf16 where fixed-lane sfp8 stops at ~1.98x.
+
 Physical block 0 is reserved as the *trash block*: idle engine slots (and
 logical blocks past a row's allocation) point their table entries at it,
 so the jitted fixed-shape decode step can always scatter/gather without
@@ -43,6 +47,23 @@ class PoolStats:
     free_blocks: int
     used_blocks: int
     peak_used: int
+    block_bytes: int = 0  # dense-packed bytes per block (0 = not priced)
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_blocks * self.block_bytes
+
+    @property
+    def used_bytes(self) -> int:
+        return self.used_blocks * self.block_bytes
+
+    @property
+    def free_bytes(self) -> int:
+        return self.free_blocks * self.block_bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.peak_used * self.block_bytes
 
 
 class BlockPool:
@@ -53,13 +74,23 @@ class BlockPool:
     ``num_blocks + 1``. Tables are dense numpy (max_slots, max_logical)
     int32 handed to the jitted step each call; unallocated entries point
     at the trash block.
+
+    Admission accounting is measured in *dense-packed bytes*:
+    ``block_bytes`` is what one physical block really occupies under the
+    pool's codec geometry (payload words or bit planes + group bases,
+    summed over the layers sharing this pool — see
+    ``kvcache.paged_block_bytes``), so a dense sub-byte container admits
+    proportionally more tokens into the same HBM budget than a fixed-lane
+    one. Blocks remain the allocation granule; bytes are blocks times
+    ``block_bytes``, and every stat is exposed in both units.
     """
 
     def __init__(self, num_blocks: int, max_slots: int, max_logical: int,
-                 block_l: int):
+                 block_l: int, block_bytes: int = 0):
         assert num_blocks >= 1 and max_slots >= 1 and max_logical >= 1
         self.num_blocks = int(num_blocks)
         self.block_l = int(block_l)
+        self.block_bytes = int(block_bytes)
         self.max_slots = int(max_slots)
         self.max_logical = int(max_logical)
         # LIFO free list: physical ids 1..num_blocks (0 is trash).
@@ -79,11 +110,17 @@ class BlockPool:
     def used_blocks(self) -> int:
         return self.num_blocks - len(self._free)
 
+    def bytes_for(self, n_tokens: int) -> int:
+        """Dense-packed bytes a request holding ``n_tokens`` KV rows pins
+        (block-granular — partial blocks occupy whole blocks)."""
+        return blocks_for(n_tokens, self.block_l) * self.block_bytes
+
     def stats(self) -> PoolStats:
         return PoolStats(num_blocks=self.num_blocks,
                          free_blocks=self.free_blocks,
                          used_blocks=self.used_blocks,
-                         peak_used=self.peak_used)
+                         peak_used=self.peak_used,
+                         block_bytes=self.block_bytes)
 
     def slot_blocks(self, slot: int) -> int:
         return len(self._owned.get(slot, ()))

@@ -5,10 +5,12 @@ training (Quantum Mantissa / Quantum Exponent / BitWave) carry over to
 inference. Training stamps its final per-run ``PrecisionDecision`` summary
 into every checkpoint manifest (``CheckpointManager.save(extra=...)`` via
 the train loop); this module reads it back with ``read_extra`` and derives
-the serving KV pool's container from it — a parametric
-``sfp{8|16}-m{K}e{E}`` geometry (codecs/sfp.py) whose payload word holds
-exactly the learned mantissa bits and a delta-exponent field sized to the
-learned exponent range.
+the serving KV pool's container from it — a *dense* ``sfp-m{K}e{E}``
+geometry (codecs/sfp.py) whose bit-plane payload holds exactly
+1 + learned-exponent + learned-mantissa bits per value, so the pool's
+bytes shrink with the policy instead of rounding up to an 8/16-bit lane
+(the fixed-lane word layout survives as the fast path when the budget
+lands exactly on a lane width).
 
 No policy state is restored and no model leaves are touched: the decision
 summary is tiny JSON metadata, so a serving host can size its pool before
@@ -16,7 +18,6 @@ it ever loads weights.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional
 
 from repro.checkpoint.manager import CheckpointManager
@@ -25,18 +26,14 @@ from repro.checkpoint.manager import CheckpointManager
 def container_for_decision(man_bits: float, exp_bits: float) -> str:
     """Map a (possibly fractional) learned decision to a container name.
 
-    Learned bitlengths are deployed rounded up (a fractional bit cannot be
-    stored); the delta-exponent field gets the learned exponent bitlength
-    (clamped to [2, 7] — the shared 128-lane base absorbs the rest of the
-    range, and deltas below 2 bits cannot distinguish zero from
-    saturation). The payload word is the smallest of 8/16 that fits
-    sign + dexp + mantissa.
+    Delegates to ``codecs.dense_name``: bitlengths round up, the
+    delta-exponent field clamps to [2, 7], and the payload is the dense
+    1 + dexp + man bit-plane geometry (realized as a fixed-lane word only
+    when it lands exactly on 8/16 bits).
     """
-    man = max(1, int(math.ceil(man_bits - 1e-9)))
-    dexp = max(2, min(7, int(math.ceil(exp_bits - 1e-9))))
-    payload = 8 if 1 + dexp + man <= 8 else 16
-    man = min(man, payload - 1 - dexp)
-    return f"sfp{payload}-m{man}e{dexp}"
+    from repro import codecs
+
+    return codecs.dense_name(man_bits, exp_bits)
 
 
 def decision_from_extra(extra: Dict[str, Any]) -> Optional[Dict[str, float]]:

@@ -40,6 +40,10 @@ class LoopConfig:
     # per-save dynamic metadata — the policy's *current* PrecisionDecision
     # summary, which policy-aware serving reads back — is stamped too.
     ckpt_extra: Optional[Any] = None
+    # False -> append to an existing metrics file instead of truncating
+    # it; segmented drivers (the per-layer-stash refresh loop) set this on
+    # every segment after the first so one JSONL spans the whole run.
+    metrics_truncate: bool = True
 
 
 def _scalarize(v):
@@ -75,7 +79,8 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
     mfile = Path(cfg.metrics_file) if cfg.metrics_file else None
     if mfile:
         mfile.parent.mkdir(parents=True, exist_ok=True)
-        mfile.write_text("")
+        if cfg.metrics_truncate or not mfile.exists():
+            mfile.write_text("")
 
     step = int(np.asarray(state.step))
     if mgr is not None and mgr.latest_step() is not None:

@@ -313,12 +313,19 @@ def test_generate_memoizes_compiled_functions():
 
 
 def test_container_for_decision_mapping():
-    assert precision.container_for_decision(3.0, 4.0) == "sfp8-m3e4"
-    assert precision.container_for_decision(2.3, 3.7) == "sfp8-m3e4"
-    assert precision.container_for_decision(7.0, 5.0) == "sfp16-m7e5"
+    # Learned decisions now deploy as *dense* bit-plane geometries: the
+    # payload is exactly 1 + dexp + man bits (an 8-bit budget like m3e4
+    # keeps the fixed-lane word layout as the fast path).
+    assert precision.container_for_decision(3.0, 4.0) == "sfp-m3e4"
+    assert precision.container_for_decision(2.3, 3.7) == "sfp-m3e4"
+    assert precision.container_for_decision(7.0, 5.0) == "sfp-m7e5"
     # exponent clamps into the delta field range
-    assert precision.container_for_decision(3.0, 8.0) == "sfp16-m3e7"
-    assert precision.container_for_decision(1.0, 1.0) == "sfp8-m1e2"
+    assert precision.container_for_decision(3.0, 8.0) == "sfp-m3e7"
+    assert precision.container_for_decision(1.0, 1.0) == "sfp-m1e2"
+    f8 = codecs.get("sfp-m3e4").pack_fields(jnp.bfloat16)
+    assert f8.payload_bits == 8 and not f8.dense  # fast path survives
+    f7 = codecs.get("sfp-m2e4").pack_fields(jnp.bfloat16)
+    assert (f7.payload_bits, f7.dense) == (7, True)
 
 
 def test_parametric_sfp_codec_resolves_and_roundtrips():
@@ -345,10 +352,11 @@ def test_container_from_checkpoint_decision_stamp(tmp_path):
                               "decision": {"man_bits": 4.2,
                                            "exp_bits": 5.6}})
     name = precision.container_from_checkpoint(str(tmp_path))
-    assert name == "sfp16-m5e6"
-    # the derived container is servable end-to-end
+    assert name == "sfp-m5e6"
+    # the derived container is servable end-to-end: a dense 12-bit payload
     f = codecs.get(name).pack_fields(jnp.float32)
-    assert f.payload_bits == 16 and f.man_keep == 5 and f.dexp_bits == 6
+    assert f.payload_bits == 12 and f.man_keep == 5 and f.dexp_bits == 6
+    assert f.dense
 
     # legacy checkpoints without a decision fall back to the run container
     mgr2 = CheckpointManager(str(tmp_path / "legacy"))
@@ -368,7 +376,7 @@ def test_paged_engine_serves_policy_derived_container():
     generates tokens identical to contiguous generate with that codec."""
     cfg, model = _model("mistral-large-123b",
                         precision.container_for_decision(6.0, 5.0))
-    assert model.kv_container == "sfp16-m6e5"
+    assert model.kv_container == "sfp-m6e5"  # dense 12-bit payload
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.RandomState(6)
     reqs = [Request(uid=i, prompt=p, max_new=3)
