@@ -127,16 +127,41 @@ def run(quick: bool = False) -> dict:
     }
 
 
+# CI regression guard (--quick): the dense bit-plane decode must stay
+# within this factor of the fixed-lane sfp8 step at the smoke shape.
+# The budget is loose against the full-sweep acceptance (~2.5x) because
+# the (1, 256) smoke point is dispatch- rather than bandwidth-dominated
+# and CI machines are noisy — it catches the failure mode that matters:
+# the plane expansion regressing back to per-bit gathers (>10x).
+QUICK_MAX_DENSE_VS_SFP8 = 3.0
+
+
+def _check_quick(r: dict) -> None:
+    ms = r["points"][0]["ms_per_step"]
+    ratio = ms["sfp-m2e4"] / ms["sfp8"]
+    status = "OK" if ratio <= QUICK_MAX_DENSE_VS_SFP8 else "FAIL"
+    print(f"quick guard: sfp-m2e4/sfp8 = {ratio:.2f}x "
+          f"(budget {QUICK_MAX_DENSE_VS_SFP8:.1f}x) {status}")
+    if ratio > QUICK_MAX_DENSE_VS_SFP8:
+        raise SystemExit(
+            f"dense decode regression: sfp-m2e4 {ms['sfp-m2e4']:.3f} ms "
+            f"vs sfp8 {ms['sfp8']:.3f} ms ({ratio:.2f}x > "
+            f"{QUICK_MAX_DENSE_VS_SFP8:.1f}x)")
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="single small point, fewer iters (CI smoke)")
+                    help="single small point, fewer iters (CI smoke); "
+                         "asserts the dense-vs-sfp8 latency guard")
     args = ap.parse_args(argv)
     r = run(quick=args.quick)
     OUT.write_text(json.dumps(r, indent=2))
     print(json.dumps(r, indent=2))
     print(f"wrote {OUT}")
+    if args.quick:
+        _check_quick(r)
 
 
 if __name__ == "__main__":

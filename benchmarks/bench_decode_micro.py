@@ -1,0 +1,152 @@
+"""Pack/unpack microbenchmark: prefill / insert / generate phases.
+
+Maxtext-style decomposition of the serving loop into its three cache
+operations, measured per container geometry directly at the codec layer
+(no model around it — this isolates the container's own cost):
+
+  * **prefill** — pack a whole (B, L, D) bf16 context into the packed
+    cache layout (the prompt-ingest write path);
+  * **insert**  — pack one (B, 1, D) token row and splice it into the
+    cache ring at a position (the per-decode-step write path);
+  * **generate** — unpack the whole packed cache back to bf16 (the
+    per-decode-step read path the ref fallback pays every token, and the
+    flash-decode kernels stream tile by tile).
+
+Each phase reports median ms, the bytes it moves (dense side + packed
+side, from the container's PackFields geometry), and the achieved GB/s —
+the roofline view: pack/unpack are pure byte-shuffles, so achieved GB/s
+against the machine's streaming bandwidth is the efficiency of the
+bit-plane expansion itself.
+
+Geometries swept: dense bit-plane ``sfp-m1e2`` (4-bit payload),
+``sfp-m2e4`` (7), ``sfp-m3e5`` (9, two plane blocks) and the fixed-lane
+``sfp8``/``sfp16`` words; backends ``ref`` (XLA) and ``interpret`` (the
+Pallas kernels under the interpreter, at a reduced shape — correctness
+cross-check and kernel-shape coverage, not a speed claim).
+
+``--profile`` wraps every ref-backend phase in a ``jax.profiler`` trace
+(one capture per geometry/phase) under ``experiments/traces/
+decode_micro/`` — nightly CI uploads that directory as an artifact.
+Emitted as BENCH_decode_micro.json standalone or via benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+GEOMETRIES = ("sfp-m1e2", "sfp-m2e4", "sfp-m3e5", "sfp8", "sfp16")
+# (B, L, D) per backend: D = 4 groups of 128 lanes on ref; interpret runs
+# the Pallas kernels under the interpreter, so it gets a small shape.
+SHAPES = {"ref": (4, 512, 512), "interpret": (1, 128, 128)}
+ITERS = {"ref": 10, "interpret": 2}
+OUT = Path(__file__).resolve().parent.parent / "BENCH_decode_micro.json"
+TRACE_DIR = (Path(__file__).resolve().parent.parent / "experiments"
+             / "traces" / "decode_micro")
+
+
+def _median_ms(fn, iters):
+    fn()  # compile + warm caches
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e3
+
+
+def _packed_bytes(fields, n_values):
+    """Dense-packed bytes for ``n_values`` lanes: payload + group bases."""
+    groups = n_values // 128
+    return n_values * fields.payload_bits // 8 + groups
+
+
+def _phase_bytes(fields, B, L, D, itemsize):
+    """Bytes moved per phase: dense side + packed side (read + write)."""
+    full, row = B * L * D, B * D
+    return {
+        "prefill": full * itemsize + _packed_bytes(fields, full),
+        "insert": row * itemsize + _packed_bytes(fields, row),
+        "generate": _packed_bytes(fields, full) + full * itemsize,
+    }
+
+
+def run(profile: bool = False) -> dict:
+    from repro import codecs
+    from repro.kernels import ops
+    from repro.serve.kvcache import _splice
+
+    dtype = jnp.bfloat16
+    itemsize = jnp.dtype(dtype).itemsize
+    out = {"dtype": str(jnp.dtype(dtype)), "geometries": list(GEOMETRIES),
+           "shapes": {k: list(v) for k, v in SHAPES.items()},
+           "backends": {}}
+    for backend, (B, L, D) in SHAPES.items():
+        iters = ITERS[backend]
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(0),
+                                    (B, L, D)).astype(dtype)
+        row = x[:, :1]
+        pos = jnp.asarray(L // 2, jnp.int32)
+        ops.force_backend(backend)
+        per_geo = {}
+        try:
+            for name in GEOMETRIES:
+                codec = codecs.get(name)
+                fields = codec.pack_fields(dtype)
+                packed = jax.jit(codec.pack)(x)
+                packed = jax.block_until_ready(
+                    jax.tree.map(lambda a: a, packed))
+                row_pk = jax.jit(codec.pack)(row)
+
+                phases = {
+                    "prefill": jax.jit(codec.pack),
+                    "insert": jax.jit(
+                        lambda c, r, p: _splice(c, r, p)),
+                    "generate": jax.jit(codec.unpack),
+                }
+                args = {"prefill": (x,), "insert": (packed, row_pk, pos),
+                        "generate": (packed,)}
+                nbytes = _phase_bytes(fields, B, L, D, itemsize)
+                geo = {"payload_bits": int(fields.payload_bits),
+                       "dense": bool(fields.dense), "phases": {}}
+                for ph, fn in phases.items():
+                    call = lambda: jax.block_until_ready(fn(*args[ph]))
+                    ms = _median_ms(call, iters)
+                    if profile and backend == "ref":
+                        tdir = TRACE_DIR / name / ph
+                        tdir.mkdir(parents=True, exist_ok=True)
+                        with jax.profiler.trace(str(tdir)):
+                            call()
+                    geo["phases"][ph] = {
+                        "ms": ms,
+                        "bytes": float(nbytes[ph]),
+                        "gbps": nbytes[ph] / ms / 1e6,
+                    }
+                per_geo[name] = geo
+        finally:
+            ops.force_backend(None)
+        out["backends"][backend] = per_geo
+    if profile:
+        out["trace_dir"] = str(TRACE_DIR)
+    return out
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", action="store_true",
+                    help="capture jax.profiler traces per ref phase "
+                         f"under {TRACE_DIR}")
+    args = ap.parse_args(argv)
+    r = run(profile=args.profile)
+    OUT.write_text(json.dumps(r, indent=2))
+    print(json.dumps(r, indent=2))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,11 @@ OUT = Path(__file__).resolve().parent.parent / "experiments"
 
 
 def main() -> None:
-    from benchmarks import (bench_codecs, bench_decode, bench_policies,
-                            bench_serve, fig_bitchop, fig_gecko,
-                            fig_qm_bitlengths, fig_relative_compression,
-                            table1_footprint, table2_perf_energy)
+    from benchmarks import (bench_codecs, bench_decode, bench_decode_micro,
+                            bench_policies, bench_serve, fig_bitchop,
+                            fig_gecko, fig_qm_bitlengths,
+                            fig_relative_compression, table1_footprint,
+                            table2_perf_energy)
 
     rows = []
     results = {}
@@ -57,6 +58,12 @@ def main() -> None:
     bench("bench_decode", bench_decode.run,
           lambda r: "sfp8_fused_bytes_vs_bf16="
                     f"{r['points'][0]['fused_bytes_vs_bf16']['sfp8_fused']:.3f}")
+    bench("bench_decode_micro", bench_decode_micro.run,
+          lambda r: "m2e4_unpack_gbps="
+                    f"{r['backends']['ref']['sfp-m2e4']['phases']"
+                    f"['generate']['gbps']:.2f};sfp8_unpack_gbps="
+                    f"{r['backends']['ref']['sfp8']['phases']"
+                    f"['generate']['gbps']:.2f}")
     bench("bench_policies", bench_policies.run,
           lambda r: "qm_overhead="
                     f"{r['policies']['qm']['overhead_vs_none']:.2f}x;"
@@ -75,6 +82,9 @@ def main() -> None:
     # Headline artifact for the packed flash-decode path (HBM bytes/step).
     (OUT.parent / "BENCH_decode.json").write_text(
         json.dumps(results["bench_decode"], indent=2, default=str))
+    # Headline artifact for the pack/unpack roofline microbenchmark.
+    (OUT.parent / "BENCH_decode_micro.json").write_text(
+        json.dumps(results["bench_decode_micro"], indent=2, default=str))
     # Headline artifact for the policy registry (per-step overhead).
     (OUT.parent / "BENCH_policies.json").write_text(
         json.dumps(results["bench_policies"], indent=2, default=str))

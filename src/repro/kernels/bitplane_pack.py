@@ -49,10 +49,11 @@ def _bitplane_quantize_pack_kernel(n_ref, x_ref, plane_ref, base_ref, *,
 
 def _bitplane_unpack_kernel(plane_ref, base_ref, o_ref, *, spec,
                             fields: kref.PackFields):
-    words = kref.plane_unpack_words(plane_ref[...], fields.payload_bits)
-    base = base_ref[...].astype(jnp.int32)
-    out = kref._unpack_words(words, base, fields, spec)
-    o_ref[...] = out
+    # Same decode body as the ref oracle and the flash-decode tiles
+    # (SWAR plane transpose + uint8 field machine where the geometry
+    # allows) — one definition, bit-exact everywhere.
+    o_ref[...] = kref.unpack_planes(plane_ref[...], base_ref[...], fields,
+                                    spec)
 
 
 def _plane_pack_call(x, n, *, fields: kref.PackFields, block_rows: int,

@@ -65,24 +65,14 @@ def _decode_kernel(pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     pos = pos_ref[0, 0]
-    G = (KH * hd) // kref.GROUP
 
-    def unpack(p_ref, b_ref):
-        # Inline decompressor: identical bit machine to sfp_pack's
-        # _unpack_kernel, run on the packed block already resident in VMEM.
-        # Dense geometries first expand their byte-aligned bit planes back
-        # into payload words (bitplane_pack's layout) — still in VMEM.
-        if fields.dense:
-            pl_ = p_ref[0].reshape(block_l, G, fields.group_payload_bytes)
-            p = kref.plane_unpack_words(pl_, fields.payload_bits)
-        else:
-            p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
-        b = b_ref[0].astype(jnp.int32).reshape(block_l, G, 1)
-        x = kref._unpack_words(p, b, fields, spec)
-        return x.reshape(block_l, KH, hd).astype(jnp.float32)
-
-    k = unpack(kp_ref, kb_ref)                  # (block_l, KH, hd)
-    v = unpack(vp_ref, vb_ref)
+    # Softmax-fused expansion: only this grid step's block_l-slot tile is
+    # decompressed (ref.unpack_tile — the one inline-decompressor body both
+    # decode kernels share), right before it feeds the recurrence.
+    k = kref.unpack_tile(kp_ref[0], kb_ref[0], fields, spec, rows=block_l,
+                         KH=KH, hd=hd)          # (block_l, KH, hd)
+    v = kref.unpack_tile(vp_ref[0], vb_ref[0], fields, spec, rows=block_l,
+                         KH=KH, hd=hd)
     q = q_ref[0].astype(jnp.float32)            # (KH, rep, hd)
 
     s = jnp.einsum("hgd,lhd->hgl", q, k) * scale
@@ -204,21 +194,14 @@ def _paged_kernel(tab_ref, pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     pos = pos_ref[b]
-    G = (KH * hd) // kref.GROUP
     L = nb * block_l
 
-    def unpack(p_ref, b_ref):
-        if fields.dense:
-            pl_ = p_ref[0].reshape(block_l, G, fields.group_payload_bytes)
-            p = kref.plane_unpack_words(pl_, fields.payload_bits)
-        else:
-            p = p_ref[0].astype(jnp.int32).reshape(block_l, G, kref.GROUP)
-        bb = b_ref[0].astype(jnp.int32).reshape(block_l, G, 1)
-        x = kref._unpack_words(p, bb, fields, spec)
-        return x.reshape(block_l, KH, hd).astype(jnp.float32)
-
-    k = unpack(kp_ref, kb_ref)
-    v = unpack(vp_ref, vb_ref)
+    # Same softmax-fused per-tile expansion as the contiguous kernel — one
+    # shared decompressor body (ref.unpack_tile) for both grids.
+    k = kref.unpack_tile(kp_ref[0], kb_ref[0], fields, spec, rows=block_l,
+                         KH=KH, hd=hd)
+    v = kref.unpack_tile(vp_ref[0], vb_ref[0], fields, spec, rows=block_l,
+                         KH=KH, hd=hd)
     q = q_ref[0].astype(jnp.float32)
 
     s = jnp.einsum("hgd,lhd->hgl", q, k) * scale

@@ -218,26 +218,171 @@ def sfp_unpack(payload: jax.Array, bases: jax.Array, shape: tuple,
 # ---------------------------------------------------------------------------
 
 
+def _reg_transpose8(rows):
+    """SWAR 8x8 bit-matrix transpose (Hacker's Delight delta-swaps) with
+    the 8 matrix rows in separate uint32 arrays.
+
+    Each uint32 element carries 4 *independent* byte-matrices side by side
+    (byte c of ``rows[p]`` is row p of matrix c); the odd/even bit masks
+    keep every delta-swap byte-local, so one pass transposes 4 matrices at
+    once. This is the whole plane <-> word conversion: 12 masked swaps per
+    32 payload bytes instead of one gather-shift-accumulate per *bit*, so
+    the work scales with plane bytes, not bits x lanes.
+    """
+    x = list(rows)
+    M1 = jnp.uint32(0xAAAAAAAA)
+    M2 = jnp.uint32(0xCCCCCCCC)
+    M4 = jnp.uint32(0xF0F0F0F0)
+    for i in (0, 2, 4, 6):
+        a, b = x[i], x[i + 1]
+        t = (a ^ (b << 1)) & M1
+        x[i], x[i + 1] = a ^ t, b ^ (t >> 1)
+    for i in (0, 1, 4, 5):
+        a, b = x[i], x[i + 2]
+        t = (a ^ (b << 2)) & M2
+        x[i], x[i + 2] = a ^ t, b ^ (t >> 2)
+    for i in (0, 1, 2, 3):
+        a, b = x[i], x[i + 4]
+        t = (a ^ (b << 4)) & M4
+        x[i], x[i + 4] = a ^ t, b ^ (t >> 4)
+    return x
+
+
+def _u32_to_bytes(w: jax.Array) -> jax.Array:
+    """(..., n) uint32 -> (..., 4n) uint8, little-endian."""
+    out = jax.lax.bitcast_convert_type(w[..., None], jnp.uint8)
+    return out.reshape(*w.shape[:-1], w.shape[-1] * 4)
+
+
 def plane_pack_words(words: jax.Array, payload_bits: int) -> jax.Array:
-    """Transpose payload words (..., 128) into bit planes (..., P*16) u8."""
-    w = words.astype(jnp.int32)
-    bits = (w[..., None] >> jnp.arange(payload_bits, dtype=jnp.int32)) & 1
-    b = bits.reshape(*bits.shape[:-2], PLANE_BYTES, 8, payload_bits)
-    byte = jnp.sum(b << jnp.arange(8, dtype=jnp.int32)[None, :, None],
-                   axis=-2)                       # (..., 16, P)
-    byte = jnp.swapaxes(byte, -1, -2)             # (..., P, 16): plane-major
-    return byte.reshape(*byte.shape[:-2],
-                        payload_bits * PLANE_BYTES).astype(jnp.uint8)
+    """Transpose payload words (..., 128) into bit planes (..., P*16) u8.
+
+    Byte-granular: each block of <= 8 planes is one register-SWAR 8x8
+    bit-matrix transpose over the group's 16 byte columns (bit j of plane
+    byte i <-> bit i of word byte j for lanes 8i..8i+7).
+    """
+    P = payload_bits
+    lead = words.shape[:-1]
+    w = words.astype(jnp.int32) & ((1 << P) - 1)
+    planes = []
+    for lo in range(0, P, 8):
+        byt = ((w >> lo) & 0xFF).astype(jnp.uint8)
+        byt = byt.reshape(*lead, PLANE_BYTES, 8)
+        rows = [jax.lax.bitcast_convert_type(
+            byt[..., j].reshape(*lead, 4, 4), jnp.uint32)
+            for j in range(8)]                     # row j = lane-j bytes
+        x = _reg_transpose8(rows)                  # x[p] = plane lo+p bytes
+        n = min(8, P - lo)
+        pl = jnp.stack(x[:n], axis=-2)             # (..., n, 4) u32
+        planes.append(_u32_to_bytes(pl).reshape(*lead, n * PLANE_BYTES))
+    return (jnp.concatenate(planes, axis=-1) if len(planes) > 1
+            else planes[0])
 
 
 def plane_unpack_words(planes: jax.Array, payload_bits: int) -> jax.Array:
-    """Invert plane_pack_words: (..., P*16) uint8 -> (..., 128) int32."""
-    b = planes.astype(jnp.int32).reshape(*planes.shape[:-1], payload_bits,
-                                         PLANE_BYTES)
-    bits = (b[..., None] >> jnp.arange(8, dtype=jnp.int32)) & 1
-    lanes = bits.reshape(*bits.shape[:-3], payload_bits, GROUP)
-    return jnp.sum(
-        lanes << jnp.arange(payload_bits, dtype=jnp.int32)[:, None], axis=-2)
+    """Invert plane_pack_words: (..., P*16) uint8 -> (..., 128) int32.
+
+    Same SWAR transpose as the pack direction (the 8x8 bit transpose is an
+    involution up to row/column naming): byte i of <= 8 stacked planes
+    turns into the payload bytes of lanes 8i..8i+7 in 18 word ops — no
+    per-bit gather, so expansion cost tracks the plane bytes actually read.
+    """
+    bs = _plane_unpack_bytes(planes, payload_bits)
+    w = bs[0].astype(jnp.int32)
+    if len(bs) > 1:
+        w = w | (bs[1].astype(jnp.int32) << 8)
+    return w
+
+
+def _plane_unpack_bytes(planes: jax.Array, payload_bits: int):
+    """SWAR plane expansion to payload *bytes*: (..., P*16) uint8 planes ->
+    [low bytes] or [low, high bytes], each (..., 128) uint8 — the word is
+    never widened here, so sub-byte consumers can stay in uint8. Missing
+    planes of a partial block are zero registers, not padded memory."""
+    P = payload_bits
+    lead = planes.shape[:-1]
+    u = jax.lax.bitcast_convert_type(
+        planes.reshape(*lead, P, 4, 4), jnp.uint32)     # (..., P, 4)
+    out_bytes = []
+    for lo in range(0, P, 8):
+        n = min(8, P - lo)
+        zero = jnp.zeros((*lead, 4), jnp.uint32)
+        rows = [u[..., lo + r, :] if r < n else zero for r in range(8)]
+        y = _reg_transpose8(rows)                  # y[j] byte i = lane 8i+j
+        out = jnp.stack([_u32_to_bytes(yj) for yj in y], axis=-1)
+        out_bytes.append(out.reshape(*lead, GROUP))
+    return out_bytes
+
+
+def _unpack_bytes_u8(p: jax.Array, base: jax.Array, f: PackFields,
+                     spec: containers.FloatSpec) -> jax.Array:
+    """uint8-domain twin of ``_unpack_words`` for sub-byte payloads.
+
+    When the payload fits one byte and the target float's exponent and
+    mantissa each fit a byte (bf16: 8/7), every intermediate — fields,
+    rebuilt exponent, shifted mantissa — stays uint8; nothing widens until
+    ``combine_fields`` builds the 16-bit output word. On the single-core
+    ref backend this shaves the int32 widen pass, the largest single cost
+    of the dense decode path after the SWAR transpose itself.
+    """
+    sign = (p >> jnp.uint8(f.sign_shift)) & jnp.uint8(1)
+    dexp = (p >> jnp.uint8(f.dexp_shift)) & jnp.uint8(f.dexp_max)
+    man_top = p & jnp.uint8((1 << f.man_keep) - 1)
+    if f.man_shift:
+        man_top = (p >> jnp.uint8(f.man_shift)) & jnp.uint8(
+            (1 << f.man_keep) - 1)
+    # max-then-subtract clamps base - dexp at zero without a select; the
+    # flush-to-zero test (dexp == max AND man == 0) is one masked compare
+    # on the raw payload byte.
+    e = jnp.maximum(base.astype(jnp.uint8), dexp) - dexp
+    fl_mask = jnp.uint8((f.dexp_max << f.dexp_shift)
+                        | (((1 << f.man_keep) - 1) << f.man_shift))
+    keep = (p & fl_mask) != jnp.uint8(f.dexp_max << f.dexp_shift)
+    w = ((sign.astype(spec.int_dtype) << spec.sign_shift)
+         | (e.astype(spec.int_dtype) << spec.exp_shift)
+         | (man_top.astype(spec.int_dtype)
+            << (spec.man_bits - f.man_keep)))
+    w = jnp.where(keep, w, jnp.zeros_like(w))
+    return containers.bitcast_to_float(w, spec)
+
+
+def unpack_planes(planes: jax.Array, bases: jax.Array, fields: PackFields,
+                  spec: containers.FloatSpec) -> jax.Array:
+    """Dense plane decode: (..., P*16) planes + broadcastable bases ->
+    (..., 128) floats. One definition for the ref oracles, the Pallas
+    unpack kernel and the flash-decode tiles; picks the uint8 fast path
+    whenever the geometry allows (sub-byte payload, byte-sized float
+    fields), falling back to the int32 word machine otherwise."""
+    if (fields.payload_bits <= 8 and spec.exp_bits <= 8
+            and spec.man_bits <= 8):
+        (p,) = _plane_unpack_bytes(planes, fields.payload_bits)
+        return _unpack_bytes_u8(p, bases, fields, spec)
+    words = plane_unpack_words(planes, fields.payload_bits)
+    return _unpack_words(words, bases.astype(jnp.int32), fields, spec)
+
+
+def unpack_tile(payload: jax.Array, bases: jax.Array, fields: PackFields,
+                spec: containers.FloatSpec, *, rows: int, KH: int,
+                hd: int) -> jax.Array:
+    """Shared per-tile decompressor for the packed decode kernels.
+
+    ``payload`` (rows, nd_payload_cols(KH*hd)) — fixed-lane words or dense
+    bit planes — and ``bases`` (rows, G) expand to (rows, KH, hd) float32.
+    This is the body both flash-decode kernels run on each KV tile inside
+    the online-softmax loop: only the ``rows`` (= block_l) slots being
+    consumed are ever expanded, in VMEM, immediately before the dot —
+    dense geometries go through the SWAR plane transpose first.
+    """
+    G = (KH * hd) // GROUP
+    if fields.dense:
+        x = unpack_planes(
+            payload.reshape(rows, G, fields.group_payload_bytes),
+            bases.reshape(rows, G, 1), fields, spec)
+    else:
+        p = payload.astype(jnp.int32).reshape(rows, G, GROUP)
+        x = _unpack_words(p, bases.astype(jnp.int32).reshape(rows, G, 1),
+                          fields, spec)
+    return x.reshape(rows, KH, hd).astype(jnp.float32)
 
 
 def bitplane_pack(x: jax.Array, fields: PackFields, n=None):
@@ -255,8 +400,7 @@ def bitplane_pack(x: jax.Array, fields: PackFields, n=None):
 def bitplane_unpack(planes: jax.Array, bases: jax.Array, shape: tuple,
                     dtype, fields: PackFields) -> jax.Array:
     spec = containers.spec_for(jnp.dtype(dtype))
-    words = plane_unpack_words(planes, fields.payload_bits)
-    out = _unpack_words(words, bases.astype(jnp.int32), fields, spec)
+    out = unpack_planes(planes, bases, fields, spec)
     n = 1
     for s in shape:
         n *= s
@@ -286,9 +430,7 @@ def bitplane_unpack_nd(planes: jax.Array, bases: jax.Array, dtype,
     spec = containers.spec_for(jnp.dtype(dtype))
     G = bases.shape[-1]
     p = planes.reshape(*planes.shape[:-1], G, fields.group_payload_bytes)
-    words = plane_unpack_words(p, fields.payload_bits)
-    out = _unpack_words(words, bases.astype(jnp.int32)[..., None], fields,
-                        spec)
+    out = unpack_planes(p, bases[..., None], fields, spec)
     return out.reshape(*planes.shape[:-1], G * GROUP)
 
 
@@ -432,14 +574,11 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
         bl -= 1
 
     def unp(payload, bases):
-        if fields.dense:
-            pl = payload.reshape(B, L, G, fields.group_payload_bytes)
-            p = plane_unpack_words(pl, fields.payload_bits)
-        else:
-            p = payload.reshape(B, L, G, GROUP).astype(jnp.int32)
-        b = bases.reshape(B, L, G, 1).astype(jnp.int32)
-        x = _unpack_words(p, b, fields, spec).reshape(B, L, KH, hd)
-        return x.astype(jnp.float32)
+        # Same tile decompressor the kernels run (rows = every slot here:
+        # the oracle expands the whole cache up front).
+        x = unpack_tile(payload.reshape(B * L, -1), bases.reshape(B * L, G),
+                        fields, spec, rows=B * L, KH=KH, hd=hd)
+        return x.reshape(B, L, KH, hd)
 
     k = unp(k_payload, k_bases)
     v = unp(v_payload, v_bases)

@@ -230,6 +230,7 @@ class PagedEngine:
         self.mem = self._init_mem()
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+        self._bursts: Dict[int, Any] = {}  # K -> compiled scan loop
         self.decode_steps = 0
 
     # -- device memory ---------------------------------------------------
@@ -382,3 +383,54 @@ class PagedEngine:
             jnp.asarray(pos, jnp.int32))
         self.decode_steps += 1
         return np.asarray(nxt)
+
+    def _make_burst(self, K: int):
+        """Compiled K-step decode burst: one ``lax.scan`` executable.
+
+        Block tables are fixed for the whole burst (the scheduler
+        pre-allocates every running slot to its burst horizon), so the
+        scan carries only (token, mem) and the per-step host round-trip —
+        table upload, dispatch, token download — is paid once per K
+        tokens instead of once per token. The pool memory is donated, so
+        XLA updates the packed blocks in place across all K steps.
+        """
+
+        def burst(params, mem, tables, toks, pos):
+            def step(carry, i):
+                tok, mem = carry
+                logits, mem = self.model.decode_step_paged(
+                    params, mem, tok, pos + i, tables)
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                return (nxt[:, None], mem), nxt
+
+            (_, mem), out = jax.lax.scan(
+                step, (toks, mem), jnp.arange(K, dtype=jnp.int32))
+            return out, mem  # out: (K, max_slots)
+
+        return jax.jit(burst, donate_argnums=(1,))
+
+    def decode_burst(self, toks: np.ndarray, pos: np.ndarray,
+                     burst: int) -> np.ndarray:
+        """``burst`` greedy decode steps over every slot in one dispatch.
+
+        Each slot chains its own argmax token across the burst; positions
+        advance ``pos + i``. Every running slot must already own blocks
+        covering ``pos + burst`` (and ``pos + burst <= max_len``) — the
+        scheduler guarantees this before calling. Returns the
+        (burst, max_slots) int32 token buffer; the caller replays
+        per-token streaming/finish bookkeeping from it. ``burst == 1``
+        reuses the plain compiled step rather than a scan of one.
+        """
+        K = int(burst)
+        assert K >= 1, K
+        if K == 1:
+            return self.decode(toks, pos)[None]
+        fn = self._bursts.get(K)
+        if fn is None:
+            fn = self._bursts[K] = self._make_burst(K)
+        tables = jnp.asarray(self.pool.tables)
+        out, self.mem = fn(self.params, self.mem, tables,
+                           jnp.asarray(toks, jnp.int32)[:, None],
+                           jnp.asarray(pos, jnp.int32))
+        self.decode_steps += K
+        return np.asarray(out)

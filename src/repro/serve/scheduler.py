@@ -154,66 +154,107 @@ class Scheduler:
             if emitted[-1][2]:  # max_new == 1 (or budget exhausted)
                 self._finish(st)
 
-    def _ensure_blocks(self) -> None:
-        """Every running slot needs its next position's block before the
-        batched step; when the pool runs dry the *youngest* running
-        request (possibly the requester itself) is preempted — oldest-
-        first priority, so head-of-line requests always drain."""
+    def _ensure_blocks(self, horizon: int = 1) -> None:
+        """Every running slot needs blocks covering its next ``horizon``
+        positions before the batched step (the whole burst runs against
+        one fixed block table); when the pool runs dry the *youngest*
+        running request (possibly the requester itself) is preempted —
+        oldest-first priority, so head-of-line requests always drain."""
         pool = self.engine.pool
         for slot in sorted(self.running,
                            key=lambda s: self.running[s].admit_seq):
             st = self.running.get(slot)
             if st is None:  # preempted earlier this round
                 continue
-            while not pool.alloc_upto(slot, st.n_ctx + 1):
+            while not pool.alloc_upto(slot, st.n_ctx + horizon):
                 victim = max(self.running.values(),
                              key=lambda r: r.admit_seq)
                 if victim.slot == slot and len(self.running) == 1:
                     raise RuntimeError(
                         f"pool of {pool.num_blocks} blocks cannot hold one "
-                        f"request of {st.n_ctx + 1} tokens")
+                        f"request of {st.n_ctx + horizon} tokens")
                 self._preempt(victim)
                 if victim.slot == slot:
                     break  # requester preempted itself; skip its step
 
+    def _burst_len(self, burst: int) -> int:
+        """Clamp the requested burst to what this round can actually use.
+
+        Hard cap: no running slot may step past ``max_len`` (its blocks
+        and positions end there). Efficiency cap: once every running slot
+        has hit its token budget there is nothing left to emit, so the
+        burst never outruns the *largest* remaining budget — slots that
+        finish mid-burst keep decoding harmlessly (their extra tokens are
+        computed but never replayed), which is what keeps the executable
+        shape fixed."""
+        cap = min(self.engine.max_len - st.n_ctx
+                  for st in self.running.values())
+        need = max(st.req.max_new - len(st.emitted)
+                   for st in self.running.values())
+        return max(1, min(int(burst), cap, need))
+
     # -- the loop --------------------------------------------------------
 
-    def step(self, now: Optional[float] = None
+    def step(self, now: Optional[float] = None, burst: int = 1
              ) -> List[Tuple[Any, int, bool]]:
-        """Admit arrived requests, then advance every running slot one
-        token. Returns the (uid, token, done) tuples emitted this step."""
+        """Admit arrived requests, then advance every running slot by up
+        to ``burst`` tokens in one jitted dispatch. Admission, slot
+        recycling and preemption happen only at burst boundaries (here,
+        before the device call); per-token streaming callbacks are
+        replayed in step order from the burst's (K, max_slots) token
+        buffer, so a request that hits its budget mid-burst still sees
+        ``done`` on exactly its last token. Returns the (uid, token,
+        done) tuples emitted this step."""
         emitted: List[Tuple[Any, int, bool]] = []
         self._admit(now, emitted)
         if not self.running:
             return emitted
-        self._ensure_blocks()
+        K = self._burst_len(burst)
+        try:
+            self._ensure_blocks(K)
+        except RuntimeError:
+            if K == 1:
+                raise
+            # Pool too tight for the whole burst horizon even after
+            # evicting everyone else: degrade to single-step pacing
+            # rather than refusing a request burst=1 could serve.
+            K = 1
+            self._ensure_blocks(K)
+        if not self.running:
+            return emitted  # everyone preempted back to the queue
 
         toks = np.zeros(self.engine.max_slots, np.int32)
         pos = np.zeros(self.engine.max_slots, np.int32)
         for st in self.running.values():
             toks[st.slot] = st.last_tok
             pos[st.slot] = st.n_ctx  # the input token's absolute position
-        nxt = self.engine.decode(toks, pos)
-        self.stats.decode_steps += 1
+        nxt = self.engine.decode_burst(toks, pos, K)  # (K, max_slots)
+        self.stats.decode_steps += K
 
-        for st in list(self.running.values()):
-            st.n_ctx += 1
-            _, _, done = res = self._emit(st, int(nxt[st.slot]))
-            emitted.append(res)
-            if done:
-                self._finish(st)
+        live = list(self.running.values())
+        for i in range(K):
+            for st in live:
+                if self.running.get(st.slot) is not st:
+                    continue  # finished earlier in this burst
+                st.n_ctx += 1
+                _, _, done = res = self._emit(st, int(nxt[i, st.slot]))
+                emitted.append(res)
+                if done:
+                    self._finish(st)
         return emitted
 
-    def run(self, requests=None, now_fn=None, max_steps: int = 100_000
-            ) -> Dict[Any, np.ndarray]:
+    def run(self, requests=None, now_fn=None, max_steps: int = 100_000,
+            burst: int = 1) -> Dict[Any, np.ndarray]:
         """Drive until every submitted request finishes. ``now_fn`` feeds
         the admission clock (trace simulation); None admits on submit
-        order only."""
+        order only. ``burst`` > 1 decodes K tokens per scheduler step
+        (one scan dispatch), touching the host only between bursts."""
         if requests:
             for r in requests:
                 self.submit(r)
         for _ in range(max_steps):
             if self.idle:
                 return dict(self.finished)
-            self.step(now=None if now_fn is None else now_fn())
+            self.step(now=None if now_fn is None else now_fn(),
+                      burst=burst)
         raise RuntimeError(f"scheduler did not drain in {max_steps} steps")

@@ -308,6 +308,138 @@ def test_generate_memoizes_compiled_functions():
 
 
 # ---------------------------------------------------------------------------
+# Decode bursts
+# ---------------------------------------------------------------------------
+
+
+def _burst_stream_run(model, params, reqs, burst, stream=None, **eng_kw):
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, **eng_kw)
+        sched = Scheduler(
+            eng, on_token=None if stream is None else
+            (lambda uid, tok, done: stream.append((uid, tok, done))))
+        out = sched.run(reqs, burst=burst)
+    finally:
+        ops.force_backend(None)
+    return eng, sched, out
+
+
+def test_burst_token_streams_identical_to_single_step():
+    """K-token bursts are a pacing change, not a semantic one: per-uid
+    token streams (values, order, done flags) must equal burst=1 exactly,
+    including requests that hit their budget mid-burst."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(8)
+    # max_new 2/5/9 against burst=4: finishes land mid-burst, at a burst
+    # boundary, and across two bursts.
+    sizes, news = [4, 6, 5], [2, 5, 9]
+
+    def reqs():
+        rng2 = np.random.RandomState(8)
+        return [Request(uid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(
+                    zip(_prompts(rng2, cfg, sizes), news))]
+
+    stream1, streamK = [], []
+    _, s1, out1 = _burst_stream_run(model, params, reqs(), 1, stream1,
+                                    max_slots=3, max_len=128)
+    engK, sK, outK = _burst_stream_run(model, params, reqs(), 4, streamK,
+                                       max_slots=3, max_len=128)
+    assert set(out1) == set(outK)
+    for uid in out1:
+        np.testing.assert_array_equal(out1[uid], outK[uid])
+
+    def per_uid(stream):
+        per = {}
+        for uid, tok, done in stream:
+            per.setdefault(uid, []).append((tok, done))
+        return per
+
+    assert per_uid(stream1) == per_uid(streamK)
+    # Same number of jitted decode steps in total — bursts only chunk
+    # them (max remaining budget of 9 after the admission token -> 8
+    # decode rounds either way) — and the engine agrees with the
+    # scheduler's accounting.
+    assert s1.stats.decode_steps == sK.stats.decode_steps == 8
+    assert engK.decode_steps == sK.stats.decode_steps
+    assert sK.stats.emitted_tokens == sum(news)
+
+
+def test_burst_clamps_to_budget_and_capacity():
+    """A burst never outruns max_len (hard) or the largest remaining
+    token budget (efficiency): with max_new=3 everywhere, burst=32 must
+    execute exactly the 2 decode steps burst=1 would."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(9)
+    reqs = [Request(uid=i, prompt=p, max_new=3)
+            for i, p in enumerate(_prompts(rng, cfg, [4, 7]))]
+    eng, sched, out = _burst_stream_run(model, params, reqs, 32,
+                                        max_slots=2, max_len=128)
+    assert all(len(out[i]) == 3 for i in (0, 1))
+    assert sched.stats.decode_steps == 2
+    assert eng.decode_steps == 2
+    # near the max_len wall the hard clamp takes over: a prompt of 126
+    # in a 128-budget engine leaves exactly 2 positions.
+    rng = np.random.RandomState(9)
+    req = [Request(uid=0, prompt=_prompts(rng, cfg, [126])[0], max_new=8)]
+    eng2, sched2, out2 = _burst_stream_run(model, params, req, 32,
+                                           max_slots=1, max_len=128)
+    assert len(out2[0]) == 2  # admission token + 2 steps, capped by len
+    assert sched2.stats.decode_steps == 2
+
+
+def test_burst_defers_admission_and_preemption_to_boundaries():
+    """Preemption happens only while setting up a burst (never inside
+    one), and a slot freed mid-burst is refilled at the next boundary —
+    bursts still drain everything with streams equal to burst=1."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+
+    def reqs():
+        rng = np.random.RandomState(10)
+        return [Request(uid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(
+                    zip(_prompts(rng, cfg, [126, 126, 4]), [6, 6, 4]))]
+
+    # 3-block pool, two block-crossing requests: the younger is evicted
+    # at a burst boundary and recovers, exactly as with burst=1.
+    _, s1, out1 = _burst_stream_run(model, params, reqs(), 1,
+                                    max_slots=2, max_len=256, num_blocks=3)
+    _, sK, outK = _burst_stream_run(model, params, reqs(), 4,
+                                    max_slots=2, max_len=256, num_blocks=3)
+    assert sK.stats.preemptions >= 1
+    assert set(out1) == set(outK)
+    for uid in out1:
+        np.testing.assert_array_equal(out1[uid], outK[uid])
+
+
+def test_burst_matches_generate_interpret():
+    """Bit-exact end to end: burst-decoded tokens over the fused
+    interpret kernels equal per-request contiguous generate."""
+    cfg, model = _model("mistral-large-123b", "sfp-m2e4")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(11)
+    reqs = [Request(uid=i, prompt=p, max_new=n)
+            for i, (p, n) in enumerate(
+                zip(_prompts(rng, cfg, [5, 9]), [4, 6]))]
+    ops.force_backend("interpret")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128)
+        out = Scheduler(eng).run(reqs, burst=3)
+        for r in reqs:
+            want = engine.generate(model, params,
+                                   jnp.asarray(r.prompt)[None],
+                                   max_new=r.max_new, max_len=eng.max_len)
+            np.testing.assert_array_equal(out[r.uid],
+                                          np.asarray(want.tokens[0]))
+    finally:
+        ops.force_backend(None)
+
+
+# ---------------------------------------------------------------------------
 # Policy-aware precision
 # ---------------------------------------------------------------------------
 

@@ -154,3 +154,47 @@ def test_bitchop_never_leaves_bounds(seed):
         stt = bitchop.update(stt, float(3 + rng.randn()), cfg,
                              lr_changed=(i % 17 == 0))
         assert 0 <= int(stt.n) <= 7
+
+
+# The loop-based unpack oracle, shared the same way: both directions of
+# the byte/bit order asserted against one independent definition.
+from test_dense_codecs import py_plane_unpack as _py_plane_unpack  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 16), st.integers(1, 5),
+       st.integers(0, 2 ** 31 - 1), st.integers(0, 127))
+def test_plane_expansion_all_widths_vs_python_oracle(payload, rows, seed,
+                                                     tail):
+    """The SWAR plane transpose (pack and the byte-granular expansion)
+    is bit-exact against the loop oracle for every payload width 3..16,
+    including a tail-padded final row (only ``128 - tail`` live lanes —
+    the ragged end of a cache whose length is not a lane multiple)."""
+    rng = np.random.RandomState(seed)
+    words = rng.randint(0, 1 << payload, size=(rows, 128)).astype(np.int32)
+    if tail:
+        words[-1, 128 - tail:] = 0
+    planes = np.asarray(ref.plane_pack_words(jnp.asarray(words), payload))
+    np.testing.assert_array_equal(planes, _py_planes(words, payload))
+    back = np.asarray(ref.plane_unpack_words(jnp.asarray(planes), payload))
+    np.testing.assert_array_equal(back, words)
+    np.testing.assert_array_equal(_py_plane_unpack(planes, payload), words)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 16), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_plane_unpack_bijective_on_trash_blocks(payload, rows, seed):
+    """Arbitrary garbage plane bytes (what the pool's trash block holds)
+    decode to in-range payload words, match the loop oracle, and
+    re-encode to the identical bytes — expansion and packing are inverse
+    bijections on the full byte space, so trash-backed reads can never
+    fabricate out-of-range state."""
+    rng = np.random.RandomState(seed)
+    planes = rng.randint(0, 256,
+                         size=(rows, payload * 16)).astype(np.uint8)
+    words = np.asarray(ref.plane_unpack_words(jnp.asarray(planes),
+                                              payload))
+    assert (words >= 0).all() and (words < (1 << payload)).all()
+    np.testing.assert_array_equal(words, _py_plane_unpack(planes, payload))
+    again = np.asarray(ref.plane_pack_words(jnp.asarray(words), payload))
+    np.testing.assert_array_equal(again, planes)
