@@ -205,6 +205,138 @@ def run(quick: bool = False, bursts=BURSTS) -> dict:
     }
 
 
+def run_degraded(quick: bool = False) -> dict:
+    """Degraded-mode section: fault-tolerant serving under an arrival
+    flood with seeded bit-flip injection.
+
+    Three scenarios on the same virtual-clock workload (waved flood,
+    bounded queue, per-request deadlines):
+
+      * ``unflooded``       — spread arrivals, no faults: the tok/s bar.
+      * ``flood``           — thundering-herd waves, seeded bit flips,
+                              pressure controller OFF (wide-geometry
+                              admissions only): the shed baseline.
+      * ``flood_degraded``  — same flood + flips with the precision-
+                              downshift controller ON: new admissions
+                              narrow to DEGRADED and are priced at the
+                              narrower per-block bytes, so the same byte
+                              budget runs more concurrent requests.
+
+    Acceptance (asserted here): the controller sheds strictly fewer
+    requests than the controller-off flood, and its paged tok/s stays
+    within 10% of the unflooded run.
+    """
+    import jax
+
+    from repro import configs
+    from repro.configs.base import reduced
+    from repro.kernels import ops
+    from repro.models.model import DecoderModel
+    from repro.serve import engine, faults, precision
+    from repro.serve.scheduler import Request, Scheduler
+
+    WIDE, DEGRADED = "sfp-m3e5", "sfp-m1e2"
+    N, WAVE, WAVE_GAP = (12, 4, 8.0) if quick else (18, 6, 10.0)
+    PROMPT, NEW = 100, 20
+    MAX_PENDING, TTL = 6, 60.0
+    NUM_BLOCKS, SLOTS = 4, 8
+
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="bfloat16")
+    model = DecoderModel(cfg, kv_container=WIDE)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    prompts = rng.randint(0, cfg.vocab, size=(N, PROMPT)).astype(np.int32)
+
+    def reqs_for(flood: bool):
+        out = []
+        for i in range(N):
+            t = (float(i // WAVE) * WAVE_GAP if flood
+                 else float(i) * 3.0)  # spread: one every 3 virtual s
+            out.append(Request(uid=i, prompt=prompts[i], max_new=NEW,
+                               arrival=t, deadline=t + TTL))
+        return out
+
+    def scenario(eng, flood: bool, pressure, p_flip: float):
+        def one_run():
+            clock = {"t": 0.0}
+
+            def now():
+                clock["t"] += 1.0
+                return clock["t"]
+
+            hook = (faults.FaultInjector(eng, seed=11, p_flip=p_flip)
+                    if p_flip else None)
+            ttft = {}
+            sched = Scheduler(
+                eng, on_token=lambda uid, tok, done:
+                ttft.setdefault(uid, sched.stats.decode_steps),
+                max_pending=MAX_PENDING, pressure=pressure)
+            t0 = time.perf_counter()
+            sched.run(reqs_for(flood), now_fn=now, fault_hook=hook)
+            dt = time.perf_counter() - t0
+            if hook:
+                hook.detach()
+            sched.scrub_quarantined()  # restore the pool for the next run
+            if pressure is not None:
+                pressure.degraded = False
+            s = sched.stats
+            return {
+                "tok_per_s": s.emitted_tokens / max(dt, 1e-9),
+                "wall_s": round(dt, 3),
+                "emitted_tokens": s.emitted_tokens,
+                "mean_ttft_steps": (round(float(np.mean(
+                    list(ttft.values()))), 2) if ttft else None),
+                "finished_ok": s.finished,
+                "shed_pct": round(100.0 * s.shed / N, 1),
+                "deadline_miss_pct": round(
+                    100.0 * s.deadline_misses / N, 1),
+                "recoveries": s.recoveries,
+                "corrupt_blocks": s.corrupt_blocks,
+                "downshifted": s.downshifted,
+                "preemptions": s.preemptions,
+            }
+
+        one_run()  # compile + warm caches
+        return one_run()
+
+    ops.force_backend("ref")
+    try:
+        eng_off = engine.PagedEngine(model, params, max_slots=SLOTS,
+                                     max_len=256, num_blocks=NUM_BLOCKS)
+        unflooded = scenario(eng_off, flood=False, pressure=None,
+                             p_flip=0.0)
+        flood_off = scenario(eng_off, flood=True, pressure=None,
+                             p_flip=0.05)
+        eng_on = engine.PagedEngine(model, params, max_slots=SLOTS,
+                                    max_len=256, num_blocks=NUM_BLOCKS,
+                                    degraded_container=DEGRADED)
+        flood_on = scenario(
+            eng_on, flood=True,
+            pressure=precision.PressureController(low=0.6, high=0.85),
+            p_flip=0.05)
+    finally:
+        ops.force_backend(None)
+
+    assert flood_on["shed_pct"] < flood_off["shed_pct"], (
+        f"pressure controller must shed strictly less than the "
+        f"controller-off flood: {flood_on['shed_pct']}% vs "
+        f"{flood_off['shed_pct']}%")
+    assert flood_on["tok_per_s"] >= 0.9 * unflooded["tok_per_s"], (
+        f"degraded-mode tok/s fell >10% below the unflooded run: "
+        f"{flood_on['tok_per_s']:.1f} vs {unflooded['tok_per_s']:.1f}")
+    return {
+        "container": WIDE, "degraded_container": DEGRADED,
+        "requests": N, "wave": WAVE, "wave_gap_s": WAVE_GAP,
+        "max_pending": MAX_PENDING, "deadline_ttl_s": TTL,
+        "num_blocks": NUM_BLOCKS, "max_slots": SLOTS,
+        "p_flip": 0.05,
+        "unflooded": unflooded,
+        "flood": flood_off,
+        "flood_degraded": flood_on,
+    }
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -213,10 +345,15 @@ def main(argv=None) -> None:
     ap.add_argument("--burst", type=str, default=None,
                     help="comma list of decode-burst lengths to sweep "
                          f"(default {','.join(map(str, BURSTS))})")
+    ap.add_argument("--degraded", action="store_true",
+                    help="add the fault-tolerance degraded-mode section "
+                    "(flood + injected faults + pressure controller)")
     args = ap.parse_args(argv)
     bursts = (tuple(int(k) for k in args.burst.split(","))
               if args.burst else BURSTS)
     r = run(quick=args.quick, bursts=bursts)
+    if args.degraded:
+        r["degraded_mode"] = run_degraded(quick=args.quick)
     OUT.write_text(json.dumps(r, indent=2))
     print(json.dumps(r, indent=2))
     print(f"wrote {OUT}")

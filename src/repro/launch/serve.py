@@ -19,6 +19,18 @@ Policy-aware precision (paper §IV-A4 deployment mode): point
 ``--policy-ckpt`` at a training run's checkpoint directory and the KV
 container geometry is derived from the learned PrecisionDecision stamped
 in its manifest (see serve/precision.py) — overriding --kv-container.
+
+Fault-tolerant operation (see README "Operating the server"): deadlines
+(--deadline as a TTL after arrival), a bounded queue with load shedding
+(--max-pending), chaos injection (--inject-flip-p / --inject-alloc-p,
+seeded), the preemption-storm guard (--storm-guard), and the
+precision-downshift pressure controller (--degraded-container +
+--pressure-low/--pressure-high). An arrival flood — every request landing
+at once — is just --flood:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --preset tiny \
+      --trace --flood --requests 32 --kv-container sfp-m3e5 --num-blocks 8 \
+      --max-pending 8 --deadline 20 --degraded-container sfp-m1e2
 """
 from __future__ import annotations
 
@@ -33,7 +45,7 @@ import numpy as np
 from repro import configs
 from repro.configs.base import reduced
 from repro.models.model import DecoderModel
-from repro.serve import engine, precision
+from repro.serve import engine, faults, precision
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -70,21 +82,26 @@ def run_batch(args) -> None:
 
 def make_trace(args, vocab: int):
     """Poisson arrivals (exponential gaps at --arrival-rate req/s) with
-    prompt/output lengths drawn uniformly from the given ranges."""
+    prompt/output lengths drawn uniformly from the given ranges.
+    ``--flood`` collapses every arrival to t=0 (a thundering herd);
+    ``--deadline`` stamps each request with arrival + TTL."""
     rng = np.random.RandomState(args.seed + 2)
     lo_p, hi_p = args.prompt_len_min, args.prompt_len_max
     lo_n, hi_n = args.max_new_min, args.max_new_max
     t = 0.0
     reqs = []
     for i in range(args.requests):
-        t += rng.exponential(1.0 / args.arrival_rate)
+        if not getattr(args, "flood", False):
+            t += rng.exponential(1.0 / args.arrival_rate)
         reqs.append(Request(
             uid=i,
             prompt=rng.randint(0, vocab,
                                size=rng.randint(lo_p, hi_p + 1)
                                ).astype(np.int32),
             max_new=int(rng.randint(lo_n, hi_n + 1)),
-            arrival=t))
+            arrival=t,
+            deadline=(t + args.deadline if getattr(args, "deadline", None)
+                      else None)))
     return reqs
 
 
@@ -95,13 +112,27 @@ def run_trace(args) -> None:
                          "(or --policy-ckpt)")
     eng = engine.PagedEngine(model, params, max_slots=args.max_slots,
                              max_len=args.max_len,
-                             num_blocks=args.num_blocks)
+                             num_blocks=args.num_blocks,
+                             degraded_container=args.degraded_container,
+                             integrity=not args.no_integrity)
     reqs = make_trace(args, cfg.vocab)
     # Time-to-first-token in scheduler steps, per request (streaming
     # callback: fires the step each token is produced).
     ttft = {}
+    pressure = None
+    if args.degraded_container:
+        pressure = precision.PressureController(low=args.pressure_low,
+                                                high=args.pressure_high)
     sched = Scheduler(eng, on_token=lambda uid, tok, done:
-                      ttft.setdefault(uid, sched.stats.decode_steps))
+                      ttft.setdefault(uid, sched.stats.decode_steps),
+                      max_pending=args.max_pending,
+                      storm_guard=args.storm_guard,
+                      pressure=pressure)
+    hook = None
+    if args.inject_flip_p or args.inject_alloc_p:
+        hook = faults.FaultInjector(eng, seed=args.fault_seed,
+                                    p_flip=args.inject_flip_p,
+                                    p_alloc_fail=args.inject_alloc_p)
 
     # Virtual clock: admission sees arrivals as wall-clock-free step time
     # (one scheduler step advances it by --step-dt), so the same trace
@@ -113,11 +144,12 @@ def run_trace(args) -> None:
         return clock["t"]
 
     t0 = time.time()
-    out = sched.run(reqs, now_fn=now)
+    out = sched.run(reqs, now_fn=now, burst=args.burst, fault_hook=hook)
     dt = time.time() - t0
     total = int(sum(len(v) for v in out.values()))
     s = sched.stats
     pool = eng.pool.stats()
+    n = max(1, len(reqs))
     report = {
         "arch": cfg.name, "container": container,
         "requests": len(reqs), "emitted_tokens": total,
@@ -125,10 +157,22 @@ def run_trace(args) -> None:
         "decode_steps": s.decode_steps,
         "mean_batch_occupancy": round(total / max(s.decode_steps, 1), 2),
         "preemptions": s.preemptions,
-        "mean_ttft_steps": round(float(np.mean(list(ttft.values()))), 2),
+        "mean_ttft_steps": round(float(np.mean(list(ttft.values()))), 2)
+        if ttft else None,
         "pool_blocks": pool.num_blocks, "pool_peak_used": pool.peak_used,
         "block_l": eng.block_l, "max_slots": eng.max_slots,
         "max_len": eng.max_len,
+        # fault-tolerance layer
+        "finished_ok": s.finished,
+        "deadline_miss_pct": round(100.0 * s.deadline_misses / n, 1),
+        "shed_pct": round(100.0 * s.shed / n, 1),
+        "cancelled": s.cancelled, "failed": s.failed,
+        "recoveries": s.recoveries, "corrupt_blocks": s.corrupt_blocks,
+        "nan_guard_trips": s.nan_guard_trips,
+        "alloc_failures": s.alloc_failures,
+        "downshifted": s.downshifted,
+        "quarantined_blocks": pool.quarantined,
+        "injected_faults": hook.counts() if hook else {},
     }
     print(json.dumps(report, indent=2))
 
@@ -168,6 +212,38 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="pool capacity in packed blocks (default: full "
                     "residency for every slot)")
+    ap.add_argument("--burst", type=int, default=1,
+                    help="decode tokens per scheduler step (one scan "
+                    "dispatch)")
+    # fault tolerance / chaos
+    ap.add_argument("--flood", action="store_true",
+                    help="collapse every trace arrival to t=0")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request TTL in virtual seconds after arrival")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bounded admission queue: arrived requests beyond "
+                    "this are explicitly shed")
+    ap.add_argument("--storm-guard", action="store_true",
+                    help="reserve running slots' growth blocks at "
+                    "admission (no preemption thrash)")
+    ap.add_argument("--no-integrity", action="store_true",
+                    help="disable per-block checksum verification")
+    ap.add_argument("--degraded-container", default=None,
+                    help="narrower geometry for pressure-downshifted "
+                    "admissions (enables the pressure controller)")
+    ap.add_argument("--pressure-low", type=float, default=0.25,
+                    help="degrade when free pool bytes fall below this "
+                    "fraction of capacity")
+    ap.add_argument("--pressure-high", type=float, default=0.5,
+                    help="restore once free bytes recover above this "
+                    "fraction")
+    ap.add_argument("--inject-flip-p", type=float, default=0.0,
+                    help="per-step probability of a seeded bit flip in an "
+                    "allocated packed block")
+    ap.add_argument("--inject-alloc-p", type=float, default=0.0,
+                    help="per-step probability of arming one transient "
+                    "admission alloc failure")
+    ap.add_argument("--fault-seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.trace:

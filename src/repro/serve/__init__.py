@@ -1,3 +1,8 @@
 """Serving substrate: prefill/decode engine, (compressed) KV cache, the
-paged packed-KV block pool, the continuous-batching scheduler, and
-policy-aware precision resolution (learned bitlengths -> pool codec)."""
+paged packed-KV block pool, the continuous-batching scheduler,
+policy-aware precision resolution (learned bitlengths -> pool codec),
+and the fault-tolerance layer (deadlines/cancellation, bounded-queue
+load shedding, per-block checksum integrity with quarantine + recompute
+recovery, a preemption-storm guard, precision-downshift graceful
+degradation under memory pressure, and the deterministic FaultInjector
+chaos harness)."""

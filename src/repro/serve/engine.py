@@ -195,7 +195,9 @@ class PagedEngine:
     """
 
     def __init__(self, model: DecoderModel, params, *, max_slots: int = 8,
-                 max_len: int = 256, num_blocks: Optional[int] = None):
+                 max_len: int = 256, num_blocks: Optional[int] = None,
+                 degraded_container: Optional[str] = None,
+                 integrity: bool = True):
         if model.kv_container is None:
             raise ValueError("PagedEngine needs a model with kv_container "
                              "set (the pool stores packed blocks)")
@@ -224,14 +226,53 @@ class PagedEngine:
         self.n_global_layers = sum(k == GLOBAL for k in kinds)
         self.block_bytes = self.n_global_layers * _kvcache.paged_block_bytes(
             cfg, self.block_l, self.container)
-        self.pool = _pool.BlockPool(num_blocks, self.max_slots, self.nmax,
+        # Graceful degradation (serve/precision.PressureController): under
+        # memory pressure the scheduler admits new requests at a *narrower*
+        # dense geometry, priced at that geometry's per-block bytes against
+        # a fixed byte budget. The budget is `num_blocks` worth of blocks
+        # at the configured geometry; the physical arrays over-provision
+        # rows so that cheaper blocks are actually allocatable (fixed
+        # shapes keep the step jittable — the byte accounting models the
+        # HBM the blocks would occupy repacked at their admission width).
+        self.degraded_container = degraded_container
+        if degraded_container is not None:
+            self.degraded_block_bytes = (
+                self.n_global_layers
+                * _kvcache.paged_block_bytes(cfg, self.block_l,
+                                             degraded_container))
+            if self.degraded_block_bytes >= self.block_bytes:
+                raise ValueError(
+                    f"degraded container {degraded_container!r} "
+                    f"({self.degraded_block_bytes} B/block) is not narrower "
+                    f"than {self.container!r} ({self.block_bytes} B/block)")
+            budget_bytes = num_blocks * self.block_bytes
+            phys_blocks = min(-(-budget_bytes // self.degraded_block_bytes),
+                              self.max_slots * self.nmax)
+            phys_blocks = max(phys_blocks, num_blocks)
+            self._requant = jax.jit(self._requant_fn)
+        else:
+            self.degraded_block_bytes = self.block_bytes
+            budget_bytes = None
+            phys_blocks = num_blocks
+            self._requant = None
+        self.pool = _pool.BlockPool(phys_blocks, self.max_slots, self.nmax,
                                     self.block_l,
-                                    block_bytes=self.block_bytes)
+                                    block_bytes=self.block_bytes,
+                                    budget_bytes=budget_bytes)
         self.mem = self._init_mem()
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
         self._bursts: Dict[int, Any] = {}  # K -> compiled scan loop
         self.decode_steps = 0
+        # Block integrity: a cheap per-physical-block checksum over the
+        # packed planes (kvcache.paged_block_checksums summed across the
+        # global layers), recomputed after every legitimate write
+        # (pack/insert) and compared before every gather. The scheduler
+        # drives verify/refresh; mismatches quarantine the block and
+        # recompute the owning request from its prompt.
+        self.integrity = bool(integrity)
+        self._sums_fn = jax.jit(self._block_sums_fn)
+        self.expected_sums = np.zeros(self.pool.num_blocks + 1, np.uint32)
 
     # -- device memory ---------------------------------------------------
 
@@ -276,7 +317,127 @@ class PagedEngine:
                 "pool_live_bytes": float(st.used_bytes),
                 "pool_peak_bytes": float(st.peak_bytes)}
 
+    # -- block integrity -------------------------------------------------
+
+    def _global_entries(self):
+        """(group, key) paths of the paged global-attention layers in mem."""
+        out = [("periods", f"slot{i}")
+               for i, k in enumerate(self.cfg.period) if k == GLOBAL]
+        out += [("rem", f"slot{i}")
+                for i, k in enumerate(self.cfg.remainder) if k == GLOBAL]
+        return out
+
+    def _block_sums_fn(self, mem):
+        """Per-physical-block uint32 checksum summed over global layers."""
+        total = jnp.zeros(self.pool.num_blocks + 1, jnp.uint32)
+        for j, (grp, key) in enumerate(self._global_entries()):
+            total = total + _kvcache.paged_block_checksums(mem[grp][key],
+                                                           salt=j + 1)
+        return total
+
+    def block_checksums(self) -> np.ndarray:
+        """Current checksums of every physical block (trash block = id 0)."""
+        return np.asarray(self._sums_fn(self.mem))
+
+    def verify_blocks(self, ids) -> list:
+        """Return the subset of physical block ids whose packed planes no
+        longer match the checksum recorded at their last legitimate write."""
+        ids = [int(p) for p in ids if p != _pool.TRASH_BLOCK]
+        if not self.integrity or not ids:
+            return []
+        sums = self.block_checksums()
+        return [p for p in ids if sums[p] != self.expected_sums[p]]
+
+    def refresh_checksums(self, ids) -> None:
+        """Record current checksums as expected — call after every
+        legitimate write (prefill scatter / decode step) to the blocks."""
+        ids = [int(p) for p in ids if p != _pool.TRASH_BLOCK]
+        if not self.integrity or not ids:
+            return
+        sums = self.block_checksums()
+        for p in ids:
+            self.expected_sums[p] = sums[p]
+
+    def corrupt_block(self, phys: int, *, layer: int = 0, field: int = 0,
+                      row: int = 0, col: int = 0, bit: int = 0) -> None:
+        """Chaos/test hook: flip one bit in a packed plane of ``phys``.
+
+        Simulates in-memory corruption (the FaultInjector's bit-flip
+        fault). ``layer`` indexes the global layers, ``field`` the PagedKV
+        planes (k_payload, k_bases, v_payload, v_bases).
+        """
+        entries = self._global_entries()
+        grp, key = entries[layer % len(entries)]
+        kv = self.mem[grp][key]
+        field %= len(kv)
+        arr = kv[field]
+        lead = (0,) if arr.ndim == 4 else ()
+        idx = lead + (int(phys), row % arr.shape[-2], col % arr.shape[-1])
+        nbits = 8 * arr.dtype.itemsize
+        uint = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[arr.dtype.itemsize]
+        word = jax.lax.bitcast_convert_type(arr[idx], uint)
+        word = word ^ uint(1 << (bit % nbits))
+        arr = arr.at[idx].set(jax.lax.bitcast_convert_type(word, arr.dtype))
+        self.mem[grp][key] = kv._replace(**{kv._fields[field]: arr})
+
+    def scrub_block(self, phys: int) -> None:
+        """Zero a (quarantined) block's planes and re-record its checksum,
+        making it safe to return to the free list (pool.rehabilitate)."""
+        for grp, key in self._global_entries():
+            kv = self.mem[grp][key]
+            self.mem[grp][key] = type(kv)(*(
+                a.at[(slice(None), int(phys)) if a.ndim == 4
+                     else int(phys)].set(0) for a in kv))
+        self.refresh_checksums([phys])
+
     # -- prefill ---------------------------------------------------------
+
+    def _requant_fn(self, pref_cache):
+        """Narrow-requantize the global-layer KV of a prefill cache.
+
+        Degraded admissions store prompt KV at the *narrower* geometry:
+        each packed tensor is unpacked, round-tripped through the degraded
+        codec, and repacked at the configured container (narrow values are
+        exactly representable in the wider geometry, so the pool arrays
+        keep one fixed shape and the jitted step never re-specializes).
+        Decode-time appends still write at the configured width — the byte
+        accounting (pool rates) is what prices the slot at the narrow
+        geometry.
+        """
+        wide = codecs.get(self.container)
+        narrow = codecs.get(self.degraded_container)
+
+        def one_pt(pt):
+            pay = pt.data["payload"]
+            lead = pay.shape[:-2]
+            B = 1
+            for d in lead:
+                B *= int(d)
+            L, D = pay.shape[-2], pt.shape[-1]
+            flat = codecs.PackedTensor(
+                pt.codec, (B, L, D), pt.dtype,
+                {k: v.reshape((B,) + v.shape[len(lead):])
+                 for k, v in pt.data.items()})
+            vals = narrow.roundtrip(wide.unpack(flat))
+            rp = wide.pack(vals)
+            return codecs.PackedTensor(
+                pt.codec, pt.shape, pt.dtype,
+                {k: rp.data[k].reshape(pt.data[k].shape) for k in pt.data})
+
+        out = {"periods": dict(pref_cache["periods"])}
+        for i, kind in enumerate(self.cfg.period):
+            if kind == GLOBAL:
+                kv = pref_cache["periods"][f"slot{i}"]
+                out["periods"][f"slot{i}"] = kv._replace(k=one_pt(kv.k),
+                                                         v=one_pt(kv.v))
+        if self.cfg.remainder:
+            out["rem"] = dict(pref_cache["rem"])
+            for i, kind in enumerate(self.cfg.remainder):
+                if kind == GLOBAL:
+                    kv = pref_cache["rem"][f"slot{i}"]
+                    out["rem"][f"slot{i}"] = kv._replace(k=one_pt(kv.k),
+                                                         v=one_pt(kv.v))
+        return out
 
     def _scatter_fn(self, mem, pref_cache, slot, ids):
         """Write one request's prefill cache into slot ``slot``.
@@ -337,28 +498,40 @@ class PagedEngine:
                 for i, kind in enumerate(self.cfg.remainder)}
         return out
 
-    def prefill_into_slot(self, slot: int, prompt: np.ndarray) -> int:
+    def prefill_into_slot(self, slot: int, prompt: np.ndarray,
+                          narrow: bool = False) -> int:
         """Prefill one request into ``slot``; returns its first token.
 
         The slot's block table must already cover the prompt
         (``pool.alloc_upto``). Uses the model's packed prefill at the
         engine-wide ``max_len``, so every compile is shared across slots
         and the packed rows are bit-identical to the contiguous serving
-        path at the same budget.
+        path at the same budget. ``narrow=True`` (degraded admission)
+        round-trips the prompt KV through ``degraded_container`` before
+        scattering, so the stored planes carry the narrow geometry's
+        values while keeping the pool's fixed shapes.
         """
         prompt = np.asarray(prompt)
         assert prompt.ndim == 1 and prompt.size >= 1, prompt.shape
         if prompt.size >= self.max_len:
             raise ValueError(f"prompt ({prompt.size}) must leave decode "
                              f"room inside max_len ({self.max_len})")
+        if narrow and self._requant is None:
+            raise ValueError("narrow prefill needs degraded_container")
         prefill = compiled(
             self.model, ("prefill", self.max_len),
             lambda: jax.jit(make_prefill_step(self.model, self.max_len)))
         logits, pref_cache = prefill(self.params, jnp.asarray(prompt)[None],
                                      None)
-        ids = jnp.asarray(self.pool.tables[slot], jnp.int32)
+        if narrow:
+            pref_cache = self._requant(pref_cache)
+        ids_np = self.pool.tables[slot]
         self.mem = self._scatter(self.mem, pref_cache,
-                                 jnp.asarray(slot, jnp.int32), ids)
+                                 jnp.asarray(slot, jnp.int32),
+                                 jnp.asarray(ids_np, jnp.int32))
+        if self.integrity:
+            self.refresh_checksums([p for p in ids_np
+                                    if p != _pool.TRASH_BLOCK])
         return int(jnp.argmax(logits[0, -1]))
 
     # -- decode ----------------------------------------------------------
@@ -367,22 +540,27 @@ class PagedEngine:
         logits, mem = self.model.decode_step_paged(params, mem, toks, pos,
                                                    tables)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return nxt, mem
+        # NaN/Inf logit guard: a per-slot "bad" flag computed inside the
+        # jitted step (free — logits are already on device). The scheduler
+        # quarantines flagged slots instead of streaming garbage.
+        bad = ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        return nxt, bad, mem
 
-    def decode(self, toks: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    def decode(self, toks: np.ndarray, pos: np.ndarray):
         """One batched decode step over every slot.
 
         ``toks``/``pos`` are (max_slots,) host arrays; idle slots carry
         token 0 at position 0 with a trash-block table row, and their
-        returned tokens are meaningless. Returns (max_slots,) next tokens.
+        returned tokens are meaningless. Returns ((max_slots,) next
+        tokens, (max_slots,) bool non-finite-logit flags).
         """
         tables = jnp.asarray(self.pool.tables)
-        nxt, self.mem = self._step(
+        nxt, bad, self.mem = self._step(
             self.params, self.mem, tables,
             jnp.asarray(toks, jnp.int32)[:, None],
             jnp.asarray(pos, jnp.int32))
         self.decode_steps += 1
-        return np.asarray(nxt)
+        return np.asarray(nxt), np.asarray(bad)
 
     def _make_burst(self, K: int):
         """Compiled K-step decode burst: one ``lax.scan`` executable.
@@ -401,36 +579,39 @@ class PagedEngine:
                 logits, mem = self.model.decode_step_paged(
                     params, mem, tok, pos + i, tables)
                 nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-                return (nxt[:, None], mem), nxt
+                bad = ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
+                return (nxt[:, None], mem), (nxt, bad)
 
-            (_, mem), out = jax.lax.scan(
+            (_, mem), (out, bad) = jax.lax.scan(
                 step, (toks, mem), jnp.arange(K, dtype=jnp.int32))
-            return out, mem  # out: (K, max_slots)
+            return out, bad, mem  # out/bad: (K, max_slots)
 
         return jax.jit(burst, donate_argnums=(1,))
 
     def decode_burst(self, toks: np.ndarray, pos: np.ndarray,
-                     burst: int) -> np.ndarray:
+                     burst: int):
         """``burst`` greedy decode steps over every slot in one dispatch.
 
         Each slot chains its own argmax token across the burst; positions
         advance ``pos + i``. Every running slot must already own blocks
         covering ``pos + burst`` (and ``pos + burst <= max_len``) — the
         scheduler guarantees this before calling. Returns the
-        (burst, max_slots) int32 token buffer; the caller replays
-        per-token streaming/finish bookkeeping from it. ``burst == 1``
-        reuses the plain compiled step rather than a scan of one.
+        (burst, max_slots) int32 token buffer plus a matching bool buffer
+        of non-finite-logit flags; the caller replays per-token
+        streaming/finish bookkeeping from them. ``burst == 1`` reuses the
+        plain compiled step rather than a scan of one.
         """
         K = int(burst)
         assert K >= 1, K
         if K == 1:
-            return self.decode(toks, pos)[None]
+            nxt, bad = self.decode(toks, pos)
+            return nxt[None], bad[None]
         fn = self._bursts.get(K)
         if fn is None:
             fn = self._bursts[K] = self._make_burst(K)
         tables = jnp.asarray(self.pool.tables)
-        out, self.mem = fn(self.params, self.mem, tables,
-                           jnp.asarray(toks, jnp.int32)[:, None],
-                           jnp.asarray(pos, jnp.int32))
+        out, bad, self.mem = fn(self.params, self.mem, tables,
+                                jnp.asarray(toks, jnp.int32)[:, None],
+                                jnp.asarray(pos, jnp.int32))
         self.decode_steps += K
-        return np.asarray(out)
+        return np.asarray(out), np.asarray(bad)

@@ -249,6 +249,40 @@ def paged_block_init(cfg: ArchConfig, num_blocks: int, block_l: int,
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
 
 
+def paged_block_checksums(paged: PagedKV, salt: int = 0) -> jax.Array:
+    """Cheap per-physical-block integrity checksum over the packed planes.
+
+    Returns (P,) uint32 — one checksum per physical block, covering K and
+    V payload (words or bit planes) and the shared group bases. The hash
+    is a position-weighted wraparound sum: each flattened element is
+    multiplied by an odd per-position constant (Knuth multiplicative
+    step), so any single bit flip changes the block's sum (odd weight
+    times a power of two is never 0 mod 2^32), and swapped rows/columns
+    do not cancel. ``salt`` decorrelates the K/V/payload/bases streams
+    and the per-layer contributions summed by the engine.
+
+    Arrays may carry a leading layer dim ((n_periods, P, ...)): layer
+    contributions fold into the same per-block sum. This is the
+    "computed at pack/insert, verified on gather" primitive behind the
+    serving engine's block quarantine (see serve/faults.py).
+    """
+
+    def one(arr: jax.Array, s: int) -> jax.Array:
+        a = arr.astype(jnp.uint32)
+        if a.ndim == 4:                      # (layers, P, block_l, cols)
+            a = jnp.moveaxis(a, 1, 0)
+        a = a.reshape(a.shape[0], -1)        # (P, flat)
+        n = a.shape[1]
+        w = (jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761)
+             + jnp.uint32(s & 0xFFFFFFFF)) | jnp.uint32(1)
+        return jnp.sum(a * w[None, :], axis=1, dtype=jnp.uint32)
+
+    total = jnp.uint32(0)
+    for i, arr in enumerate(paged):
+        total = total + one(arr, salt + 0x9E3779B9 * (i + 1))
+    return total
+
+
 def attention_decode_paged(params, h_tok: jax.Array, paged: PagedKV,
                            tables: jax.Array, pos: jax.Array,
                            cfg: ArchConfig, *,

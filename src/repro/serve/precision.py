@@ -18,6 +18,7 @@ it ever loads weights.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional
 
 from repro.checkpoint.manager import CheckpointManager
@@ -45,6 +46,44 @@ def decision_from_extra(extra: Dict[str, Any]) -> Optional[Dict[str, float]]:
                 "exp_bits": float(d["exp_bits"])}
     except (KeyError, TypeError, ValueError):
         return None
+
+
+@dataclasses.dataclass
+class PressureController:
+    """Hysteresis watermark controller for precision-downshift degradation.
+
+    The paper's runtime-adaptable container width gives serving a
+    degradation axis beyond "reject or preempt": when free pool *bytes*
+    drop below the ``low`` watermark, new admissions downshift to the
+    engine's narrower ``degraded_container`` geometry (priced at its
+    smaller per-block byte rate by the pool's dense byte accounting), and
+    restore the configured geometry once the free fraction recovers above
+    ``high``. The low/high gap is hysteresis — without it the controller
+    chatters on the watermark as admissions/frees cross it every step.
+
+    Already-running slots are never touched: the downshift applies to new
+    prompt KV only (requantized at prefill), so degradation is gradual and
+    reversible by attrition.
+    """
+
+    low: float = 0.25    # degrade when free_bytes/capacity < low
+    high: float = 0.50   # restore once free_bytes/capacity >= high
+    degraded: bool = False
+
+    def __post_init__(self):
+        if not (0.0 <= self.low < self.high <= 1.0):
+            raise ValueError(f"watermarks need 0 <= low < high <= 1, "
+                             f"got low={self.low} high={self.high}")
+
+    def update(self, free_bytes: float, capacity_bytes: float) -> bool:
+        """Advance the controller; returns True while degraded."""
+        frac = free_bytes / capacity_bytes if capacity_bytes > 0 else 1.0
+        if self.degraded:
+            if frac >= self.high:
+                self.degraded = False
+        elif frac < self.low:
+            self.degraded = True
+        return self.degraded
 
 
 def container_from_checkpoint(ckpt_dir: str,

@@ -13,19 +13,55 @@ is evicted, its blocks freed, and it re-enters the queue with its
 already-emitted tokens folded into the prompt — emitted tokens are never
 retracted).
 
+On top of that sits the fault-tolerance layer (this PR's subject):
+
+* **Deadlines / cancellation** — a request past its (absolute) deadline
+  or cancelled by the client frees its blocks immediately, whether
+  pending or running; misses/cancellations are counted, and partial
+  output is kept in ``results``.
+* **Bounded queue + load shedding** — with ``max_pending`` set, arrived
+  requests beyond the bound are *explicitly* shed (newest first, never a
+  preempted/recovering request) and recorded as such — no silent drops.
+* **Block integrity + recovery** — before every decode the engine's
+  per-block checksums are verified over all allocated blocks; mismatched
+  blocks are quarantined in the pool and the owning request recovers by
+  recompute-from-prompt (the same emitted-token folding preemption uses,
+  so its stream is token-identical to a fault-free run). A NaN/Inf logit
+  guard catches corruption the checksum cannot see (integrity disabled,
+  or decodable-but-wrong planes): the offending slot's blocks are
+  quarantined and the request recovers the same way. ``max_recoveries``
+  bounds repeated failures; beyond it a request is marked ``failed``
+  rather than looping.
+* **Preemption-storm guard** — ``storm_guard=True`` makes admission
+  reserve the blocks running slots need for their next burst horizon
+  (new work cannot steal a running request's growth and trigger
+  admit→preempt thrash), and ``recompute_budget`` caps re-prefill tokens
+  per step so recompute-preemption can never dominate a step. Oldest
+  requests always finish: eviction stays youngest-first.
+* **Graceful degradation** — with a ``PressureController`` attached
+  (serve/precision.py), admissions while free pool *bytes* sit below the
+  low watermark are downshifted to the engine's narrower
+  ``degraded_container`` geometry: prompt KV is requantized at prefill
+  and the slot's blocks are priced at the narrower per-block byte rate,
+  so pressure admits more work instead of shedding it.
+
 Tokens stream per request: every emitted token fires ``on_token(uid,
 token, done)`` (scheduler-wide and per-request callbacks) the step it is
-produced.
+produced. Terminal bookkeeping (``finished``/``results``/token history)
+is LRU-bounded by ``history_limit`` unless ``retain_history=True`` — a
+long-running server no longer accumulates per-uid token lists forever.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serve.engine import PagedEngine
+from repro.serve.pool import TRASH_BLOCK, blocks_for
 
 OnToken = Callable[[Any, int, bool], None]
 
@@ -34,13 +70,28 @@ OnToken = Callable[[Any, int, bool], None]
 class Request:
     """One generation request. ``arrival`` is in the caller's clock
     (the trace simulator drives a virtual clock); ``on_token`` streams
-    this request's tokens as they are produced."""
+    this request's tokens as they are produced. ``deadline`` (optional)
+    is an *absolute* time in the same clock: past it the request is
+    expired and its blocks freed, wherever it is in the pipeline."""
 
     uid: Any
     prompt: np.ndarray          # (S,) int32 token ids
     max_new: int
     arrival: float = 0.0
     on_token: Optional[OnToken] = None
+    deadline: Optional[float] = None
+    requeued: bool = False      # internal: re-entered the queue after
+    #                             preemption/recovery (never shed)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Terminal record for one request (``Scheduler.results``)."""
+
+    status: str                 # ok | expired | cancelled | shed | failed
+    tokens: np.ndarray          # every token emitted (partial if not ok)
+    container: str              # geometry the final residency stored KV at
+    recoveries: int = 0
 
 
 @dataclasses.dataclass
@@ -50,6 +101,7 @@ class _Running:
     admit_seq: int
     n_ctx: int                  # tokens whose KV is in the pool (prompt')
     last_tok: int               # most recent emitted token (next step's input)
+    narrow: bool = False        # admitted downshifted (degraded geometry)
     emitted: List[int] = dataclasses.field(default_factory=list)
 
 
@@ -60,32 +112,136 @@ class SchedulerStats:
     preemptions: int = 0
     decode_steps: int = 0
     emitted_tokens: int = 0
+    deadline_misses: int = 0    # expired requests (pending or running)
+    shed: int = 0               # load-shed by the bounded queue
+    cancelled: int = 0
+    recoveries: int = 0         # recompute-from-prompt recoveries
+    failed: int = 0             # gave up after max_recoveries
+    corrupt_blocks: int = 0     # checksum mismatches detected
+    nan_guard_trips: int = 0    # non-finite logits caught
+    alloc_failures: int = 0     # alloc_upto refused a granted admission
+    recompute_tokens: int = 0   # prompt tokens re-prefilled after requeue
+    downshifted: int = 0        # admissions at the degraded geometry
 
 
 class Scheduler:
     def __init__(self, engine: PagedEngine,
-                 on_token: Optional[OnToken] = None):
+                 on_token: Optional[OnToken] = None, *,
+                 max_pending: Optional[int] = None,
+                 history_limit: int = 1024,
+                 retain_history: bool = False,
+                 max_recoveries: int = 3,
+                 recompute_budget: Optional[int] = None,
+                 storm_guard: bool = False,
+                 pressure: Optional[Any] = None):
+        if pressure is not None and engine.degraded_container is None:
+            raise ValueError("a PressureController needs an engine built "
+                             "with degraded_container set")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.engine = engine
         self.on_token = on_token
+        self.max_pending = max_pending
+        self.history_limit = int(history_limit)
+        self.retain_history = bool(retain_history)
+        self.max_recoveries = int(max_recoveries)
+        self.recompute_budget = recompute_budget
+        self.storm_guard = bool(storm_guard)
+        self.pressure = pressure
         self.pending: "deque[Request]" = deque()
         self.running: Dict[int, _Running] = {}
         self.free_slots = list(range(engine.max_slots - 1, -1, -1))
         self.finished: Dict[Any, np.ndarray] = {}
+        self.results: Dict[Any, RequestResult] = {}
         self.stats = SchedulerStats()
         self._admit_seq = 0
-        # Full per-uid emission history: survives recompute-preemption
+        # Per-uid emission history: survives recompute-preemption
         # (_Running.emitted only tracks the current residency — its length
-        # is what the requeued max_new is discounted by).
+        # is what the requeued max_new is discounted by). Entries move
+        # into `results` at terminal time, so the live dict only ever
+        # holds in-flight requests.
         self._history: Dict[Any, List[int]] = {}
+        self._recoveries: Dict[Any, int] = {}
+        self._terminal: "deque[Any]" = deque()  # completion order (LRU)
 
     # -- queue -----------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        """Validate and enqueue. Malformed requests raise here, with the
+        field named, instead of failing deep inside prefill; requests the
+        pool can *never* hold raise RuntimeError up front."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size < 1:
+            raise ValueError(f"request {req.uid!r}: prompt must be a "
+                             f"non-empty 1-D token array, got shape "
+                             f"{prompt.shape}")
+        if int(req.max_new) < 1:
+            raise ValueError(f"request {req.uid!r}: max_new must be >= 1, "
+                             f"got {req.max_new}")
+        if req.deadline is not None:
+            d = float(req.deadline)
+            if not math.isfinite(d) or d <= req.arrival:
+                raise ValueError(
+                    f"request {req.uid!r}: absurd deadline {req.deadline} "
+                    f"(must be finite and after arrival {req.arrival})")
+        pool = self.engine.pool
+        n0 = int(prompt.size)
+        if (n0 >= self.engine.max_len
+                or blocks_for(n0 + 1, pool.block_l)
+                > min(pool.num_blocks, pool.max_logical)):
+            raise RuntimeError(
+                f"pool of {pool.num_blocks} blocks / max_len "
+                f"{self.engine.max_len} cannot ever admit a request of "
+                f"{n0} prompt tokens")
         self.pending.append(req)
+
+    def cancel(self, uid: Any) -> bool:
+        """Client cancellation: frees the request's blocks *now* (running)
+        or removes it from the queue (pending). Partial output is kept in
+        ``results``. Returns False for unknown/already-terminal uids."""
+        for st in list(self.running.values()):
+            if st.req.uid == uid:
+                self._retire(st, "cancelled")
+                self.stats.cancelled += 1
+                return True
+        for req in self.pending:
+            if req.uid == uid:
+                self.pending.remove(req)
+                self._record(req.uid, "cancelled")
+                self.stats.cancelled += 1
+                return True
+        return False
 
     @property
     def idle(self) -> bool:
         return not self.pending and not self.running
+
+    # -- terminal bookkeeping --------------------------------------------
+
+    def _record(self, uid: Any, status: str, narrow: bool = False) -> None:
+        toks = np.asarray(self._history.pop(uid, []), np.int32)
+        self.results[uid] = RequestResult(
+            status=status, tokens=toks,
+            container=(self.engine.degraded_container if narrow
+                       else self.engine.container),
+            recoveries=self._recoveries.pop(uid, 0))
+        if status == "ok":
+            self.finished[uid] = toks
+        self._terminal.append(uid)
+        if not self.retain_history:
+            while len(self._terminal) > self.history_limit:
+                old = self._terminal.popleft()
+                self.results.pop(old, None)
+                self.finished.pop(old, None)
+
+    def _retire(self, st: _Running, status: str,
+                quarantine: Tuple[int, ...] = ()) -> None:
+        self.engine.pool.free_slot(st.slot, quarantine=quarantine)
+        del self.running[st.slot]
+        self.free_slots.append(st.slot)
+        self._record(st.req.uid, status, narrow=st.narrow)
+        if status == "ok":
+            self.stats.finished += 1
 
     # -- internals -------------------------------------------------------
 
@@ -102,19 +258,11 @@ class Scheduler:
         return (st.req.uid, int(tok), done)
 
     def _finish(self, st: _Running) -> None:
-        self.engine.pool.free_slot(st.slot)
-        del self.running[st.slot]
-        self.free_slots.append(st.slot)
-        self.finished[st.req.uid] = np.asarray(
-            self._history.get(st.req.uid, st.emitted), np.int32)
-        self.stats.finished += 1
+        self._retire(st, "ok")
 
-    def _preempt(self, st: _Running) -> None:
-        """Recompute-preemption: fold emitted tokens into the prompt and
-        requeue at the front; the victim's blocks and slot free now."""
-        self.engine.pool.free_slot(st.slot)
-        del self.running[st.slot]
-        self.free_slots.append(st.slot)
+    def _requeue(self, st: _Running) -> Request:
+        """Fold emitted tokens into the prompt and put the request back at
+        the queue front (emitted tokens are never retracted)."""
         req = st.req
         if st.emitted:
             req = dataclasses.replace(
@@ -122,34 +270,196 @@ class Scheduler:
                     [np.asarray(req.prompt, np.int32),
                      np.asarray(st.emitted, np.int32)]),
                 max_new=req.max_new - len(st.emitted))
+        req = dataclasses.replace(req, requeued=True)
         self.pending.appendleft(req)
+        return req
+
+    def _preempt(self, st: _Running) -> None:
+        """Recompute-preemption: the victim's blocks and slot free now."""
+        self.engine.pool.free_slot(st.slot)
+        del self.running[st.slot]
+        self.free_slots.append(st.slot)
+        self._requeue(st)
         self.stats.preemptions += 1
+
+    def _recover(self, st: _Running, quarantine: Tuple[int, ...]) -> None:
+        """Recompute-from-prompt recovery after an integrity failure.
+
+        The slot's bad blocks go to quarantine, the rest recycle, and the
+        request re-enters the queue with its emitted tokens folded into
+        the prompt — exactly the preemption mechanics, so the recovered
+        stream is token-identical to a fault-free run. A request that
+        keeps failing (``max_recoveries``) is marked ``failed`` instead of
+        looping forever on a sticky fault.
+        """
+        uid = st.req.uid
+        n = self._recoveries.get(uid, 0) + 1
+        self._recoveries[uid] = n
+        self.stats.recoveries += 1
+        if n > self.max_recoveries:
+            self._retire(st, "failed", quarantine=quarantine)
+            self.stats.failed += 1
+            return
+        self.engine.pool.free_slot(st.slot, quarantine=quarantine)
+        del self.running[st.slot]
+        self.free_slots.append(st.slot)
+        self._requeue(st)
+
+    # -- fault handling (per step, before the device call) ---------------
+
+    def _expire(self, now: Optional[float]) -> None:
+        if now is None:
+            return
+        for st in list(self.running.values()):
+            d = st.req.deadline
+            if d is not None and now >= d:
+                self._retire(st, "expired")
+                self.stats.deadline_misses += 1
+        expired = [r for r in self.pending
+                   if r.deadline is not None and now >= r.deadline]
+        for req in expired:
+            self.pending.remove(req)
+            self._record(req.uid, "expired")
+            self.stats.deadline_misses += 1
+
+    def _shed(self, now: Optional[float]) -> None:
+        """Bounded admission queue: arrived requests beyond ``max_pending``
+        are explicitly shed, newest-arrival first. Requeued (preempted or
+        recovering) requests are never shed — they hold emitted tokens."""
+        if self.max_pending is None:
+            return
+        arrived = sum(1 for r in self.pending
+                      if now is None or r.arrival <= now)
+        excess = arrived - self.max_pending
+        if excess <= 0:
+            return
+        kept: List[Request] = []
+        for req in reversed(self.pending):
+            if (excess > 0 and not req.requeued
+                    and (now is None or req.arrival <= now)):
+                self._record(req.uid, "shed")
+                self.stats.shed += 1
+                excess -= 1
+            else:
+                kept.append(req)
+        self.pending = deque(reversed(kept))
+
+    def _verify_integrity(self) -> None:
+        """Verify every allocated block's checksum before it is gathered;
+        quarantine mismatches and recover their owners by recompute."""
+        eng = self.engine
+        if not eng.integrity or not self.running:
+            return
+        bad = eng.verify_blocks(eng.pool.owned_ids())
+        if not bad:
+            return
+        self.stats.corrupt_blocks += len(bad)
+        by_slot: Dict[int, List[int]] = {}
+        for phys in bad:
+            owner = eng.pool.owner_of(phys)
+            if owner is not None:
+                by_slot.setdefault(owner, []).append(phys)
+        for slot, blocks in by_slot.items():
+            st = self.running.get(slot)
+            if st is not None:
+                self._recover(st, tuple(blocks))
+
+    def scrub_quarantined(self) -> int:
+        """Scrub (zero + re-checksum) every quarantined block on device and
+        return it to the free list; returns how many were rehabilitated."""
+        n = 0
+        for phys in self.engine.pool.quarantined_blocks:
+            self.engine.scrub_block(phys)
+            self.engine.pool.rehabilitate(phys)
+            n += 1
+        return n
+
+    # -- admission -------------------------------------------------------
+
+    def _reserve_blocks(self) -> int:
+        """Blocks the running slots still need to finish their (budget-
+        bounded) generations. The storm guard holds these back from
+        admission: new work can never take blocks a running request will
+        need, so admission→preempt thrash cannot start and the oldest
+        running request always runs to completion."""
+        pool = self.engine.pool
+        need = 0
+        for st in self.running.values():
+            remaining = st.req.max_new - len(st.emitted)
+            end = min(st.n_ctx + remaining, self.engine.max_len)
+            need += max(0, blocks_for(end, pool.block_l)
+                        - pool.slot_blocks(st.slot))
+        return need
 
     def _admit(self, now: Optional[float],
                emitted: List[Tuple[Any, int, bool]]) -> None:
         pool = self.engine.pool
+        reserve = self._reserve_blocks() if self.storm_guard else 0
+        recompute = 0
         while self.pending and self.free_slots:
+            degraded = False
+            if self.pressure is not None:
+                # Re-evaluated per candidate, not per step: each admission
+                # moves the free-byte fraction, and the downshift must
+                # engage mid-loop once a flood pushes it under the low
+                # watermark (hysteresis in the controller stops chatter).
+                ps = pool.stats()
+                degraded = self.pressure.update(ps.free_bytes,
+                                                ps.capacity_bytes)
+            rate = self.engine.degraded_block_bytes if degraded else None
             req = self.pending[0]
             if now is not None and req.arrival > now:
                 break  # FIFO: later arrivals queue behind
             n0 = int(np.asarray(req.prompt).size)
-            if not pool.can_admit(n0):
-                from repro.serve.pool import blocks_for
+            if req.requeued and self.recompute_budget is not None \
+                    and recompute + n0 > self.recompute_budget \
+                    and recompute > 0:
+                break  # this step's re-prefill budget is spent
+            if not pool.can_admit(n0, block_bytes=rate,
+                                  reserve_blocks=reserve):
                 if blocks_for(n0 + 1, pool.block_l) > pool.num_blocks:
                     raise RuntimeError(
                         f"pool of {pool.num_blocks} blocks cannot ever "
                         f"admit a request of {n0} prompt tokens")
                 break  # transient: blocks free up as running requests end
+            if self.storm_guard:
+                # Admit only if the candidate's own worst-case residency
+                # also fits beside the reservation — otherwise it is the
+                # request that would later thrash against the runners.
+                worst = blocks_for(min(n0 + req.max_new,
+                                       self.engine.max_len), pool.block_l)
+                if worst + reserve > pool.free_blocks:
+                    break
             self.pending.popleft()
             slot = self.free_slots.pop()
-            ok = pool.alloc_upto(slot, n0)
-            assert ok, "can_admit guaranteed the blocks"
-            tok0 = self.engine.prefill_into_slot(slot, req.prompt)
+            if not pool.alloc_upto(slot, n0, block_bytes=rate):
+                # can_admit passed but the allocator refused (injected
+                # alloc failure, or a race with the byte budget): requeue
+                # gracefully instead of crashing the loop.
+                self.stats.alloc_failures += 1
+                try:
+                    pool.free_slot(slot)  # clears the empty registration
+                except KeyError:
+                    pass  # injected failure fired before registration
+                self.free_slots.append(slot)
+                self.pending.appendleft(req)
+                break
+            if req.requeued:
+                recompute += n0
+                self.stats.recompute_tokens += n0
+            tok0 = self.engine.prefill_into_slot(slot, req.prompt,
+                                                 narrow=degraded)
             self._admit_seq += 1
             st = _Running(req=req, slot=slot, admit_seq=self._admit_seq,
-                          n_ctx=n0, last_tok=tok0)
+                          n_ctx=n0, last_tok=tok0, narrow=degraded)
             self.running[slot] = st
             self.stats.admitted += 1
+            if self.storm_guard:
+                # The new runner's remaining growth joins the reservation
+                # before the next candidate is considered.
+                reserve += max(0, worst - pool.slot_blocks(slot))
+            if degraded:
+                self.stats.downshifted += 1
             emitted.append(self._emit(st, tok0))
             if emitted[-1][2]:  # max_new == 1 (or budget exhausted)
                 self._finish(st)
@@ -197,8 +507,8 @@ class Scheduler:
 
     def step(self, now: Optional[float] = None, burst: int = 1
              ) -> List[Tuple[Any, int, bool]]:
-        """Admit arrived requests, then advance every running slot by up
-        to ``burst`` tokens in one jitted dispatch. Admission, slot
+        """Expire, shed, verify, admit, then advance every running slot by
+        up to ``burst`` tokens in one jitted dispatch. Admission, slot
         recycling and preemption happen only at burst boundaries (here,
         before the device call); per-token streaming callbacks are
         replayed in step order from the burst's (K, max_slots) token
@@ -206,6 +516,9 @@ class Scheduler:
         ``done`` on exactly its last token. Returns the (uid, token,
         done) tuples emitted this step."""
         emitted: List[Tuple[Any, int, bool]] = []
+        self._expire(now)
+        self._shed(now)
+        self._verify_integrity()
         self._admit(now, emitted)
         if not self.running:
             return emitted
@@ -223,38 +536,66 @@ class Scheduler:
         if not self.running:
             return emitted  # everyone preempted back to the queue
 
+        pool = self.engine.pool
         toks = np.zeros(self.engine.max_slots, np.int32)
         pos = np.zeros(self.engine.max_slots, np.int32)
         for st in self.running.values():
             toks[st.slot] = st.last_tok
             pos[st.slot] = st.n_ctx  # the input token's absolute position
-        nxt = self.engine.decode_burst(toks, pos, K)  # (K, max_slots)
+        # Snapshot the participating blocks now: _finish/_recover clear
+        # table rows during replay, and these blocks' checksums must be
+        # re-recorded after the decode wrote fresh KV into them.
+        written = [int(p) for st in self.running.values()
+                   for p in pool.tables[st.slot] if p != TRASH_BLOCK]
+        slot_blocks = {st.slot: tuple(int(p) for p in pool.tables[st.slot]
+                                      if p != TRASH_BLOCK)
+                       for st in self.running.values()}
+        nxt, bad = self.engine.decode_burst(toks, pos, K)  # (K, max_slots)
         self.stats.decode_steps += K
 
         live = list(self.running.values())
+        poisoned: Dict[int, _Running] = {}
         for i in range(K):
             for st in live:
                 if self.running.get(st.slot) is not st:
                     continue  # finished earlier in this burst
+                if st.slot in poisoned:
+                    continue  # NaN guard tripped earlier in this burst
+                if bad[i, st.slot]:
+                    # Non-finite logits: this token and everything chained
+                    # after it is garbage — stop streaming, recover below.
+                    poisoned[st.slot] = st
+                    continue
                 st.n_ctx += 1
                 _, _, done = res = self._emit(st, int(nxt[i, st.slot]))
                 emitted.append(res)
                 if done:
                     self._finish(st)
+        for st in poisoned.values():
+            if self.running.get(st.slot) is st:
+                self.stats.nan_guard_trips += 1
+                self._recover(st, slot_blocks[st.slot])
+        self.engine.refresh_checksums(written)
         return emitted
 
     def run(self, requests=None, now_fn=None, max_steps: int = 100_000,
-            burst: int = 1) -> Dict[Any, np.ndarray]:
-        """Drive until every submitted request finishes. ``now_fn`` feeds
-        the admission clock (trace simulation); None admits on submit
-        order only. ``burst`` > 1 decodes K tokens per scheduler step
-        (one scan dispatch), touching the host only between bursts."""
+            burst: int = 1, fault_hook=None) -> Dict[Any, np.ndarray]:
+        """Drive until every submitted request reaches a terminal state.
+        ``now_fn`` feeds the admission clock (trace simulation); None
+        admits on submit order only. ``burst`` > 1 decodes K tokens per
+        scheduler step (one scan dispatch), touching the host only
+        between bursts. ``fault_hook(step)`` runs before each step —
+        the serving analogue of the train loop's chaos hook (the
+        FaultInjector plugs in here). Returns uid -> tokens for requests
+        that finished ``ok``; other outcomes are in ``results``."""
         if requests:
             for r in requests:
                 self.submit(r)
-        for _ in range(max_steps):
+        for step_i in range(max_steps):
             if self.idle:
                 return dict(self.finished)
+            if fault_hook is not None:
+                fault_hook(step_i)
             self.step(now=None if now_fn is None else now_fn(),
                       burst=burst)
         raise RuntimeError(f"scheduler did not drain in {max_steps} steps")

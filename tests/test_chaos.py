@@ -1,0 +1,449 @@
+"""Chaos suite for the fault-tolerant serving layer: deterministic fault
+injection (bit flips, poisoned bases, alloc failures) against the paged
+engine + scheduler, plus deadline/cancellation/shedding semantics, the
+preemption-storm guard, and pressure-downshift graceful degradation.
+
+The acceptance bar throughout: every corrupted block is detected and
+quarantined, every recovered request's stream is token-identical to a
+fault-free run, and every terminal outcome is recorded (no silent
+drops). Runs on the ref attention backend — fault handling is host-side
+control flow, so kernel bit-exactness is covered elsewhere
+(test_paged_serve.py)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.kernels import ops
+from repro.models.model import DecoderModel
+from repro.serve import engine, faults, precision
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _model(name, container, **over):
+    cfg = dataclasses.replace(reduced(configs.get(name)), dtype="float32",
+                              **over)
+    return cfg, DecoderModel(cfg, kv_container=container)
+
+
+def _prompts(rng, cfg, sizes):
+    return [rng.randint(0, cfg.vocab, size=s).astype(np.int32)
+            for s in sizes]
+
+
+def _sfp8():
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _reqs(cfg, sizes, news, seed=0, **kw):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i, prompt=p, max_new=n, **kw)
+            for i, (p, n) in enumerate(zip(_prompts(rng, cfg, sizes), news))]
+
+
+# ---------------------------------------------------------------------------
+# Block integrity: checksum detection, quarantine, recompute recovery
+# ---------------------------------------------------------------------------
+
+
+def test_bitflip_detected_quarantined_and_recovered_token_identical():
+    """A seeded bit flip in a packed plane must be caught by the per-block
+    checksum before the next gather, the block quarantined, and the owner
+    recovered by recompute-from-prompt with a stream identical to the
+    fault-free run."""
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128,
+                                 num_blocks=4)
+        base = Scheduler(eng).run(_reqs(cfg, [6, 9], [6, 6]))
+        inj = faults.FaultInjector(eng, seed=3)
+
+        def hook(step):
+            if step == 2:
+                assert inj.flip_random_bit(step) is not None
+
+        sched = Scheduler(eng)
+        out = sched.run(_reqs(cfg, [6, 9], [6, 6]), fault_hook=hook)
+    finally:
+        ops.force_backend(None)
+    s = sched.stats
+    assert s.corrupt_blocks == 1 and s.recoveries == 1
+    assert s.failed == 0 and s.finished == 2
+    # the flipped block itself is out of circulation
+    flipped = inj.events[0].detail["phys"]
+    assert flipped in eng.pool.quarantined_blocks
+    # recovery is invisible in the token streams
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    assert any(r.recoveries == 1 for r in sched.results.values())
+    eng.pool.verify_invariants()
+    # scrubbing rehabilitates the block: pool back to full capacity
+    assert sched.scrub_quarantined() == 1
+    assert eng.pool.stats().quarantined == 0
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+    eng.pool.verify_invariants()
+
+
+def test_nan_guard_catches_corruption_without_checksums():
+    """With integrity checksums off, poisoned group bases decompress to
+    non-finite values; the NaN/Inf logit guard must quarantine the slot's
+    blocks and recover the request token-identically."""
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128,
+                                 num_blocks=4, integrity=False)
+        base = Scheduler(eng).run(_reqs(cfg, [6, 9], [6, 6]))
+        inj = faults.FaultInjector(eng, seed=0)
+
+        def hook(step):
+            if step == 2:
+                inj.poison_block_bases(eng.pool.owned_ids()[0], step=step)
+
+        sched = Scheduler(eng)
+        out = sched.run(_reqs(cfg, [6, 9], [6, 6]), fault_hook=hook)
+    finally:
+        ops.force_backend(None)
+    s = sched.stats
+    assert s.corrupt_blocks == 0        # checksums are off
+    assert s.nan_guard_trips == 1 and s.recoveries == 1
+    assert s.failed == 0 and s.finished == 2
+    assert len(eng.pool.quarantined_blocks) >= 1
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    eng.pool.verify_invariants()
+    assert sched.scrub_quarantined() >= 1
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_sticky_fault_fails_request_after_max_recoveries():
+    """A fault that recurs on every residency must not livelock: past
+    ``max_recoveries`` the request is marked failed and the loop drains."""
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=128,
+                                 num_blocks=4)
+        inj = faults.FaultInjector(eng, seed=1)
+
+        def hook(step):
+            if eng.pool.owned_ids():
+                inj.flip_random_bit(step)  # corrupt every residency
+
+        sched = Scheduler(eng, max_recoveries=1)
+        out = sched.run(_reqs(cfg, [6], [6]), fault_hook=hook)
+    finally:
+        ops.force_backend(None)
+    assert out == {}
+    assert sched.results[0].status == "failed"
+    assert sched.stats.failed == 1
+    assert sched.stats.recoveries == 2  # initial + one retry, then give up
+    assert sched.idle
+    eng.pool.verify_invariants()
+    assert sched.scrub_quarantined() == len(eng.pool.quarantined_blocks) == 0 \
+        or eng.pool.stats().quarantined == 0
+
+
+def test_alloc_failure_requeues_gracefully():
+    """A transiently refused admission-time allocation (injected) must
+    requeue the request — counted, not crashed — and the run still emits
+    exactly the fault-free streams."""
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128)
+        base = Scheduler(eng).run(_reqs(cfg, [4, 4, 4], [3, 3, 3]))
+        inj = faults.FaultInjector(eng, seed=0)
+        inj.arm_alloc_failure()
+
+        sched = Scheduler(eng)
+        out = sched.run(_reqs(cfg, [4, 4, 4], [3, 3, 3]), fault_hook=inj)
+        inj.detach()
+    finally:
+        ops.force_backend(None)
+    assert sched.stats.alloc_failures == 1
+    assert inj.counts() == {"alloc_fail": 1}
+    assert sched.stats.finished == 3
+    for uid in base:
+        np.testing.assert_array_equal(out[uid], base[uid])
+    eng.pool.verify_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Deadlines, cancellation, load shedding
+# ---------------------------------------------------------------------------
+
+
+def test_deadlines_expire_running_and_pending():
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=128)
+        sched = Scheduler(eng)
+        rng = np.random.RandomState(0)
+        p0, p1 = _prompts(rng, cfg, [4, 4])
+        sched.submit(Request(uid=0, prompt=p0, max_new=50, deadline=4.0))
+        sched.submit(Request(uid=1, prompt=p1, max_new=3, deadline=2.0))
+        clock = {"t": 0.0}
+
+        def now():
+            clock["t"] += 1.0
+            return clock["t"]
+
+        out = sched.run(now_fn=now)
+    finally:
+        ops.force_backend(None)
+    assert out == {}  # nobody finished ok
+    assert sched.stats.deadline_misses == 2
+    # the running request kept its partial output; the queued one never
+    # got a slot (single-slot engine) and expired with none
+    assert sched.results[0].status == "expired"
+    assert len(sched.results[0].tokens) >= 1
+    assert sched.results[1].status == "expired"
+    assert len(sched.results[1].tokens) == 0
+    assert sched.idle and eng.pool.used_blocks == 0
+    eng.pool.verify_invariants()
+
+
+def test_submit_rejects_absurd_deadlines():
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=128)
+        sched = Scheduler(eng)
+        p = _prompts(np.random.RandomState(0), cfg, [4])[0]
+        with pytest.raises(ValueError, match="absurd deadline"):
+            sched.submit(Request(uid=0, prompt=p, max_new=2,
+                                 arrival=5.0, deadline=5.0))
+        with pytest.raises(ValueError, match="absurd deadline"):
+            sched.submit(Request(uid=1, prompt=p, max_new=2,
+                                 deadline=float("inf")))
+    finally:
+        ops.force_backend(None)
+
+
+def test_cancellation_frees_blocks_immediately():
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=128)
+        sched = Scheduler(eng)
+        for r in _reqs(cfg, [4, 4], [10, 10]):
+            sched.submit(r)
+        sched.step()                      # admits uid 0; uid 1 queues
+        assert eng.pool.used_blocks == 1
+        assert sched.cancel(0)            # running: blocks free now
+        assert eng.pool.used_blocks == 0
+        assert sched.cancel(1)            # pending: removed from the queue
+        assert not sched.cancel(42)       # unknown uid
+        assert not sched.cancel(0)        # already terminal
+    finally:
+        ops.force_backend(None)
+    assert sched.stats.cancelled == 2 and sched.idle
+    assert sched.results[0].status == "cancelled"
+    assert len(sched.results[0].tokens) >= 1   # partial output kept
+    assert sched.results[1].status == "cancelled"
+    eng.pool.verify_invariants()
+
+
+def test_bounded_queue_sheds_newest_explicitly():
+    """6 same-instant arrivals against max_pending=2: the newest four are
+    shed with a terminal record each — no silent drops — and the oldest
+    two run to completion."""
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128)
+        sched = Scheduler(eng, max_pending=2)
+        out = sched.run(_reqs(cfg, [4] * 6, [3] * 6))
+    finally:
+        ops.force_backend(None)
+    assert sorted(out) == [0, 1]
+    assert sched.stats.shed == 4 and sched.stats.finished == 2
+    assert {u for u, r in sched.results.items() if r.status == "shed"} \
+        == {2, 3, 4, 5}
+    # every submitted request reached a terminal record
+    assert sorted(sched.results) == [0, 1, 2, 3, 4, 5]
+    assert all(len(out[u]) == 3 for u in (0, 1))
+
+
+def test_requeued_requests_are_never_shed():
+    """A preempted request holds emitted tokens; the bounded queue must
+    shed fresh arrivals instead. Same thrash setup as the storm-guard
+    test, plus late arrivals into a tiny queue."""
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=256,
+                                 num_blocks=3)
+        sched = Scheduler(eng, max_pending=2)
+        reqs = _reqs(cfg, [126, 126], [6, 6])
+        fresh = _reqs(cfg, [4, 4, 4], [2, 2, 2], seed=1)
+        reqs += [dataclasses.replace(r, uid=10 + i, arrival=2.0)
+                 for i, r in enumerate(fresh)]
+        clock = {"t": 0.0}
+
+        def now():
+            clock["t"] += 1.0
+            return clock["t"]
+
+        out = sched.run(reqs, now_fn=now)
+    finally:
+        ops.force_backend(None)
+    assert sched.stats.preemptions >= 1
+    # both block-crossers finish despite one being preempted+requeued
+    # while the queue sat over its bound; only fresh arrivals are shed
+    assert all(len(out[u]) == 6 for u in (0, 1))
+    shed = {u for u, r in sched.results.items() if r.status == "shed"}
+    assert shed and shed.issubset({10, 11, 12})
+    assert sched.results[1].status == "ok"
+    eng.pool.verify_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Preemption-storm guard + recompute budget (no livelock, no thrash)
+# ---------------------------------------------------------------------------
+
+
+def test_storm_guard_prevents_admit_preempt_thrash():
+    """Two block-crossing requests over a 3-block pool thrash without the
+    guard (admit -> grow -> preempt). With storm_guard the second request
+    is held at admission until the first drains: zero preemptions,
+    oldest finishes first, identical tokens."""
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=256,
+                                 num_blocks=3)
+        off = Scheduler(eng)
+        out_off = off.run(_reqs(cfg, [126, 126], [6, 6]))
+        done_order = []
+        on = Scheduler(eng, storm_guard=True,
+                       on_token=lambda uid, tok, done:
+                       done_order.append(uid) if done else None)
+        out_on = on.run(_reqs(cfg, [126, 126], [6, 6]))
+    finally:
+        ops.force_backend(None)
+    assert off.stats.preemptions >= 1          # the thrashing baseline
+    assert on.stats.preemptions == 0           # the guard removes it
+    assert done_order == [0, 1]                # oldest-first progress
+    for uid in out_off:
+        np.testing.assert_array_equal(out_on[uid], out_off[uid])
+    eng.pool.verify_invariants()
+
+
+def test_recompute_budget_paces_requeued_prefills():
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128)
+        sched = Scheduler(eng, recompute_budget=1)
+        # two requeued requests ready at once: the budget admits exactly
+        # one per step (the first always goes — progress guarantee)
+        for r in _reqs(cfg, [4, 4], [2, 2]):
+            sched.pending.append(dataclasses.replace(r, requeued=True))
+        sched.step()
+        assert sched.stats.admitted == 1
+        sched.step()
+        assert sched.stats.admitted == 2
+        out = sched.run()
+        # and a genuinely thrashing workload still drains under budget
+        sched2 = Scheduler(eng, recompute_budget=1)
+        out2 = sched2.run(_reqs(cfg, [4, 4], [2, 2]))
+    finally:
+        ops.force_backend(None)
+    assert sched.stats.recompute_tokens == 8   # both prompts re-prefilled
+    assert all(len(out[u]) == 2 for u in (0, 1))
+    assert all(len(out2[u]) == 2 for u in (0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: pressure-downshifted admissions
+# ---------------------------------------------------------------------------
+
+
+def test_pressure_downshifts_admissions_and_restores():
+    """Under byte pressure new admissions downshift to the narrower dense
+    geometry (priced at its rate, so more fit the budget); once pressure
+    clears, later admissions restore to the wide geometry. Every result
+    records the geometry it was served at."""
+    cfg, model = _model("mistral-large-123b", "sfp-m3e5")
+    params = model.init(jax.random.PRNGKey(0))
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=8, max_len=256,
+                                 num_blocks=4,
+                                 degraded_container="sfp-m1e2")
+        assert eng.degraded_block_bytes < eng.block_bytes
+        pc = precision.PressureController(low=0.6, high=0.85)
+        sched = Scheduler(eng, pressure=pc)
+        out = sched.run(_reqs(cfg, [100] * 8, [10] * 8))
+    finally:
+        ops.force_backend(None)
+    s = sched.stats
+    assert s.finished == 8 and all(len(out[u]) == 10 for u in range(8))
+    assert s.downshifted >= 1
+    containers = {u: r.container for u, r in sched.results.items()}
+    assert set(containers.values()) == {"sfp-m3e5", "sfp-m1e2"}
+    # FIFO admission under monotone pressure: the first admissions are
+    # wide, the flood's tail downshifts
+    assert containers[0] == "sfp-m3e5"
+    # downshifted blocks were priced at the narrow rate, within budget
+    st = eng.pool.stats()
+    assert st.budget_bytes is not None and st.peak_bytes <= st.budget_bytes
+    # more concurrent residencies than the wide rate alone could afford
+    assert st.peak_bytes // eng.block_bytes < eng.pool.peak_used
+    # pressure clears once the flood drains: the controller restores
+    assert pc.update(st.free_bytes, st.capacity_bytes) is False
+    eng.pool.verify_invariants()
+
+
+def test_pressure_controller_hysteresis_and_validation():
+    pc = precision.PressureController(low=0.25, high=0.5)
+    assert pc.update(100, 100) is False      # all free
+    assert pc.update(20, 100) is True        # below low -> degrade
+    assert pc.update(40, 100) is True        # hysteresis: still degraded
+    assert pc.update(60, 100) is False       # above high -> restore
+    with pytest.raises(ValueError):
+        precision.PressureController(low=0.5, high=0.25)
+    with pytest.raises(ValueError):
+        precision.PressureController(low=-0.1, high=0.5)
+
+
+def test_scheduler_rejects_pressure_without_degraded_engine():
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=128)
+        with pytest.raises(ValueError, match="degraded_container"):
+            Scheduler(eng, pressure=precision.PressureController())
+    finally:
+        ops.force_backend(None)
+
+
+# ---------------------------------------------------------------------------
+# Bounded terminal history
+# ---------------------------------------------------------------------------
+
+
+def test_terminal_history_is_lru_bounded():
+    cfg, model, params = _sfp8()
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=4, max_len=128)
+        sched = Scheduler(eng, history_limit=4)
+        sched.run(_reqs(cfg, [3] * 10, [1] * 10))
+        keep = Scheduler(eng, history_limit=4, retain_history=True)
+        keep.run(_reqs(cfg, [3] * 10, [1] * 10))
+    finally:
+        ops.force_backend(None)
+    assert sched.stats.finished == 10          # work is never dropped
+    assert len(sched.results) == 4             # records are LRU-bounded
+    assert len(sched.finished) == 4
+    assert sorted(sched.results) == [6, 7, 8, 9]  # newest survive
+    assert len(keep.results) == 10             # opt-in full retention

@@ -56,6 +56,41 @@ def test_pool_alloc_free_trash_invariants():
         pool.alloc_upto(1, 16 * 3 + 1)  # > max_logical
 
 
+def test_pool_hardening_rejects_misuse():
+    """The allocator raises on double free, out-of-range slots, and
+    quarantine of blocks a slot does not own — aliasing bugs surface at
+    the call site instead of corrupting another request's blocks."""
+    pool = BlockPool(num_blocks=4, max_slots=2, max_logical=3, block_l=16)
+    with pytest.raises(ValueError, match="slot 2 out of range"):
+        pool.alloc_upto(2, 16)
+    with pytest.raises(ValueError, match="slot -1 out of range"):
+        pool.free_slot(-1)
+    with pytest.raises(ValueError, match="n_tokens"):
+        pool.alloc_upto(0, -5)
+    with pytest.raises(KeyError, match="double free"):
+        pool.free_slot(0)               # never allocated
+    assert pool.alloc_upto(0, 20)       # 2 blocks
+    pool.verify_invariants()
+    with pytest.raises(ValueError, match="not owned"):
+        pool.free_slot(0, quarantine=(99,))
+    with pytest.raises(ValueError, match="trash block"):
+        pool.free_slot(0, quarantine=(TRASH_BLOCK,))
+    owned = pool.owned_ids()
+    assert pool.free_slot(0, quarantine=owned[:1]) == 1
+    with pytest.raises(KeyError, match="double free"):
+        pool.free_slot(0)
+    pool.verify_invariants()
+    # quarantined blocks are neither free nor owned until rehabilitated
+    assert pool.free_blocks == 3 and pool.quarantined_blocks == owned[:1]
+    with pytest.raises(ValueError, match="not quarantined"):
+        pool.rehabilitate(owned[1])
+    with pytest.raises(ValueError, match="never pooled"):
+        pool.rehabilitate(TRASH_BLOCK)
+    pool.rehabilitate(owned[0])
+    assert pool.free_blocks == 4
+    pool.verify_invariants()
+
+
 def test_pool_admission_gate_keeps_decode_headroom():
     pool = BlockPool(num_blocks=3, max_slots=2, max_logical=4, block_l=16)
     assert pool.can_admit(47)       # prompt + first token fit 3 blocks
@@ -270,6 +305,35 @@ def test_single_oversized_request_raises():
         ops.force_backend(None)
 
 
+def test_submit_validates_requests_up_front():
+    """Malformed requests raise at submit() with the offending field
+    named — never deep inside prefill with a shape error."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=128,
+                                 num_blocks=1)
+        sched = Scheduler(eng)
+        good = np.arange(4, dtype=np.int32)
+        with pytest.raises(ValueError, match="prompt"):
+            sched.submit(Request(uid=0, prompt=good[None], max_new=2))
+        with pytest.raises(ValueError, match="prompt"):
+            sched.submit(Request(uid=0, prompt=good[:0], max_new=2))
+        with pytest.raises(ValueError, match="max_new"):
+            sched.submit(Request(uid=0, prompt=good, max_new=0))
+        # a prompt the pool can never hold is refused at submit, not
+        # after it reaches the head of the queue
+        big = np.arange(129, dtype=np.int32)
+        with pytest.raises(RuntimeError, match="cannot ever admit"):
+            sched.submit(Request(uid=0, prompt=big, max_new=2))
+        assert not sched.pending  # nothing malformed was enqueued
+        sched.submit(Request(uid=1, prompt=good, max_new=2))
+        assert len(sched.pending) == 1
+    finally:
+        ops.force_backend(None)
+
+
 def test_paged_engine_rejects_raw_and_unfuseable_codecs():
     cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
                               dtype="float32")
@@ -414,6 +478,70 @@ def test_burst_defers_admission_and_preemption_to_boundaries():
     assert set(out1) == set(outK)
     for uid in out1:
         np.testing.assert_array_equal(out1[uid], outK[uid])
+
+
+def test_burst_finished_slot_recycled_at_next_boundary():
+    """A request finishing mid-burst frees its slot during the burst's
+    replay; the very next step's admission must reuse that slot (no idle
+    step in between) — and the recycled streams equal burst=1."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+
+    def reqs():
+        rng = np.random.RandomState(12)
+        return [Request(uid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(
+                    zip(_prompts(rng, cfg, [4, 4, 4]), [2, 9, 3]))]
+
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=2, max_len=128)
+        slot_of = {}
+        sched = Scheduler(eng)
+        sched.on_token = lambda uid, tok, done: slot_of.setdefault(
+            uid, next(st.slot for st in sched.running.values()
+                      if st.req.uid == uid))
+        for r in reqs():
+            sched.submit(r)
+        steps = []
+        while not sched.idle:
+            steps.append(sched.step(burst=4))
+        _, s1, out1 = _burst_stream_run(model, params, reqs(), 1,
+                                        max_slots=2, max_len=128)
+    finally:
+        ops.force_backend(None)
+    # uid 0 (max_new=2) finishes inside the first 4-token burst...
+    done_step = {u: i for i, em in enumerate(steps)
+                 for u, _, d in em if d}
+    first_step = {}
+    for i, em in enumerate(steps):
+        for u, _, _ in em:
+            first_step.setdefault(u, i)
+    assert done_step[0] == 0
+    # ...and uid 2 takes its slot at the very next burst boundary
+    assert first_step[2] == 1
+    assert slot_of[2] == slot_of[0]
+    for u in out1:
+        np.testing.assert_array_equal(sched.finished[u], out1[u])
+
+    # preemption during a burst composes with the recycling: with a
+    # 3-block pool the younger crosser is evicted mid-run at a burst
+    # boundary while the short request recycles the finisher's slot —
+    # everything still drains token-identical to burst=1.
+    def reqs2():
+        rng = np.random.RandomState(13)
+        return [Request(uid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(
+                    zip(_prompts(rng, cfg, [126, 126, 4]), [6, 6, 3]))]
+
+    _, sA, outA = _burst_stream_run(model, params, reqs2(), 1,
+                                    max_slots=2, max_len=256, num_blocks=3)
+    _, sB, outB = _burst_stream_run(model, params, reqs2(), 4,
+                                    max_slots=2, max_len=256, num_blocks=3)
+    assert sB.stats.preemptions >= 1
+    assert sB.stats.admitted > sB.stats.finished == 3  # readmissions
+    for uid in outA:
+        np.testing.assert_array_equal(outA[uid], outB[uid])
 
 
 def test_burst_matches_generate_interpret():
