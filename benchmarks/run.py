@@ -55,15 +55,17 @@ def main() -> None:
                     f"bit_exact={r['bit_exact_fusion']};"
                     "dense_m2e4_vs_bf16="
                     f"{r['dense_vs_fixed']['sfp-m2e4_vs_bf16']:.3f}")
+    def decode_ratio(r):
+        return r["points"][0]["fused_bytes_vs_bf16"]["sfp8_fused"]
+
     bench("bench_decode", bench_decode.run,
-          lambda r: "sfp8_fused_bytes_vs_bf16="
-                    f"{r['points'][0]['fused_bytes_vs_bf16']['sfp8_fused']:.3f}")
+          lambda r: f"sfp8_fused_bytes_vs_bf16={decode_ratio(r):.3f}")
+    def micro_gbps(r, name):
+        return r["backends"]["ref"][name]["phases"]["generate"]["gbps"]
+
     bench("bench_decode_micro", bench_decode_micro.run,
-          lambda r: "m2e4_unpack_gbps="
-                    f"{r['backends']['ref']['sfp-m2e4']['phases']"
-                    f"['generate']['gbps']:.2f};sfp8_unpack_gbps="
-                    f"{r['backends']['ref']['sfp8']['phases']"
-                    f"['generate']['gbps']:.2f}")
+          lambda r: f"m2e4_unpack_gbps={micro_gbps(r, 'sfp-m2e4'):.2f};"
+                    f"sfp8_unpack_gbps={micro_gbps(r, 'sfp8'):.2f}")
     bench("bench_policies", bench_policies.run,
           lambda r: "qm_overhead="
                     f"{r['policies']['qm']['overhead_vs_none']:.2f}x;"

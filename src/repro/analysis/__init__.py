@@ -1,0 +1,27 @@
+"""Static precision/kernel contract checker (``python -m repro.analysis``).
+
+Two layers over the codebase's precision machinery:
+
+* **AST lints** (``astlint``): host syncs inside traced code, stale
+  ``interpret=True`` defaults, ``force_backend`` leaks, Python truthiness
+  on traced values, unresolvable container/policy name literals (checked
+  against the real registries, with did-you-mean), float64 introductions.
+* **jaxpr/HLO contracts** (``contracts``, ``vmem``): precision-leak
+  detection on the fused quantize+pack, buffer-geometry equality between
+  declared and materialized footprints, a donation audit over every
+  ``donate_argnums`` entry point, a recompile guard over the serving
+  steps, and a static VMEM budget sweep per kernel × arch × geometry.
+
+Violations either get fixed or get an explicit one-line-justified waiver
+in ``analysis_baseline.json``; CI runs the fast tier on every push and
+the full geometry sweep nightly.
+"""
+from repro.analysis.findings import (Finding, load_baseline,
+                                     split_by_baseline)
+from repro.analysis.names import check_container, check_policy
+from repro.analysis.runner import build_parser, main
+
+__all__ = [
+    "Finding", "load_baseline", "split_by_baseline",
+    "check_container", "check_policy", "build_parser", "main",
+]

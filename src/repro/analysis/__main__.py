@@ -1,0 +1,5 @@
+import sys
+
+from repro.analysis.runner import main
+
+sys.exit(main())

@@ -1,0 +1,334 @@
+"""Layer 2: jaxpr/HLO contract analyzers over the real entry points.
+
+These checks trace the actual programs — the fused quantize+pack, the
+train step, and both paged decode entry points — and verify properties
+the AST layer cannot see:
+
+  precision-leak   no float-widening ``convert_element_type`` and no
+                   float64 aval anywhere between quantize and pack (the
+                   fused path must stay in the integer bit machine), for
+                   both the ref and interpret backends.
+  buffer-geometry  a codec's materialized packed bytes equal its declared
+                   ``packed_bits`` footprint, and the paged pool's block
+                   spec equals the admission accounting's
+                   ``paged_block_bytes`` — stash/KV buffers never exceed
+                   the declared payload geometry.
+  donation-audit   every ``donate_argnums`` buffer of every serving/train
+                   entry point is actually aliased to an output
+                   (``tf.aliasing_output`` in the lowering) — a dropped
+                   donation silently doubles the cache/optimizer HBM.
+  recompile-guard  compile caches stay at one entry across runtime-varying
+                   but shape-stable inputs (decode steps at different
+                   positions, repeated bursts at the same K, repeated
+                   generate() calls at the same budget).
+
+The jaxpr walks reuse ``roofline.jaxpr_cost.iter_eqns`` — one traversal
+definition for the cost model and the contracts.
+
+Everything runs on a reduced config on CPU; the geometry set is
+``QUICK_GEOMETRIES`` for the fast tier and ``full_geometries()`` for the
+nightly sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import codecs, configs, policies
+from repro.analysis.findings import Finding
+from repro.configs.base import reduced
+from repro.kernels import ops
+from repro.roofline.jaxpr_cost import iter_eqns
+
+QUICK_GEOMETRIES = ("sfp8", "sfp-m2e4", "sfp-m1e2")
+
+_CONTRACT_PATH = "src/repro/analysis/contracts.py"
+
+
+def full_geometries() -> Tuple[str, ...]:
+    """Every registered dense geometry (payload width <= 16) plus the
+    fixed-lane containers — the nightly sweep set."""
+    names = ["sfp8", "sfp16"]
+    for m in (1, 2, 3, 4, 5, 7):
+        for e in (2, 3, 4, 5):
+            if 1 + e + m <= 16:
+                names.append(codecs.dense_name(m, e))
+    return tuple(n for n in names
+                 if _resolves(n))
+
+
+def _resolves(name: str) -> bool:
+    try:
+        codecs.get(name)
+        return True
+    except KeyError:
+        return False
+
+
+def _finding(rule: str, scope: str, message: str) -> Finding:
+    return Finding(rule=rule, path=_CONTRACT_PATH, line=0, scope=scope,
+                   message=message)
+
+
+# ---------------------------------------------------------------------------
+# precision-leak
+# ---------------------------------------------------------------------------
+
+
+def _float_widenings(jaxpr) -> List[str]:
+    """Names of float->wider-float converts + any float64 aval."""
+    bad = []
+    for eqn in iter_eqns(jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and getattr(aval, "dtype", None) is not None:
+                if aval.dtype == jnp.float64:
+                    bad.append("float64 aval")
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = eqn.invars[0].aval.dtype
+        dst = eqn.outvars[0].aval.dtype
+        if (jnp.issubdtype(src, jnp.floating)
+                and jnp.issubdtype(dst, jnp.floating)
+                and jnp.dtype(dst).itemsize > jnp.dtype(src).itemsize):
+            bad.append(f"{src}->{dst}")
+    return bad
+
+
+def check_precision_leak(geometries: Sequence[str]) -> List[Finding]:
+    """The fused quantize+pack must not widen floats on its way to the
+    payload: any up-conversion doubles the stash HBM write the container
+    exists to shrink."""
+    out: List[Finding] = []
+    x = jax.ShapeDtypeStruct((8, 256), jnp.bfloat16)
+    n = jax.ShapeDtypeStruct((), jnp.int32)
+    for name in geometries:
+        codec = codecs.get(name)
+        for backend in ("ref", "interpret"):
+            ops.force_backend(backend)
+            try:
+                closed = jax.make_jaxpr(
+                    lambda t, b: codec.pack(t, bits=b))(x, n)
+            finally:
+                ops.force_backend(None)
+            bad = _float_widenings(closed.jaxpr)
+            if bad:
+                out.append(_finding(
+                    "precision-leak", f"pack:{name}:{backend}",
+                    f"quantize+pack of {name!r} ({backend} backend) widens "
+                    f"floats: {sorted(set(bad))}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# buffer-geometry
+# ---------------------------------------------------------------------------
+
+
+def _spec_bits(tree) -> int:
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize * 8
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def check_buffer_geometry(geometries: Sequence[str],
+                          cfg=None) -> List[Finding]:
+    """Materialized packed buffers must equal the declared footprint —
+    ``packed_bits`` is what the paper's results are priced in, so a spec
+    that allocates more would silently misreport compression."""
+    out: List[Finding] = []
+    shape = (4, 256)
+    for name in geometries:
+        codec = codecs.get(name)
+        spec = codec.packed_spec(shape, jnp.float32)
+        got = _spec_bits(spec.data)
+        want = float(codec.packed_bits(jnp.zeros(shape, jnp.float32)))
+        if got != want:
+            out.append(_finding(
+                "buffer-geometry", f"packed_spec:{name}",
+                f"{name!r}: packed_spec materializes {got} bits but "
+                f"packed_bits declares {want}"))
+    if cfg is not None:
+        from repro.serve import kvcache
+        for name in geometries:
+            spec = kvcache.paged_block_spec(cfg, 1, ops.DECODE_BLOCK_L, name)
+            got = _spec_bits(spec) // 8
+            want = kvcache.paged_block_bytes(cfg, ops.DECODE_BLOCK_L, name)
+            if got != want:
+                out.append(_finding(
+                    "buffer-geometry", f"paged_block:{name}",
+                    f"{name!r}: pool block spec is {got} B but admission "
+                    f"accounting prices {want} B"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# donation-audit
+# ---------------------------------------------------------------------------
+
+
+def _count_aliased(lowered) -> int:
+    return lowered.as_text().count("tf.aliasing_output")
+
+
+def _audit(scope: str, lowered, donated_tree) -> List[Finding]:
+    want = len(jax.tree_util.tree_leaves(donated_tree))
+    got = _count_aliased(lowered)
+    if got < want:
+        return [_finding(
+            "donation-audit", scope,
+            f"{scope}: {want} donated buffers but only {got} aliased to "
+            "outputs — the un-aliased ones are silently copied "
+            "(double HBM)")]
+    return []
+
+
+def _tiny_serving(container: str):
+    """One reduced all-global model + engine, shared by the donation and
+    recompile checks."""
+    from repro.models.model import DecoderModel
+    from repro.serve.engine import PagedEngine
+
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="float32")
+    model = DecoderModel(cfg, kv_container=container)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = PagedEngine(model, params, max_slots=2, max_len=128)
+    return cfg, model, params, engine
+
+
+def check_donation(container: str = "sfp8",
+                   include_train: bool = True) -> List[Finding]:
+    from repro.serve.engine import make_decode_loop
+
+    out: List[Finding] = []
+    cfg, model, params, engine = _tiny_serving(container)
+    S = engine.max_slots
+
+    tables = jnp.zeros((S, engine.nmax), jnp.int32)
+    toks = jnp.zeros((S, 1), jnp.int32)
+    pos = jnp.zeros((S,), jnp.int32)
+
+    low = engine._step.lower(params, engine.mem, tables, toks, pos)
+    out += _audit(f"PagedEngine._step[{container}]", low, engine.mem)
+
+    burst = engine._make_burst(2)
+    low = burst.lower(params, engine.mem, tables, toks, pos)
+    out += _audit(f"PagedEngine.decode_burst[K=2,{container}]", low,
+                  engine.mem)
+
+    # Contiguous decode loop: cache donated across the scan.
+    cache = jax.eval_shape(lambda: model.init_cache(1, engine.max_len))
+    loop = make_decode_loop(model, 4)
+    low = loop.lower(params, cache, jnp.zeros((1, 1), jnp.int32),
+                     jax.ShapeDtypeStruct((), jnp.int32))
+    out += _audit(f"decode_loop[{container}]", low, cache)
+
+    if include_train:
+        out += _check_train_donation()
+    return out
+
+
+def _check_train_donation() -> List[Finding]:
+    from repro.models.model import DecoderModel
+    from repro.optim import adamw
+    from repro.optim.schedule import Schedule
+    from repro.train import step as step_mod
+
+    cfg = reduced(configs.get("mistral-large-123b"))
+    model = DecoderModel(cfg, policies.get("qm"))
+    tc = step_mod.TrainConfig(
+        opt=adamw.AdamWConfig(lr=1e-3),
+        schedule=Schedule(total_steps=8, warmup_steps=2, base_lr=1e-3))
+    step = jax.jit(step_mod.make_train_step(model, tc), donate_argnums=(0,))
+    state = jax.eval_shape(
+        lambda: step_mod.init_state(model, jax.random.PRNGKey(0), tc))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
+    low = step.lower(state, batch)
+    return _audit("train_step[qm]", low, state)
+
+
+# ---------------------------------------------------------------------------
+# recompile-guard
+# ---------------------------------------------------------------------------
+
+
+def _cache_size(jitted) -> Optional[int]:
+    fn = getattr(jitted, "_cache_size", None)
+    return fn() if callable(fn) else None
+
+
+def check_recompile(container: str = "sfp8") -> List[Finding]:
+    """Shape-stable inputs must never re-trace: the paged step, the
+    K-burst, and generate()'s memoized executables each get exercised
+    twice with different runtime values and must hold one cache entry."""
+    from repro.serve.engine import _CACHE_ATTR, generate
+
+    out: List[Finding] = []
+    cfg, model, params, engine = _tiny_serving(container)
+    S = engine.max_slots
+
+    toks = np.zeros(S, np.int32)
+    engine.decode(toks, np.zeros(S, np.int32))
+    engine.decode(toks + 3, np.ones(S, np.int32))
+    n = _cache_size(engine._step)
+    if n is not None and n != 1:
+        out.append(_finding(
+            "recompile-guard", f"PagedEngine._step[{container}]",
+            f"decode step recompiled across shape-stable calls "
+            f"(cache size {n})"))
+
+    engine.decode_burst(toks, np.zeros(S, np.int32), 2)
+    engine.decode_burst(toks + 1, np.full(S, 2, np.int32), 2)
+    if set(engine._bursts) != {2}:
+        out.append(_finding(
+            "recompile-guard", "PagedEngine.decode_burst",
+            f"burst memo holds {sorted(engine._bursts)} after two K=2 "
+            "bursts (want exactly [2])"))
+    else:
+        n = _cache_size(engine._bursts[2])
+        if n is not None and n != 1:
+            out.append(_finding(
+                "recompile-guard", "PagedEngine.decode_burst",
+                f"K=2 burst recompiled across calls (cache size {n})"))
+
+    prompt = np.zeros((1, 8), np.int32)
+    generate(model, params, jnp.asarray(prompt), 4, max_len=engine.max_len)
+    generate(model, params, jnp.asarray(prompt) + 1, 4,
+             max_len=engine.max_len)
+    memo = model.__dict__.get(_CACHE_ATTR, {})
+    keys = {k[0] for k in memo}
+    if keys != {"prefill", "decode_loop"}:
+        out.append(_finding(
+            "recompile-guard", "generate",
+            f"generate() memo holds {sorted(memo)} after two same-shape "
+            "calls (want one prefill + one decode_loop)"))
+    for key, fn in memo.items():
+        n = _cache_size(fn)
+        if n is not None and n != 1:
+            out.append(_finding(
+                "recompile-guard", f"generate:{key[0]}",
+                f"{key} executable re-traced across same-shape calls "
+                f"(cache size {n})"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_contracts(full: bool = False) -> List[Finding]:
+    geoms = full_geometries() if full else QUICK_GEOMETRIES
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="float32")
+    out: List[Finding] = []
+    out += check_precision_leak(geoms)
+    out += check_buffer_geometry(geoms, cfg)
+    out += check_donation(include_train=True)
+    out += check_recompile()
+    return out

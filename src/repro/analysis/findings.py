@@ -1,0 +1,76 @@
+"""Finding records + the waiver baseline for the static checker.
+
+A ``Finding`` is one rule violation anchored to a file/line and a scope
+(function, entry point, or kernel×geometry pair). Findings are keyed
+``rule:path:scope`` — line numbers are deliberately NOT part of the key,
+so waivers survive unrelated edits to the same file.
+
+The baseline file (``analysis_baseline.json`` at the repo root) holds
+explicit waivers, each with a one-line justification:
+
+    {"waivers": [
+        {"key": "host-sync-in-jit:src/repro/x.py:foo",
+         "reason": "host boundary: scheduler reads one scalar per step"}
+    ]}
+
+A waiver with no matching finding is *stale* and reported (the violation
+was fixed — delete the waiver), but does not fail the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str      # repo-relative, '/'-separated
+    line: int
+    scope: str     # function / entry-point / kernel name it anchors to
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.path}:{self.scope}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "scope": self.scope, "message": self.message,
+                "key": self.key}
+
+
+def load_baseline(path) -> Dict[str, str]:
+    """Read the waiver file; returns {finding key: justification}."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return {}
+    raw = json.loads(p.read_text())
+    waivers = {}
+    for w in raw.get("waivers", []):
+        if not w.get("reason", "").strip():
+            raise ValueError(f"waiver {w.get('key')!r} has no reason; every "
+                             "waiver needs a one-line justification")
+        waivers[w["key"]] = w["reason"]
+    return waivers
+
+
+def split_by_baseline(findings: Sequence[Finding],
+                      waivers: Dict[str, str]
+                      ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Partition into (active, waived) and report stale waiver keys."""
+    active, waived = [], []
+    hit = set()
+    for f in findings:
+        if f.key in waivers:
+            waived.append(f)
+            hit.add(f.key)
+        else:
+            active.append(f)
+    stale = sorted(set(waivers) - hit)
+    return active, waived, stale

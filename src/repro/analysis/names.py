@@ -1,0 +1,33 @@
+"""Name-literal validation against the real registries.
+
+The lint layer never reimplements the container/policy grammars: a
+container literal is checked by resolving it through
+``codecs.validate_name`` (registry + parametric factories), a policy
+literal through ``policies.validate_name`` ('+'-composition parsed
+without construction). Both return the registry's own did-you-mean
+message on failure, so the lint and the launchers fail with identical
+diagnostics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def check_container(name: str) -> Optional[str]:
+    """None if ``name`` resolves as a container codec, else the error."""
+    from repro import codecs
+    try:
+        codecs.validate_name(name)
+        return None
+    except ValueError as e:
+        return str(e)
+
+
+def check_policy(name: str) -> Optional[str]:
+    """None if ``name`` parses as a policy ('+'-composition ok)."""
+    from repro import policies
+    try:
+        policies.validate_name(name)
+        return None
+    except ValueError as e:
+        return str(e)

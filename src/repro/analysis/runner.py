@@ -1,0 +1,98 @@
+"""CLI driver: ``python -m repro.analysis``.
+
+Fast tier (default, CI-gating, < 60 s):
+  * AST lints over src/repro (layer 1)
+  * jaxpr/HLO contracts on the quick geometry set (layer 2)
+  * VMEM budget sweep over the quick geometries
+
+Nightly (``--full``): the contract + VMEM sweeps widen to every
+registered dense geometry, and the donation audit also compiles each
+entry point so XLA's donation warnings are surfaced.
+
+Exit status: 0 when every finding is waived in the baseline file, 1 when
+active findings remain (or the baseline is malformed). Stale waivers are
+reported but do not fail — delete them when you see them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import List
+
+from repro.analysis import findings as _findings
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_BASELINE = REPO_ROOT / "analysis_baseline.json"
+DEFAULT_PATHS = [REPO_ROOT / "src" / "repro"]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static precision/kernel contract checker "
+                    "(AST lints + jaxpr contracts).")
+    p.add_argument("--full", action="store_true",
+                   help="nightly mode: sweep every registered dense "
+                        "geometry (not just the quick set)")
+    p.add_argument("--baseline", type=pathlib.Path,
+                   default=DEFAULT_BASELINE,
+                   help="waiver file (default: analysis_baseline.json at "
+                        "the repo root)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable findings on stdout")
+    p.add_argument("--no-lints", action="store_true",
+                   help="skip the AST lint layer")
+    p.add_argument("--no-contracts", action="store_true",
+                   help="skip the jaxpr contract + VMEM layers")
+    p.add_argument("--paths", nargs="*", type=pathlib.Path, default=None,
+                   help="files/dirs to lint (default: src/repro)")
+    return p
+
+
+def collect(args) -> List[_findings.Finding]:
+    found: List[_findings.Finding] = []
+    if not args.no_lints:
+        from repro.analysis import astlint
+        roots = [p.resolve() for p in (args.paths or DEFAULT_PATHS)]
+        found += astlint.run_lints(roots, REPO_ROOT)
+    if not args.no_contracts:
+        from repro.analysis import contracts, vmem
+        found += contracts.run_contracts(full=args.full)
+        geoms = (contracts.full_geometries() if args.full
+                 else contracts.QUICK_GEOMETRIES)
+        found += vmem.check_vmem(geoms)
+    return found
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        waivers = _findings.load_baseline(args.baseline)
+    except (ValueError, json.JSONDecodeError) as e:
+        print(f"error: bad baseline {args.baseline}: {e}", file=sys.stderr)
+        return 1
+
+    found = collect(args)
+    active, waived, stale = _findings.split_by_baseline(found, waivers)
+
+    if args.json:
+        print(json.dumps({
+            "active": [f.to_json() for f in active],
+            "waived": [f.to_json() for f in waived],
+            "stale_waivers": stale,
+        }, indent=2))
+    else:
+        for f in active:
+            print(f.format())
+        if waived:
+            print(f"-- {len(waived)} finding(s) waived by "
+                  f"{args.baseline.name}")
+        for key in stale:
+            print(f"-- stale waiver (no matching finding, delete it): "
+                  f"{key}")
+        status = "FAIL" if active else "ok"
+        print(f"repro.analysis: {status} — {len(active)} active, "
+              f"{len(waived)} waived, {len(stale)} stale waiver(s)")
+    return 1 if active else 0

@@ -1,0 +1,70 @@
+"""VMEM budget sweep: every Pallas kernel × arch config × geometry.
+
+Each kernel module exposes a ``vmem_estimate`` — a static model of what
+one grid step keeps resident (double-buffered BlockSpec windows + scratch
++ dominant body temporaries). This sweep prices those models for every
+attention-bearing registered architecture and every requested container
+geometry against the per-core VMEM budget (``roofline.hw.VMEM_PER_CORE``
+scaled by ``VMEM_BUDGET_FRACTION``), so a geometry/block-size combination
+that cannot fit surfaces in CI instead of as a Mosaic allocation failure
+on the first TPU run.
+
+The budget numbers are the v5e datasheet constants; TPU-measured limits
+are a ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+from repro import codecs, configs
+from repro.analysis.findings import Finding
+from repro.kernels import bitplane_pack, packed_flash_decode, sfp_pack
+from repro.roofline import hw
+
+_VMEM_PATH = "src/repro/analysis/vmem.py"
+
+
+def _budget() -> float:
+    return hw.VMEM_PER_CORE * hw.VMEM_BUDGET_FRACTION
+
+
+def _attention_archs():
+    """(name, H, KH, hd) for every registered arch with 128-aligned KV."""
+    out = []
+    for cfg in configs.ASSIGNED:
+        if cfg.n_kv_heads <= 0:
+            continue
+        hd = cfg.head_dim_
+        if (cfg.n_kv_heads * hd) % 128:
+            continue  # not paged-servable; the engine rejects these too
+        out.append((cfg.name, cfg.n_heads, cfg.n_kv_heads, hd))
+    return out
+
+
+def check_vmem(geometries: Sequence[str]) -> List[Finding]:
+    budget = _budget()
+    out: List[Finding] = []
+
+    def over(scope: str, got: int):
+        if got > budget:
+            out.append(Finding(
+                rule="vmem-budget", path=_VMEM_PATH, line=0, scope=scope,
+                message=f"{scope}: static VMEM estimate {got / 2**20:.2f} "
+                        f"MiB exceeds the {budget / 2**20:.2f} MiB "
+                        f"per-core budget"))
+
+    for name in geometries:
+        codec = codecs.get(name)
+        fields = codec.pack_fields(jnp.bfloat16)
+        if fields is None:
+            continue
+        pack_est = (bitplane_pack if fields.dense else sfp_pack
+                    ).vmem_estimate(fields=fields)
+        over(f"quantize_pack:{name}", pack_est)
+        for arch, H, KH, hd in _attention_archs():
+            over(f"flash_decode:{name}:{arch}",
+                 packed_flash_decode.vmem_estimate(fields=fields, H=H,
+                                                   KH=KH, hd=hd))
+    return out

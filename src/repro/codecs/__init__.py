@@ -24,7 +24,8 @@ the policy-learned bitlengths realized as actual bytes) and the legacy
 fixed-lane ``sfp{8|16}-m{K}e{E}`` family.
 """
 from repro.codecs.base import (Codec, PackedTensor, get, names, register,
-                               register_factory, unpack)
+                               register_factory, suggest_name, unpack,
+                               validate_name)
 from repro.codecs.bit_exact import BIT_EXACT, BitExactCodec
 from repro.codecs.gecko import GECKO8, Gecko8Codec
 from repro.codecs.sfp import (SFP8, SFP16, SFPCodec, dense_fields,
@@ -41,6 +42,7 @@ register_factory(maybe_codec)
 
 __all__ = [
     "Codec", "PackedTensor", "get", "names", "register", "register_factory",
+    "suggest_name", "validate_name",
     "unpack", "fields_for", "dense_fields", "dense_name",
     "DEFAULT_CONTAINER", "BIT_EXACT", "SFP8", "SFP16", "GECKO8",
     "BitExactCodec", "SFPCodec", "Gecko8Codec",

@@ -18,6 +18,8 @@ in interpret mode) and the jnp oracle elsewhere.
 from __future__ import annotations
 
 import abc
+import difflib
+import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -188,6 +190,58 @@ def get(name: str) -> Codec:
 
 def names():
     return sorted(_REGISTRY)
+
+
+# Canonical shapes of the parametric families, shown in validation errors.
+PARAMETRIC_GRAMMAR = "sfp-m{K}e{E} (dense), sfp{8|16}-m{K}e{E} (fixed-lane)"
+
+
+def _resolvable(name: str) -> bool:
+    try:
+        get(name)
+        return True
+    except Exception:
+        return False
+
+
+def suggest_name(name: str) -> Optional[str]:
+    """Best-effort did-you-mean for an unresolvable container name.
+
+    Candidates are the registered names plus parametric names rebuilt from
+    the digits of the input (so ``sfp-2me4``/``sfpm2e4``-style typos map
+    back to ``sfp-m2e4``); every candidate is validated through the real
+    registry/factory path before being offered.
+    """
+    cands = list(names())
+    digits = re.findall(r"\d+", name)
+    if "sfp" in name:
+        if len(digits) == 2:
+            cands.append(f"sfp-m{digits[0]}e{digits[1]}")
+        if len(digits) == 3 and digits[0] in ("8", "16"):
+            cands.append(f"sfp{digits[0]}-m{digits[1]}e{digits[2]}")
+    good = [c for c in cands if _resolvable(c)]
+    best = difflib.get_close_matches(name, good, n=1, cutoff=0.55)
+    return best[0] if best else None
+
+
+def validate_name(name: str, *, what: str = "container codec") -> Codec:
+    """Resolve ``name`` through the registry + parametric factories,
+    raising ``ValueError`` with a did-you-mean suggestion on failure.
+
+    This is the one grammar check shared by the static-analysis lint rule
+    (``repro.analysis``), the launchers' argparse validators, and anything
+    else that wants container typos to fail fast instead of at trace time.
+    """
+    try:
+        return get(name)
+    except KeyError:
+        pass
+    hint = suggest_name(name)
+    msg = f"unknown {what} {name!r}"
+    if hint:
+        msg += f"; did you mean {hint!r}?"
+    msg += (f" (registered: {names()}; parametric: {PARAMETRIC_GRAMMAR})")
+    raise ValueError(msg)
 
 
 def unpack(packed: PackedTensor) -> jax.Array:

@@ -21,6 +21,7 @@ Layout (bit-level oracle: kernels/ref.py ``bitplane_pack``/``_unpack``):
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,29 @@ from repro.kernels.sfp_pack import (DEFAULT_BLOCK_ROWS, _pack_body, _row_grid,
                                     _to_rows)
 
 LANES = kref.GROUP  # 128
+
+
+def vmem_estimate(*, fields: kref.PackFields,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  dtype=jnp.bfloat16, fused: bool = True) -> int:
+    """Static per-grid-step VMEM footprint model, in bytes.
+
+    Same accounting as ``sfp_pack.vmem_estimate`` with the plane-packed
+    output window ((block_rows, P*16) uint8) and one extra int32 word tile
+    for the word <-> plane transpose. Budget model for
+    ``repro.analysis.vmem``, not an allocator.
+    """
+    isz = jnp.dtype(dtype).itemsize
+    pb = fields.group_payload_bytes
+    blocks = 2 * (
+        block_rows * LANES * isz             # x in
+        + block_rows * pb                    # plane bytes out (uint8)
+        + block_rows * 1                     # bases out (uint8)
+    )
+    if fused:
+        blocks += 2 * 4                      # n scalar (1, 1) int32
+    temps = 5 * block_rows * LANES * 4
+    return blocks + temps
 
 
 def _bitplane_pack_kernel(x_ref, plane_ref, base_ref, *, spec, fields):
@@ -57,7 +81,8 @@ def _bitplane_unpack_kernel(plane_ref, base_ref, o_ref, *, spec,
 
 
 def _plane_pack_call(x, n, *, fields: kref.PackFields, block_rows: int,
-                     interpret: bool):
+                     interpret: Optional[bool]):
+    interpret = kref.default_interpret(interpret)
     spec = containers.spec_for(x)
     rows2d, _pad = _to_rows(x)
     rows2d, rows, rpad, block_rows = _row_grid(rows2d, block_rows)
@@ -97,7 +122,7 @@ def _plane_pack_call(x, n, *, fields: kref.PackFields, block_rows: int,
                                              "interpret"))
 def bitplane_pack(x: jax.Array, *, fields: kref.PackFields,
                   block_rows: int = DEFAULT_BLOCK_ROWS,
-                  interpret: bool = True):
+                  interpret: Optional[bool] = None):
     """Dense pack: (planes (R, P*16) uint8, bases (R, 1) uint8)."""
     return _plane_pack_call(x, None, fields=fields, block_rows=block_rows,
                             interpret=interpret)
@@ -108,7 +133,7 @@ def bitplane_pack(x: jax.Array, *, fields: kref.PackFields,
 def bitplane_quantize_pack(x: jax.Array, n: jax.Array, *,
                            fields: kref.PackFields,
                            block_rows: int = DEFAULT_BLOCK_ROWS,
-                           interpret: bool = True):
+                           interpret: Optional[bool] = None):
     """Fused Q(M, n) + dense plane pack: one VMEM pass, one HBM read.
 
     Bit-exact against mantissa quantization followed by ``bitplane_pack``;
@@ -124,7 +149,8 @@ def bitplane_quantize_pack(x: jax.Array, n: jax.Array, *,
 def bitplane_unpack(planes: jax.Array, bases: jax.Array, *, shape: tuple,
                     dtype, fields: kref.PackFields,
                     block_rows: int = DEFAULT_BLOCK_ROWS,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
+    interpret = kref.default_interpret(interpret)
     spec = containers.spec_for(jnp.dtype(dtype))
     pb = fields.group_payload_bytes
 

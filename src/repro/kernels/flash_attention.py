@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import NEG_INF
+from repro.kernels.ref import NEG_INF, default_interpret
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -84,7 +84,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None, block_q: int = 128,
                     block_k: int = 128, q_rep: int = 1,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Flash attention over (B, S, H, D); K/V carry the same head count.
 
     GQA callers fold the q-head group into the query rows instead of
@@ -93,6 +93,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     the causal position of row r as r // q_rep, and each KV block is
     streamed once per head group (see kernels.ops.attention).
     """
+    interpret = default_interpret(interpret)
     B, Sq, H, D = q.shape
     Sk = k.shape[1]
     assert k.shape == (B, Sk, H, D) and v.shape == (B, Sk, H, D)

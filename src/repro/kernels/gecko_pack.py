@@ -23,6 +23,7 @@ relayout Mosaic handles).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,8 +62,9 @@ def _group_grid(x: jax.Array, block_groups: int):
 @functools.partial(jax.jit, static_argnames=("block_groups", "interpret"))
 def gecko_pack(groups: jax.Array, *,
                block_groups: int = DEFAULT_BLOCK_GROUPS,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
     """Encode (G, 64) uint8 exponent groups -> (bases, widths, planes)."""
+    interpret = kref.default_interpret(interpret)
     groups, n, pad, block_groups = _group_grid(groups, block_groups)
     grid = (groups.shape[0] // block_groups,)
 
@@ -93,8 +95,9 @@ def gecko_pack(groups: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=("block_groups", "interpret"))
 def gecko_unpack(bases: jax.Array, planes: jax.Array, *,
                  block_groups: int = DEFAULT_BLOCK_GROUPS,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: Optional[bool] = None) -> jax.Array:
     """Decode (bases (G, 8), planes (G, 63)) -> (G, 64) uint8 exponents."""
+    interpret = kref.default_interpret(interpret)
     n = bases.shape[0]
     block_groups = min(block_groups, n)
     pad = (-n) % block_groups

@@ -11,12 +11,14 @@ Validated against repro.kernels.ref.mantissa_truncate in interpret mode
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import containers
+from repro.kernels.ref import default_interpret
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 256
@@ -38,8 +40,9 @@ def _quant_kernel(n_ref, x_ref, o_ref, *, spec: containers.FloatSpec):
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def mantissa_quantize(x: jax.Array, n: jax.Array, *,
                       block_rows: int = DEFAULT_BLOCK_ROWS,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: Optional[bool] = None) -> jax.Array:
     """Truncate mantissas of ``x`` to ``n`` bits (scalar int32, traced ok)."""
+    interpret = default_interpret(interpret)
     spec = containers.spec_for(x)
     orig_shape = x.shape
     flat = x.reshape(-1)

@@ -58,10 +58,8 @@ class Packed(NamedTuple):
 
 def mantissa_quantize(x: jax.Array, n) -> jax.Array:
     b = backend()
-    if b == "pallas":
-        return _mq.mantissa_quantize(x, n, interpret=False)
-    if b == "interpret":
-        return _mq.mantissa_quantize(x, n, interpret=True)
+    if b in ("pallas", "interpret"):
+        return _mq.mantissa_quantize(x, n, interpret=(b == "interpret"))
     return _ref.mantissa_truncate(x, n)
 
 

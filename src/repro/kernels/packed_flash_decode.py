@@ -51,6 +51,42 @@ from repro.kernels.flash_attention import NEG_INF, _vmem_scratch
 DEFAULT_BLOCK_L = 128
 
 
+def vmem_estimate(*, fields: kref.PackFields, H: int, KH: int, hd: int,
+                  block_l: int = DEFAULT_BLOCK_L, dtype=jnp.bfloat16) -> int:
+    """Static per-grid-step VMEM footprint model, in bytes.
+
+    Counts what the grid actually keeps resident: the double-buffered
+    in/out block windows (×2 for pipelining), the persistent f32
+    online-softmax scratch, and the dominant decode-body temporaries (the
+    expanded f32 K/V tiles, the int32 payload words mid-expansion, and the
+    f32 score/probability tile). Elementwise chains the Mosaic compiler
+    fuses are not charged — this is a budget model for the static
+    contract check (``repro.analysis.vmem``), not an allocator.
+
+    The paged variant has the same window shapes (its block table and
+    positions are scalar-prefetch operands living in SMEM), so one model
+    covers both entry points.
+    """
+    D = KH * hd
+    G = D // kref.GROUP
+    Dp = fields.nd_payload_cols(D)
+    rep = H // KH
+    isz = jnp.dtype(dtype).itemsize
+    psz = 1 if fields.dense else jnp.dtype(fields.payload_dtype).itemsize
+    blocks = 2 * (
+        4                                    # pos (1, 1) int32
+        + KH * rep * hd * isz                # q block
+        + 2 * block_l * Dp * psz             # k/v payload blocks
+        + 2 * block_l * G                    # k/v base blocks (uint8)
+        + KH * rep * hd * isz                # out block
+    )
+    scratch = 4 * (2 * KH * rep + KH * rep * hd)
+    temps = (2 * block_l * D * 4             # expanded f32 k, v tiles
+             + block_l * D * 4               # payload words as int32
+             + 2 * KH * rep * block_l * 4)   # s, p score tiles
+    return blocks + scratch + temps
+
+
 def _decode_kernel(pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, block_l: int, L: int, KH: int,
                    hd: int, window: Optional[int], softcap: Optional[float],
@@ -108,7 +144,7 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,
                         block_l: int = DEFAULT_BLOCK_L,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: Optional[bool] = None) -> jax.Array:
     """One-token attention over an SFP-packed (B, L, KH*hd) KV cache.
 
     q: (B, 1, H, hd); payload (B, L, fields.nd_payload_cols(D)) — 8/16-bit
@@ -120,6 +156,7 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
     None means an L-slot ring buffer (local attention). Returns
     (B, 1, H, hd) in q's dtype.
     """
+    interpret = kref.default_interpret(interpret)
     B, one, H, hd = q.shape
     assert one == 1, q.shape
     L, G = k_bases.shape[1], k_bases.shape[2]
@@ -238,7 +275,7 @@ def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
                        v_bases: jax.Array, tables: jax.Array,
                        pos: jax.Array, *, fields: kref.PackFields,
                        softcap: Optional[float] = None,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: Optional[bool] = None) -> jax.Array:
     """One-token attention over a *paged* SFP-packed KV block pool.
 
     The serving engine's continuous-batching decode step: pool parts are
@@ -257,6 +294,8 @@ def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
     Oracle: ``ref.paged_flash_decode`` — bit-exact in interpret mode.
     """
     from jax.experimental.pallas import tpu as pltpu
+
+    interpret = kref.default_interpret(interpret)
 
     B, one, H, hd = q.shape
     assert one == 1, q.shape

@@ -30,6 +30,19 @@ def mantissa_truncate(x: jax.Array, n) -> jax.Array:
     return containers.truncate_mantissa(x, n)
 
 
+def default_interpret(flag: Optional[bool] = None) -> bool:
+    """Resolve a kernel ``interpret`` argument: an explicit flag wins;
+    ``None`` auto-selects interpret mode exactly when not running on TPU.
+
+    Every Pallas entry point in this package defaults ``interpret=None``
+    and routes through here, so kernels compile for real on TPU without
+    each call site threading the flag (``repro.analysis`` lints for
+    hard-coded ``interpret=True`` defaults leaking outside tests)."""
+    if flag is not None:
+        return bool(flag)
+    return jax.default_backend() != "tpu"
+
+
 # ---------------------------------------------------------------------------
 # SFP fixed-width containers — oracles for kernels/sfp_pack.py
 #

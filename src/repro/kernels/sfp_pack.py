@@ -25,7 +25,7 @@ Bases are per-128-lane-group shared exponents, stored as (R, 1) uint8.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,30 @@ from repro.kernels import ref as kref
 
 LANES = kref.GROUP  # 128
 DEFAULT_BLOCK_ROWS = 64
+
+
+def vmem_estimate(*, fields: kref.PackFields,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  dtype=jnp.bfloat16, fused: bool = True) -> int:
+    """Static per-grid-step VMEM footprint model, in bytes.
+
+    Double-buffered in/out block windows plus the int32 working tiles of
+    ``_pack_body`` (bitcast words, exponent/mantissa fields, packed word —
+    modeled as four live (block_rows, 128) int32 tiles; the unpack
+    direction is bounded by the same count). Budget model for
+    ``repro.analysis.vmem``, not an allocator.
+    """
+    isz = jnp.dtype(dtype).itemsize
+    psz = jnp.dtype(fields.payload_dtype).itemsize
+    blocks = 2 * (
+        block_rows * LANES * isz             # x in
+        + block_rows * LANES * psz           # payload out
+        + block_rows * 1                     # bases out (uint8)
+    )
+    if fused:
+        blocks += 2 * 4                      # n scalar (1, 1) int32
+    temps = 4 * block_rows * LANES * 4
+    return blocks + temps
 
 
 def _pack_body(x, fields: kref.PackFields, spec, n=None):
@@ -115,12 +139,14 @@ def _row_grid(rows2d: jax.Array, block_rows: int):
 @functools.partial(jax.jit, static_argnames=("fields", "block_rows",
                                              "interpret"))
 def sfp_pack(x: jax.Array, *, fields: kref.PackFields,
-             block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+             block_rows: int = DEFAULT_BLOCK_ROWS,
+             interpret: Optional[bool] = None):
     """Pack ``x`` into (payload rows, per-row base exponents).
 
     Returns (payload (R, 128) uint8|uint16, bases (R, 1) uint8). Rows are
     128-lane groups of the flattened tensor (Gecko columns).
     """
+    interpret = kref.default_interpret(interpret)
     spec = containers.spec_for(x)
     rows2d, _pad = _to_rows(x)
     rows2d, rows, rpad, block_rows = _row_grid(rows2d, block_rows)
@@ -149,13 +175,14 @@ def sfp_pack(x: jax.Array, *, fields: kref.PackFields,
                                              "interpret"))
 def sfp_quantize_pack(x: jax.Array, n: jax.Array, *, fields: kref.PackFields,
                       block_rows: int = DEFAULT_BLOCK_ROWS,
-                      interpret: bool = True):
+                      interpret: Optional[bool] = None):
     """Fused Q(M, n) + pack: one VMEM pass, one HBM read of ``x``.
 
     Bit-exact against mantissa_quant.mantissa_quantize followed by
     sfp_pack; ``n`` is a traced scalar carried in SMEM (updated per step by
     Quantum Mantissa / BitChop).
     """
+    interpret = kref.default_interpret(interpret)
     spec = containers.spec_for(x)
     rows2d, _pad = _to_rows(x)
     rows2d, rows, rpad, block_rows = _row_grid(rows2d, block_rows)
@@ -188,7 +215,8 @@ def sfp_quantize_pack(x: jax.Array, n: jax.Array, *, fields: kref.PackFields,
 def sfp_unpack(payload: jax.Array, bases: jax.Array, *, shape: tuple,
                dtype, fields: kref.PackFields,
                block_rows: int = DEFAULT_BLOCK_ROWS,
-               interpret: bool = True) -> jax.Array:
+               interpret: Optional[bool] = None) -> jax.Array:
+    interpret = kref.default_interpret(interpret)
     spec = containers.spec_for(jnp.dtype(dtype))
 
     rows = payload.shape[0]

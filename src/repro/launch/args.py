@@ -1,0 +1,31 @@
+"""Shared argparse types for the launchers.
+
+Container and policy names are validated at parse time through the same
+registry parsers the lint layer uses (``codecs.validate_name`` /
+``policies.validate_name``), so a typo like ``--kv-container spf8``
+fails in the usage message — with the registry's did-you-mean — instead
+of deep inside model construction or, worse, at trace time.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def container_name(value: str) -> str:
+    """argparse ``type=`` for container-codec flags."""
+    from repro import codecs
+    try:
+        codecs.validate_name(value)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e))
+    return value
+
+
+def policy_name(value: str) -> str:
+    """argparse ``type=`` for precision-policy flags ('+'-composition ok)."""
+    from repro import policies
+    try:
+        policies.validate_name(value)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e))
+    return value

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import reduced
+from repro.launch.args import container_name
 from repro.models.model import DecoderModel
 from repro.serve import engine, faults, precision
 from repro.serve.scheduler import Request, Scheduler
@@ -177,13 +178,13 @@ def run_trace(args) -> None:
     print(json.dumps(report, indent=2))
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--preset", default="tiny", choices=["tiny", "small",
                                                          "full"])
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--kv-container", default=None,
+    ap.add_argument("--kv-container", default=None, type=container_name,
                     help="registry codec for the packed KV cache (sfp8, "
                     "sfp16, dense sfp-m2e4, ...); None = raw bf16 cache")
     ap.add_argument("--policy-ckpt", default=None,
@@ -229,6 +230,7 @@ def main():
     ap.add_argument("--no-integrity", action="store_true",
                     help="disable per-block checksum verification")
     ap.add_argument("--degraded-container", default=None,
+                    type=container_name,
                     help="narrower geometry for pressure-downshifted "
                     "admissions (enables the pressure controller)")
     ap.add_argument("--pressure-low", type=float, default=0.25,
@@ -244,7 +246,11 @@ def main():
                     help="per-step probability of arming one transient "
                     "admission alloc failure")
     ap.add_argument("--fault-seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     if args.trace:
         run_trace(args)

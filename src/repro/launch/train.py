@@ -25,6 +25,7 @@ import numpy as np
 
 from repro import codecs, configs, policies
 from repro.configs.base import reduced
+from repro.launch.args import container_name, policy_name
 from repro.data import pipeline, synthetic
 from repro.models.model import DecoderModel
 from repro.optim import adamw
@@ -79,16 +80,17 @@ def build(args):
     return cfg, model, tc, batch, seq
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--preset", default="tiny",
                     choices=["tiny", "small", "full"])
     ap.add_argument("--policy", default="qm", metavar="NAME[+NAME...]",
+                    type=policy_name,
                     help="precision policy from the registry "
                          f"({'/'.join(policies.names())}), composable with "
                          "'+', e.g. qm+qe")
-    ap.add_argument("--container", default="bit_exact",
+    ap.add_argument("--container", default="bit_exact", type=container_name,
                     help="stash codec: any registered name "
                          f"({'/'.join(codecs.names())}) or a parametric "
                          "dense geometry like sfp-m2e4")
@@ -117,8 +119,13 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--metrics", default=None)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    codecs.get(args.container)  # resolve early: typos fail with the registry
+    return ap
+
+
+def main():
+    # Container/policy typos fail in the usage message: both flags carry
+    # registry-backed argparse validators (launch/args.py).
+    args = build_parser().parse_args()
 
     cfg, model, tc, batch, seq = build(args)
     print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "

@@ -28,7 +28,8 @@ available to the model, train step, launchers, and benchmarks at once.
 from repro.policies.base import (Policy, PolicyState, PrecisionDecision,
                                  ScopeDims, apply_decision_ste, coerce,
                                  full_decision, get, modeled_footprint,
-                                 names, register, ste_truncate)
+                                 names, register, ste_truncate,
+                                 validate_name)
 from repro.policies.afloat import AFloatPolicy
 from repro.policies.bitwave import BitChopPolicy, BitWavePolicy
 from repro.policies.composite import CompositePolicy
@@ -47,6 +48,7 @@ __all__ = [
     "Policy", "PolicyState", "PrecisionDecision", "ScopeDims",
     "apply_decision_ste", "coerce", "full_decision", "get",
     "modeled_footprint", "names", "register", "ste_truncate",
+    "validate_name",
     "NonePolicy", "StaticPolicy", "QMPolicy", "QEPolicy", "AFloatPolicy",
     "BitChopPolicy", "BitWavePolicy", "CompositePolicy",
 ]

@@ -278,6 +278,34 @@ def names() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def validate_name(name: str) -> Tuple[str, ...]:
+    """Parse a policy name / '+'-composition *without* constructing it.
+
+    Returns the tuple of sub-policy names; raises ``ValueError`` with a
+    did-you-mean suggestion on an unknown part or a duplicate. Shared by
+    the static-analysis lint rule (``repro.analysis``) and the launchers'
+    argparse validators, so typos fail at the CLI/lint layer with the same
+    grammar the registry enforces at construction time.
+    """
+    import difflib
+
+    parts = tuple(p.strip() for p in name.split("+") if p.strip())
+    if not parts:
+        raise ValueError(f"empty precision-policy name {name!r}")
+    for p in parts:
+        if p not in _REGISTRY:
+            hint = difflib.get_close_matches(p, names(), n=1, cutoff=0.5)
+            msg = f"unknown precision policy {p!r}"
+            if hint:
+                msg += f"; did you mean {hint[0]!r}?"
+            msg += (f" (registered: {list(names())}, composable with '+', "
+                    f"e.g. qm+qe)")
+            raise ValueError(msg)
+    if len(set(parts)) != len(parts):
+        raise ValueError(f"duplicate sub-policy in {name!r}")
+    return parts
+
+
 def _construct(name: str, kwargs: Dict[str, Any]):
     cls = _REGISTRY[name]
     fields = {f.name for f in dataclasses.fields(cls)}

@@ -7,3 +7,10 @@ ICI_BW_PER_LINK = 50e9        # bytes/s per link
 CHIPS_SINGLE_POD = 256
 CHIPS_MULTI_POD = 512
 HBM_PER_CHIP = 16 * 2 ** 30   # 16 GiB
+
+# Per-TensorCore VMEM. ~16 MiB on v4/v5e-class parts; kernels must fit
+# their double-buffered block windows + scratch well under this.
+VMEM_PER_CORE = 16 * 2 ** 20
+# Static-analysis budget: leave headroom for the compiler's own spills,
+# semaphores, and anything the estimator's materialization model misses.
+VMEM_BUDGET_FRACTION = 0.9

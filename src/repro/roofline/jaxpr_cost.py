@@ -97,6 +97,33 @@ def _subjaxpr(params, *names):
     return None
 
 
+def subjaxprs(eqn):
+    """Yield every jaxpr-valued param of ``eqn`` as an *open* jaxpr.
+
+    Covers scan/while bodies, pjit/remat/custom-vjp calls, cond branch
+    lists, and pallas_call kernel bodies — any param that is a ClosedJaxpr,
+    a bare Jaxpr, or a list/tuple of either. Shared by the cost model below
+    and the static contract analyzers in ``repro.analysis``.
+    """
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for b in vs:
+            if hasattr(b, "jaxpr") and hasattr(b.jaxpr, "eqns"):
+                yield b.jaxpr          # ClosedJaxpr
+            elif hasattr(b, "eqns"):
+                yield b                # open Jaxpr (e.g. pallas_call body)
+
+
+def iter_eqns(jaxpr):
+    """Depth-first walk over every eqn of ``jaxpr`` including all nested
+    sub-jaxprs. This is the one traversal the jaxpr contract checks
+    (``repro.analysis.contracts``) build on."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in subjaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
 def _cost_of_eqn(eqn) -> Cost:
     prim = eqn.primitive.name
     if prim == "dot_general":

@@ -1,0 +1,19 @@
+"""A representative clean module: every rule stays silent here."""
+import jax
+import jax.numpy as jnp
+
+from repro import codecs, policies
+
+
+def step(x):
+    y = jnp.mean(x) * 2
+    return jnp.where(y > 0, y, -y)
+
+
+loss = jax.jit(step)(jnp.zeros((4,)))
+host_loss = float(loss)  # outside any traced scope: fine
+
+codec = codecs.get("sfp8")
+kv_container = "sfp-m2e4"
+policy = "qm+qe"
+resolved = policies.validate_name(policy)

@@ -1,0 +1,13 @@
+"""Seeded violations: container-name literals the registry cannot resolve."""
+import argparse
+
+from repro import codecs
+
+codec = codecs.get("sfp9")  # LINT: container-name
+kv_container = "spf8"  # LINT: container-name
+opts = dict(container="gecko9")  # LINT: container-name
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--kv-container", default="sfp_bogus")  # LINT: container-name
+good = codecs.get("sfp8")
+fine_container = "sfp-m2e4"

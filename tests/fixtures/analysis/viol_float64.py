@@ -1,0 +1,8 @@
+"""Seeded violations: float64 introductions (containers assume <=32-bit)."""
+import jax.numpy as jnp
+from jax import config
+
+x = jnp.zeros((4,), dtype=jnp.float64)  # LINT: float64
+y = x.astype("float64")  # LINT: float64
+config.update("jax_enable_x64", True)  # LINT: float64
+ok = jnp.zeros((4,), dtype=jnp.float32)

@@ -1,0 +1,7 @@
+"""Seeded violation: pinning the kernel backend outside kernels/ops.py."""
+from repro.kernels import ops
+
+
+def setup_model():
+    ops.force_backend("ref")  # LINT: force-backend-leak
+    return None

@@ -1,0 +1,21 @@
+"""Seeded violations: device->host syncs inside a traced scope."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def step(x):
+    loss = jnp.mean(x)
+    scalar = loss.item()  # LINT: host-sync-in-jit
+    host = np.asarray(loss)  # LINT: host-sync-in-jit
+    fetched = jax.device_get(loss)  # LINT: host-sync-in-jit
+    lr = float(jnp.exp(loss))  # LINT: host-sync-in-jit
+    return loss + scalar + host.sum() + fetched + lr
+
+
+out = jax.jit(step)(jnp.zeros((4,)))
+
+
+def host_side(x):
+    # NOT traced: the same calls are fine outside a jitted function.
+    return float(jnp.mean(x))

@@ -1,0 +1,7 @@
+"""Seeded violations: precision-policy names that do not parse."""
+from repro import policies
+
+p = policies.get("qmm")  # LINT: policy-name
+train_policy = "qm+qm"  # LINT: policy-name
+composed = dict(policy="qm+qx")  # LINT: policy-name
+good_policy = "qm+qe"

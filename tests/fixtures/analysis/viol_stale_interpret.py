@@ -1,0 +1,13 @@
+"""Seeded violations: hard-coded interpret=True instead of auto-resolve."""
+
+
+def kernel_call(x, interpret=True):  # LINT: stale-interpret-flag
+    return x
+
+
+y = kernel_call(0, interpret=True)  # LINT: stale-interpret-flag
+
+
+def fine(x, interpret=None):
+    # The sanctioned shape: default None, resolved via default_interpret.
+    return x

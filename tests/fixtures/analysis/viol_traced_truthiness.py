@@ -1,0 +1,18 @@
+"""Seeded violations: Python control flow on traced values."""
+import jax
+import jax.numpy as jnp
+
+
+def body(x):
+    if jnp.any(x > 0):  # LINT: traced-truthiness
+        x = x + 1
+    while jnp.max(x) < 4:  # LINT: traced-truthiness
+        x = x * 2
+    assert jnp.isfinite(x).all()  # LINT: traced-truthiness
+    if x.ndim == 2:
+        # Shape-level branch: static under trace, not a violation.
+        x = x[0]
+    return x
+
+
+out = jax.jit(body)(jnp.ones((3,)))
