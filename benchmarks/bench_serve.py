@@ -146,6 +146,7 @@ def run(quick: bool = False, bursts=BURSTS) -> dict:
                 burst_stats = {}
                 for K in bursts:
                     ttft_box = {}
+                    sched_box = {}
 
                     def paged_run():
                         ttft_box.clear()
@@ -154,15 +155,26 @@ def run(quick: bool = False, bursts=BURSTS) -> dict:
                             eng, on_token=lambda uid, tok, done:
                             ttft_box.setdefault(
                                 uid, time.perf_counter() - t0))
+                        sched_box["s"] = sched
                         return sched.run(
                             [Request(uid=i, prompt=prompts[i],
                                      max_new=MAX_NEW) for i in range(B)],
                             burst=K)
 
                     dt_k = timed(paged_run)
+                    # Percentiles from the scheduler's own obs histograms
+                    # (the timed run's scheduler — warm caches, fresh
+                    # registry per run).
+                    sh = sched_box["s"]
                     burst_stats[str(K)] = {
                         "tok_per_s": toks / dt_k,
                         "ttft_s": float(np.mean(list(ttft_box.values()))),
+                        **{f"ttft_s_p{q}": round(
+                            sh._h_ttft.percentile(q / 100), 6)
+                           for q in (50, 95, 99)},
+                        **{f"token_latency_s_p{q}": round(
+                            sh._h_tok.percentile(q / 100), 6)
+                           for q in (50, 95, 99)},
                     }
                 best_k = max(burst_stats,
                              key=lambda k: burst_stats[k]["tok_per_s"])
@@ -283,6 +295,12 @@ def run_degraded(quick: bool = False) -> dict:
             s = sched.stats
             return {
                 "tok_per_s": s.emitted_tokens / max(dt, 1e-9),
+                **{f"ttft_s_p{q}": round(
+                    sched._h_ttft.percentile(q / 100), 6)
+                   for q in (50, 95, 99)},
+                **{f"token_latency_s_p{q}": round(
+                    sched._h_tok.percentile(q / 100), 6)
+                   for q in (50, 95, 99)},
                 "wall_s": round(dt, 3),
                 "emitted_tokens": s.emitted_tokens,
                 "mean_ttft_steps": (round(float(np.mean(
@@ -337,6 +355,66 @@ def run_degraded(quick: bool = False) -> dict:
     }
 
 
+def run_obs_overhead(quick: bool = False) -> dict:
+    """Price the telemetry: the same paged workload with the default Obs
+    (registry only — always on) vs the full surface (span tracer + a
+    precision-timeline entry every scheduler step). Best-of-3 each on one
+    warm engine. Asserted acceptance: full instrumentation keeps >= 95%
+    of baseline tok/s — observability must never become the bottleneck it
+    is supposed to find.
+    """
+    import jax
+
+    from repro import configs
+    from repro import obs as obs_mod
+    from repro.configs.base import reduced
+    from repro.kernels import ops
+    from repro.models.model import DecoderModel
+    from repro.serve import engine
+    from repro.serve.scheduler import Request, Scheduler
+
+    B = 2 if quick else 4
+    K = 8
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="bfloat16")
+    model = DecoderModel(cfg, kv_container="sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(5)
+    prompts = rng.randint(0, cfg.vocab, size=(B, PROMPT_LEN)
+                          ).astype(np.int32)
+    toks = B * MAX_NEW
+
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=B,
+                                 max_len=PROMPT_LEN + MAX_NEW)
+
+        def one(full: bool) -> float:
+            obs = obs_mod.Obs(trace=True, timeline=True) if full else None
+            sched = Scheduler(eng, obs=obs)
+            t0 = time.perf_counter()
+            sched.run([Request(uid=i, prompt=prompts[i], max_new=MAX_NEW)
+                       for i in range(B)], burst=K)
+            return toks / (time.perf_counter() - t0)
+
+        one(False)  # compile + warm caches
+        base = max(one(False) for _ in range(3))
+        inst = max(one(True) for _ in range(3))
+    finally:
+        ops.force_backend(None)
+
+    ratio = inst / base
+    assert ratio >= 0.95, (
+        f"full telemetry cost more than 5% tok/s: {inst:.1f} vs "
+        f"{base:.1f} baseline (ratio {ratio:.3f})")
+    return {
+        "B": B, "burst": K, "best_of": 3,
+        "tok_per_s_baseline": round(base, 2),
+        "tok_per_s_instrumented": round(inst, 2),
+        "ratio": round(ratio, 4),
+    }
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -352,6 +430,7 @@ def main(argv=None) -> None:
     bursts = (tuple(int(k) for k in args.burst.split(","))
               if args.burst else BURSTS)
     r = run(quick=args.quick, bursts=bursts)
+    r["observability_overhead"] = run_obs_overhead(quick=args.quick)
     if args.degraded:
         r["degraded_mode"] = run_degraded(quick=args.quick)
     OUT.write_text(json.dumps(r, indent=2))

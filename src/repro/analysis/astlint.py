@@ -25,6 +25,12 @@ anything is traced:
                        validated without construction).
   float64              jnp.float64 / astype("float64") / jax_enable_x64 —
                        this codebase's containers assume <= 32-bit floats.
+  obs-no-hot-path-sync telemetry mutation (obs/tracer/timeline .inc/
+                       .observe/.emit/...) inside a traced scope. The
+                       repro.obs API is host-side Python: calling it from
+                       jitted code either burns a trace-time constant or
+                       forces a host callback. Record at the host
+                       boundary after the step returns.
 
 Two passes per module: collect the names of functions that enter a traced
 context (arguments to jit-like wrappers, including through
@@ -59,6 +65,14 @@ _CONTAINER_KWARGS = {"container", "kv_container", "degraded_container",
                      "grad_codec", "stash_container", "ckpt_container"}
 _CONTAINER_RE = r"(sfp|gecko|bit_?exact)[\w+-]*"
 
+# Telemetry surface (repro.obs). Any of these methods invoked on a
+# receiver whose attribute chain passes through an obs handle is a
+# host-side mutation — illegal inside a traced scope.
+_OBS_MUTATORS = {"inc", "dec", "set", "observe", "emit", "event",
+                 "instant", "begin", "end", "complete", "record_train",
+                 "record_serve", "write"}
+_OBS_RECEIVERS = {"obs", "tracer", "timeline", "registry", "events"}
+
 
 def _dotted(node) -> str:
     """Best-effort dotted name of an expression ('jax.lax.scan', 'f')."""
@@ -77,6 +91,27 @@ def _last(dotted: str) -> str:
 
 def _root(dotted: str) -> str:
     return dotted.split(".", 1)[0]
+
+
+def _chain_parts(node) -> Set[str]:
+    """Every identifier on a receiver chain, walking through attribute
+    access, calls, and subscripts: ``self.obs.tracer``,
+    ``obs.registry.counter(...).labels(...)``, ``handles["ttft"]`` all
+    surface their intermediate names."""
+    parts: Set[str] = set()
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.add(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Name):
+            parts.add(node.id)
+            return parts
+        else:
+            return parts
 
 
 def _callable_names(node) -> Iterable[str]:
@@ -223,6 +258,14 @@ class _Lint(ast.NodeVisitor):
                     self._emit("host-sync-in-jit", node,
                                f"{d}({inner}(...)) concretizes a traced "
                                "value (device->host sync)")
+            if (last in _OBS_MUTATORS
+                    and isinstance(node.func, ast.Attribute)
+                    and _chain_parts(node.func.value) & _OBS_RECEIVERS):
+                self._emit("obs-no-hot-path-sync", node,
+                           f"telemetry mutation .{last}() inside a traced "
+                           "function records a trace-time constant (or "
+                           "forces a host callback); record at the host "
+                           "boundary after the step returns")
 
         self._check_names_in_call(node, d, last)
         self.generic_visit(node)

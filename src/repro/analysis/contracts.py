@@ -314,6 +314,34 @@ def check_recompile(container: str = "sfp8") -> List[Finding]:
                 "recompile-guard", f"generate:{key[0]}",
                 f"{key} executable re-traced across same-shape calls "
                 f"(cache size {n})"))
+
+    # Instrumentation must be trace-invisible: a fully observed scheduler
+    # run (metrics + span tracer + precision timeline live) over a warm
+    # engine must add zero executables beyond what the bare run compiled.
+    from repro import obs as obs_mod
+    from repro.serve.scheduler import Request, Scheduler
+
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=100 + i,
+                    prompt=rng.randint(0, cfg.vocab, size=6).astype(np.int32),
+                    max_new=4) for i in range(3)]
+    before = _cache_size(engine._step)
+    full_obs = obs_mod.Obs(trace=True, timeline=True)
+    Scheduler(engine, obs=full_obs).run(reqs, burst=2)
+    n = _cache_size(engine._step)
+    if n is not None and n != before:
+        out.append(_finding(
+            "recompile-guard", "Scheduler[obs]",
+            f"instrumented scheduler re-traced the decode step "
+            f"(cache size {before} -> {n}); obs calls must stay on the "
+            "host side of the step boundary"))
+    for k, fn in engine._bursts.items():
+        n = _cache_size(fn)
+        if n is not None and n != 1:
+            out.append(_finding(
+                "recompile-guard", "Scheduler[obs]",
+                f"instrumented scheduler re-traced the K={k} burst "
+                f"(cache size {n})"))
     return out
 
 

@@ -37,12 +37,14 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro import obs as obs_mod
 from repro.configs.base import reduced
 from repro.launch.args import container_name
 from repro.models.model import DecoderModel
@@ -124,16 +126,35 @@ def run_trace(args) -> None:
     if args.degraded_container:
         pressure = precision.PressureController(low=args.pressure_low,
                                                 high=args.pressure_high)
+    obs = obs_mod.Obs(metrics_path=args.metrics_out,
+                      events_path=args.events_out,
+                      trace_path=args.trace_out,
+                      timeline_path=args.timeline_out)
     sched = Scheduler(eng, on_token=lambda uid, tok, done:
                       ttft.setdefault(uid, sched.stats.decode_steps),
                       max_pending=args.max_pending,
                       storm_guard=args.storm_guard,
-                      pressure=pressure)
+                      pressure=pressure, obs=obs)
     hook = None
     if args.inject_flip_p or args.inject_alloc_p:
         hook = faults.FaultInjector(eng, seed=args.fault_seed,
                                     p_flip=args.inject_flip_p,
                                     p_alloc_fail=args.inject_alloc_p)
+    # --profile-steps N brackets jax.profiler around scheduler steps
+    # [1, 1+N) — step 0 is excluded so the capture skips compile time.
+    prof = {"on": False}
+
+    def step_hook(i):
+        if args.profile_steps:
+            if not prof["on"] and i == 1:
+                Path(args.profile_dir).mkdir(parents=True, exist_ok=True)
+                jax.profiler.start_trace(args.profile_dir)
+                prof["on"] = True
+            elif prof["on"] and i >= 1 + args.profile_steps:
+                jax.profiler.stop_trace()
+                prof["on"] = False
+        if hook is not None:
+            hook(i)
 
     # Virtual clock: admission sees arrivals as wall-clock-free step time
     # (one scheduler step advances it by --step-dt), so the same trace
@@ -145,7 +166,12 @@ def run_trace(args) -> None:
         return clock["t"]
 
     t0 = time.time()
-    out = sched.run(reqs, now_fn=now, burst=args.burst, fault_hook=hook)
+    try:
+        out = sched.run(reqs, now_fn=now, burst=args.burst,
+                        fault_hook=step_hook)
+    finally:
+        if prof["on"]:
+            jax.profiler.stop_trace()
     dt = time.time() - t0
     total = int(sum(len(v) for v in out.values()))
     s = sched.stats
@@ -160,6 +186,14 @@ def run_trace(args) -> None:
         "preemptions": s.preemptions,
         "mean_ttft_steps": round(float(np.mean(list(ttft.values()))), 2)
         if ttft else None,
+        # Wall-clock latency percentiles from the obs histograms
+        # (bucket-resolution: log-spaced bounds, see obs/registry.py).
+        "ttft_s_p50": round(sched._h_ttft.percentile(0.50), 6),
+        "ttft_s_p95": round(sched._h_ttft.percentile(0.95), 6),
+        "ttft_s_p99": round(sched._h_ttft.percentile(0.99), 6),
+        "token_latency_s_p50": round(sched._h_tok.percentile(0.50), 6),
+        "token_latency_s_p95": round(sched._h_tok.percentile(0.95), 6),
+        "token_latency_s_p99": round(sched._h_tok.percentile(0.99), 6),
         "pool_blocks": pool.num_blocks, "pool_peak_used": pool.peak_used,
         "block_l": eng.block_l, "max_slots": eng.max_slots,
         "max_len": eng.max_len,
@@ -175,6 +209,7 @@ def run_trace(args) -> None:
         "quarantined_blocks": pool.quarantined,
         "injected_faults": hook.counts() if hook else {},
     }
+    obs.close()  # writes --metrics-out / --trace-out, closes streams
     print(json.dumps(report, indent=2))
 
 
@@ -246,6 +281,23 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-step probability of arming one transient "
                     "admission alloc failure")
     ap.add_argument("--fault-seed", type=int, default=0)
+    # observability (repro.obs)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write Prometheus-text metrics here at exit "
+                    "(counters + TTFT/latency histograms)")
+    ap.add_argument("--events-out", default=None,
+                    help="structured-event JSONL (quarantine/scrub/"
+                    "corruption lifecycle)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON of per-request "
+                    "span chains here (opens in Perfetto)")
+    ap.add_argument("--timeline-out", default=None,
+                    help="stream the per-step pool geometry/occupancy/"
+                    "pressure timeline (JSONL)")
+    ap.add_argument("--profile-steps", type=int, default=None, metavar="N",
+                    help="bracket jax.profiler.trace around N scheduler "
+                    "steps (from step 1, past compile)")
+    ap.add_argument("--profile-dir", default="experiments/traces/serve")
     return ap
 
 

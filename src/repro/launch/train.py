@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codecs, configs, policies
+from repro import obs as obs_mod
 from repro.configs.base import reduced
 from repro.launch.args import container_name, policy_name
 from repro.data import pipeline, synthetic
@@ -117,7 +118,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "(default: --ckpt-every)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
-    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--metrics", default=None,
+                    help="per-step metrics JSONL (the obs event stream)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write Prometheus-text metrics (step-time "
+                         "histogram, failure counters) here at exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON of train-step "
+                         "spans here at exit (opens in Perfetto)")
+    ap.add_argument("--timeline-out", default=None,
+                    help="stream the per-layer precision timeline "
+                         "(JSONL; one entry per --timeline-every steps)")
+    ap.add_argument("--timeline-every", type=int, default=10)
+    ap.add_argument("--profile-steps", type=int, default=None,
+                    metavar="N",
+                    help="bracket jax.profiler.trace around N steps "
+                         "(starting at --profile-start)")
+    ap.add_argument("--profile-start", type=int, default=1)
+    ap.add_argument("--profile-dir",
+                    default="experiments/traces/train")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -159,11 +178,24 @@ def main():
                 "decision": {"man_bits": float(d["man_bits"]),
                              "exp_bits": float(d["exp_bits"])}}
 
+    obs = obs_mod.Obs(metrics_path=args.metrics_out,
+                      trace_path=args.trace_out,
+                      timeline_path=args.timeline_out)
+
+    def timeline_fn(state):
+        # Late-binds `model`: the per-layer-stash loop rebuilds the model
+        # each refresh segment, and the timeline must follow the live one.
+        return model.policy.layer_decisions(state.pstate, model.dims)
+
     lc = loop_mod.LoopConfig(
         total_steps=args.steps, ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir, metrics_file=args.metrics,
         log_every=max(1, args.steps // 50),
-        ckpt_extra=ckpt_extra)
+        ckpt_extra=ckpt_extra, obs=obs, timeline_fn=timeline_fn,
+        timeline_every=args.timeline_every,
+        profile_steps=(None if args.profile_steps is None
+                       else (args.profile_start, args.profile_steps)),
+        profile_dir=args.profile_dir)
     if args.per_layer_stash:
         # Per-layer realized containers: the stash plan is static under
         # jit, so the loop runs in segments — every refresh boundary the
@@ -207,6 +239,7 @@ def main():
     fp = policies.modeled_footprint(model.policy, res.state.pstate,
                                     model.dims)
     print("footprint " + json.dumps({k: round(v, 4) for k, v in fp.items()}))
+    obs.close()  # writes --metrics-out / --trace-out, closes the timeline
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ become exact all-reduces), recurrent-state widths over `model`.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -273,6 +274,16 @@ class PagedEngine:
         self.integrity = bool(integrity)
         self._sums_fn = jax.jit(self._block_sums_fn)
         self.expected_sums = np.zeros(self.pool.num_blocks + 1, np.uint32)
+        # Telemetry sink (repro.obs.Obs); the driving Scheduler installs
+        # its own. All recording happens at host boundaries — after the
+        # jitted call's outputs were pulled to numpy — never inside
+        # traced code (enforced by the obs-no-hot-path-sync lint).
+        self.obs: Optional[Any] = None
+
+    def _observe(self, name: str, help: str, seconds: float) -> None:
+        if self.obs is not None:
+            self.obs.registry.histogram(name, help,
+                                        unit="s").observe(seconds)
 
     # -- device memory ---------------------------------------------------
 
@@ -345,8 +356,13 @@ class PagedEngine:
         ids = [int(p) for p in ids if p != _pool.TRASH_BLOCK]
         if not self.integrity or not ids:
             return []
+        t0 = time.perf_counter()
         sums = self.block_checksums()
-        return [p for p in ids if sums[p] != self.expected_sums[p]]
+        bad = [p for p in ids if sums[p] != self.expected_sums[p]]
+        self._observe("serve_verify_seconds",
+                      "block checksum verification wall time",
+                      time.perf_counter() - t0)
+        return bad
 
     def refresh_checksums(self, ids) -> None:
         """Record current checksums as expected — call after every
@@ -389,6 +405,8 @@ class PagedEngine:
                 a.at[(slice(None), int(phys)) if a.ndim == 4
                      else int(phys)].set(0) for a in kv))
         self.refresh_checksums([phys])
+        if self.obs is not None:
+            self.obs.event("scrub_block", block=int(phys))
 
     # -- prefill ---------------------------------------------------------
 
@@ -511,6 +529,7 @@ class PagedEngine:
         scattering, so the stored planes carry the narrow geometry's
         values while keeping the pool's fixed shapes.
         """
+        t0 = time.perf_counter()
         prompt = np.asarray(prompt)
         assert prompt.ndim == 1 and prompt.size >= 1, prompt.shape
         if prompt.size >= self.max_len:
@@ -532,7 +551,11 @@ class PagedEngine:
         if self.integrity:
             self.refresh_checksums([p for p in ids_np
                                     if p != _pool.TRASH_BLOCK])
-        return int(jnp.argmax(logits[0, -1]))
+        tok = int(jnp.argmax(logits[0, -1]))
+        self._observe("serve_prefill_seconds",
+                      "prefill-into-slot wall time (incl. scatter)",
+                      time.perf_counter() - t0)
+        return tok
 
     # -- decode ----------------------------------------------------------
 
@@ -554,13 +577,18 @@ class PagedEngine:
         returned tokens are meaningless. Returns ((max_slots,) next
         tokens, (max_slots,) bool non-finite-logit flags).
         """
+        t0 = time.perf_counter()
         tables = jnp.asarray(self.pool.tables)
         nxt, bad, self.mem = self._step(
             self.params, self.mem, tables,
             jnp.asarray(toks, jnp.int32)[:, None],
             jnp.asarray(pos, jnp.int32))
         self.decode_steps += 1
-        return np.asarray(nxt), np.asarray(bad)
+        out = np.asarray(nxt), np.asarray(bad)
+        self._observe("serve_decode_seconds",
+                      "decode dispatch wall time (whole burst)",
+                      time.perf_counter() - t0)
+        return out
 
     def _make_burst(self, K: int):
         """Compiled K-step decode burst: one ``lax.scan`` executable.
@@ -609,9 +637,14 @@ class PagedEngine:
         fn = self._bursts.get(K)
         if fn is None:
             fn = self._bursts[K] = self._make_burst(K)
+        t0 = time.perf_counter()
         tables = jnp.asarray(self.pool.tables)
         out, bad, self.mem = fn(self.params, self.mem, tables,
                                 jnp.asarray(toks, jnp.int32)[:, None],
                                 jnp.asarray(pos, jnp.int32))
         self.decode_steps += K
-        return np.asarray(out), np.asarray(bad)
+        res = np.asarray(out), np.asarray(bad)
+        self._observe("serve_decode_seconds",
+                      "decode dispatch wall time (whole burst)",
+                      time.perf_counter() - t0)
+        return res

@@ -110,6 +110,26 @@ class BlockPool:
                               np.int32)
         self.peak_used = 0
         self._peak_bytes = 0
+        # Telemetry sink (repro.obs.Obs), installed by the scheduler;
+        # watermark gauges refresh on every alloc/free so the exported
+        # metrics track occupancy without polling.
+        self.obs: Optional[object] = None
+
+    def _obs_watermarks(self) -> None:
+        obs = self.obs
+        if obs is None:
+            return
+        reg = obs.registry
+        reg.gauge("pool_used_blocks", "allocated physical blocks"
+                  ).set(self.used_blocks)
+        reg.gauge("pool_free_blocks", "free-list physical blocks"
+                  ).set(self.free_blocks)
+        reg.gauge("pool_quarantined_blocks",
+                  "blocks held out pending scrub"
+                  ).set(len(self._quarantined))
+        reg.gauge("pool_used_bytes",
+                  "dense-packed bytes live (per-slot geometry pricing)",
+                  unit="B").set(self.used_bytes)
 
     # -- accounting ------------------------------------------------------
 
@@ -240,6 +260,7 @@ class BlockPool:
             owned.append(phys)
         self.peak_used = max(self.peak_used, self.used_blocks)
         self._peak_bytes = max(self._peak_bytes, self.used_bytes)
+        self._obs_watermarks()
         return True
 
     def free_slot(self, slot: int, quarantine: Iterable[int] = ()) -> int:
@@ -272,6 +293,9 @@ class BlockPool:
         self._free.extend(reversed(recycled))
         self._quarantined.extend(sorted(bad))
         self.tables[slot, :] = TRASH_BLOCK
+        if bad and self.obs is not None:
+            self.obs.event("quarantine", slot=slot, blocks=sorted(bad))
+        self._obs_watermarks()
         return len(recycled)
 
     def rehabilitate(self, phys: int) -> None:
@@ -285,6 +309,9 @@ class BlockPool:
             raise ValueError(f"block {phys} is not quarantined")
         self._quarantined.remove(phys)
         self._free.append(phys)
+        if self.obs is not None:
+            self.obs.event("rehabilitate", block=phys)
+        self._obs_watermarks()
 
     def reset(self) -> None:
         for slot in list(self._owned):

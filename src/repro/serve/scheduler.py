@@ -55,11 +55,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.serve.engine import PagedEngine
 from repro.serve.pool import TRASH_BLOCK, blocks_for
 
@@ -105,23 +107,58 @@ class _Running:
     emitted: List[int] = dataclasses.field(default_factory=list)
 
 
-@dataclasses.dataclass
 class SchedulerStats:
-    admitted: int = 0
-    finished: int = 0
-    preemptions: int = 0
-    decode_steps: int = 0
-    emitted_tokens: int = 0
-    deadline_misses: int = 0    # expired requests (pending or running)
-    shed: int = 0               # load-shed by the bounded queue
-    cancelled: int = 0
-    recoveries: int = 0         # recompute-from-prompt recoveries
-    failed: int = 0             # gave up after max_recoveries
-    corrupt_blocks: int = 0     # checksum mismatches detected
-    nan_guard_trips: int = 0    # non-finite logits caught
-    alloc_failures: int = 0     # alloc_upto refused a granted admission
-    recompute_tokens: int = 0   # prompt tokens re-prefilled after requeue
-    downshifted: int = 0        # admissions at the degraded geometry
+    """Read-only compat view over the obs metrics registry.
+
+    The counters themselves now live in ``repro.obs`` (labeled,
+    Prometheus-exportable); this struct keeps the attribute surface every
+    existing test/bench/report reads. Each attribute is a property summing
+    the backing family, so ``sched.stats.shed`` and the metrics export can
+    never disagree — and the terminal-outcome identity (ok + expired +
+    cancelled + shed + failed == submitted) is structural, because every
+    terminal path increments exactly one ``serve_requests_total{outcome}``
+    series inside ``Scheduler._record``.
+    """
+
+    # attribute -> serve_requests_total outcome label
+    _OUTCOMES = {"finished": "ok", "deadline_misses": "expired",
+                 "shed": "shed", "cancelled": "cancelled",
+                 "failed": "failed"}
+    # attribute -> unlabeled counter family
+    _COUNTERS = {"preemptions": "serve_preemptions_total",
+                 "decode_steps": "serve_decode_steps_total",
+                 "emitted_tokens": "serve_tokens_total",
+                 "recoveries": "serve_recoveries_total",
+                 "corrupt_blocks": "serve_corrupt_blocks_total",
+                 "nan_guard_trips": "serve_nan_guard_trips_total",
+                 "alloc_failures": "serve_alloc_failures_total",
+                 "recompute_tokens": "serve_recompute_tokens_total",
+                 "downshifted": "serve_downshifted_total",
+                 "submitted": "serve_submitted_total"}
+
+    def __init__(self, registry: obs_mod.MetricsRegistry):
+        self._reg = registry
+
+    def __getattr__(self, name: str):
+        reg = object.__getattribute__(self, "_reg")
+        outcome = SchedulerStats._OUTCOMES.get(name)
+        if outcome is not None:
+            fam = reg.counter("serve_requests_total", labels=("outcome",))
+            return int(fam.total(outcome=outcome))
+        fam_name = SchedulerStats._COUNTERS.get(name)
+        if fam_name is not None:
+            return int(reg.counter(fam_name).value)
+        if name == "admitted":
+            fam = reg.counter("serve_admitted_total", labels=("geometry",))
+            return int(fam.total())
+        raise AttributeError(name)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: getattr(self, k)
+                for k in (*self._OUTCOMES, *self._COUNTERS, "admitted")}
+
+    def __repr__(self) -> str:
+        return f"SchedulerStats({self.as_dict()})"
 
 
 class Scheduler:
@@ -133,7 +170,8 @@ class Scheduler:
                  max_recoveries: int = 3,
                  recompute_budget: Optional[int] = None,
                  storm_guard: bool = False,
-                 pressure: Optional[Any] = None):
+                 pressure: Optional[Any] = None,
+                 obs: Optional[obs_mod.Obs] = None):
         if pressure is not None and engine.degraded_container is None:
             raise ValueError("a PressureController needs an engine built "
                              "with degraded_container set")
@@ -153,7 +191,58 @@ class Scheduler:
         self.free_slots = list(range(engine.max_slots - 1, -1, -1))
         self.finished: Dict[Any, np.ndarray] = {}
         self.results: Dict[Any, RequestResult] = {}
-        self.stats = SchedulerStats()
+        # Telemetry substrate. Every scheduler owns an Obs (a fresh one
+        # unless injected), and points the engine/pool at it: benches and
+        # tests run several schedulers over one warm engine and expect
+        # per-run counters, so the engine records into whichever scheduler
+        # drives it last.
+        self.obs = obs if obs is not None else obs_mod.Obs()
+        engine.obs = self.obs
+        engine.pool.obs = self.obs
+        reg = self.obs.registry
+        self._c_submitted = reg.counter(
+            "serve_submitted_total", "requests accepted by submit()")
+        self._c_requests = reg.counter(
+            "serve_requests_total", "terminal request outcomes",
+            labels=("outcome",))
+        self._c_admitted = reg.counter(
+            "serve_admitted_total", "admissions by served geometry",
+            labels=("geometry",))
+        self._c_preempt = reg.counter(
+            "serve_preemptions_total", "recompute-preemptions")
+        self._c_decode = reg.counter(
+            "serve_decode_steps_total", "engine decode steps (burst tokens)")
+        self._c_tokens = reg.counter(
+            "serve_tokens_total", "tokens emitted to clients")
+        self._c_recov = reg.counter(
+            "serve_recoveries_total", "recompute-from-prompt recoveries")
+        self._c_recomp = reg.counter(
+            "serve_recompute_tokens_total",
+            "prompt tokens re-prefilled after requeue")
+        self._c_allocfail = reg.counter(
+            "serve_alloc_failures_total",
+            "allocator refusals after a granted admission")
+        self._c_corrupt = reg.counter(
+            "serve_corrupt_blocks_total", "checksum mismatches detected")
+        self._c_nan = reg.counter(
+            "serve_nan_guard_trips_total", "non-finite logit guard trips")
+        self._c_downshift = reg.counter(
+            "serve_downshifted_total",
+            "admissions downshifted to the degraded geometry")
+        self._h_ttft = reg.histogram(
+            "serve_ttft_seconds", "submit-to-first-token wall time",
+            unit="s")
+        self._h_tok = reg.histogram(
+            "serve_token_latency_seconds",
+            "per-token wall time within a scheduler step", unit="s")
+        self._h_step = reg.histogram(
+            "serve_step_seconds", "scheduler step wall time", unit="s")
+        self.stats = SchedulerStats(reg)
+        self._submit_ts: Dict[Any, float] = {}   # uid -> perf_counter at
+        #                                          submit (TTFT, first
+        #                                          residency only)
+        self._queued_spans: Dict[Any, Any] = {}  # uid -> open queued span
+        self._step_i = 0
         self._admit_seq = 0
         # Per-uid emission history: survives recompute-preemption
         # (_Running.emitted only tracks the current residency — its length
@@ -194,6 +283,14 @@ class Scheduler:
                 f"{self.engine.max_len} cannot ever admit a request of "
                 f"{n0} prompt tokens")
         self.pending.append(req)
+        self._c_submitted.inc()
+        self._submit_ts.setdefault(req.uid, time.perf_counter())
+        tracer = self.obs.tracer
+        if tracer is not None:
+            lane = str(req.uid)
+            tracer.instant("submit", lane, prompt_tokens=n0,
+                           max_new=int(req.max_new))
+            self._queued_spans[req.uid] = tracer.begin("queued", lane)
 
     def cancel(self, uid: Any) -> bool:
         """Client cancellation: frees the request's blocks *now* (running)
@@ -202,13 +299,11 @@ class Scheduler:
         for st in list(self.running.values()):
             if st.req.uid == uid:
                 self._retire(st, "cancelled")
-                self.stats.cancelled += 1
                 return True
         for req in self.pending:
             if req.uid == uid:
                 self.pending.remove(req)
                 self._record(req.uid, "cancelled")
-                self.stats.cancelled += 1
                 return True
         return False
 
@@ -220,11 +315,25 @@ class Scheduler:
 
     def _record(self, uid: Any, status: str, narrow: bool = False) -> None:
         toks = np.asarray(self._history.pop(uid, []), np.int32)
-        self.results[uid] = RequestResult(
+        res = RequestResult(
             status=status, tokens=toks,
             container=(self.engine.degraded_container if narrow
                        else self.engine.container),
             recoveries=self._recoveries.pop(uid, 0))
+        self.results[uid] = res
+        # The single terminal-outcome increment: every path that ends a
+        # request funnels through here, so summing the outcome series
+        # always equals serve_submitted_total once the queue drains.
+        self._c_requests.labels(outcome=status).inc()
+        self._submit_ts.pop(uid, None)
+        tracer = self.obs.tracer
+        if tracer is not None:
+            q = self._queued_spans.pop(uid, None)
+            if q is not None:  # went terminal while still pending
+                tracer.end(q, outcome=status)
+            tracer.instant("retire", str(uid), outcome=status,
+                           tokens=int(toks.size),
+                           recoveries=res.recoveries)
         if status == "ok":
             self.finished[uid] = toks
         self._terminal.append(uid)
@@ -240,8 +349,6 @@ class Scheduler:
         del self.running[st.slot]
         self.free_slots.append(st.slot)
         self._record(st.req.uid, status, narrow=st.narrow)
-        if status == "ok":
-            self.stats.finished += 1
 
     # -- internals -------------------------------------------------------
 
@@ -249,7 +356,10 @@ class Scheduler:
         st.emitted.append(int(tok))
         st.last_tok = int(tok)
         self._history.setdefault(st.req.uid, []).append(int(tok))
-        self.stats.emitted_tokens += 1
+        self._c_tokens.inc()
+        t0 = self._submit_ts.pop(st.req.uid, None)
+        if t0 is not None:  # first token this request ever emitted
+            self._h_ttft.observe(time.perf_counter() - t0)
         done = (len(st.emitted) >= st.req.max_new
                 or st.n_ctx + 1 >= self.engine.max_len)
         for cb in (st.req.on_token, self.on_token):
@@ -272,6 +382,10 @@ class Scheduler:
                 max_new=req.max_new - len(st.emitted))
         req = dataclasses.replace(req, requeued=True)
         self.pending.appendleft(req)
+        tracer = self.obs.tracer
+        if tracer is not None:
+            self._queued_spans[req.uid] = tracer.begin(
+                "queued", str(req.uid), requeued=True)
         return req
 
     def _preempt(self, st: _Running) -> None:
@@ -279,8 +393,12 @@ class Scheduler:
         self.engine.pool.free_slot(st.slot)
         del self.running[st.slot]
         self.free_slots.append(st.slot)
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant("preempt", str(st.req.uid),
+                                    slot=st.slot,
+                                    emitted=len(st.emitted))
         self._requeue(st)
-        self.stats.preemptions += 1
+        self._c_preempt.inc()
 
     def _recover(self, st: _Running, quarantine: Tuple[int, ...]) -> None:
         """Recompute-from-prompt recovery after an integrity failure.
@@ -295,10 +413,12 @@ class Scheduler:
         uid = st.req.uid
         n = self._recoveries.get(uid, 0) + 1
         self._recoveries[uid] = n
-        self.stats.recoveries += 1
+        self._c_recov.inc()
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant("recover", str(uid), attempt=n,
+                                    quarantined=len(quarantine))
         if n > self.max_recoveries:
             self._retire(st, "failed", quarantine=quarantine)
-            self.stats.failed += 1
             return
         self.engine.pool.free_slot(st.slot, quarantine=quarantine)
         del self.running[st.slot]
@@ -314,13 +434,11 @@ class Scheduler:
             d = st.req.deadline
             if d is not None and now >= d:
                 self._retire(st, "expired")
-                self.stats.deadline_misses += 1
         expired = [r for r in self.pending
                    if r.deadline is not None and now >= r.deadline]
         for req in expired:
             self.pending.remove(req)
             self._record(req.uid, "expired")
-            self.stats.deadline_misses += 1
 
     def _shed(self, now: Optional[float]) -> None:
         """Bounded admission queue: arrived requests beyond ``max_pending``
@@ -338,7 +456,6 @@ class Scheduler:
             if (excess > 0 and not req.requeued
                     and (now is None or req.arrival <= now)):
                 self._record(req.uid, "shed")
-                self.stats.shed += 1
                 excess -= 1
             else:
                 kept.append(req)
@@ -353,7 +470,8 @@ class Scheduler:
         bad = eng.verify_blocks(eng.pool.owned_ids())
         if not bad:
             return
-        self.stats.corrupt_blocks += len(bad)
+        self._c_corrupt.inc(len(bad))
+        self.obs.event("corrupt_blocks", blocks=[int(p) for p in bad])
         by_slot: Dict[int, List[int]] = {}
         for phys in bad:
             owner = eng.pool.owner_of(phys)
@@ -372,6 +490,8 @@ class Scheduler:
             self.engine.scrub_block(phys)
             self.engine.pool.rehabilitate(phys)
             n += 1
+        if n:
+            self.obs.event("scrub", blocks=n)
         return n
 
     # -- admission -------------------------------------------------------
@@ -436,7 +556,7 @@ class Scheduler:
                 # can_admit passed but the allocator refused (injected
                 # alloc failure, or a race with the byte budget): requeue
                 # gracefully instead of crashing the loop.
-                self.stats.alloc_failures += 1
+                self._c_allocfail.inc()
                 try:
                     pool.free_slot(slot)  # clears the empty registration
                 except KeyError:
@@ -446,20 +566,33 @@ class Scheduler:
                 break
             if req.requeued:
                 recompute += n0
-                self.stats.recompute_tokens += n0
+                self._c_recomp.inc(n0)
+            tracer = self.obs.tracer
+            t_pf = time.perf_counter()
             tok0 = self.engine.prefill_into_slot(slot, req.prompt,
                                                  narrow=degraded)
             self._admit_seq += 1
             st = _Running(req=req, slot=slot, admit_seq=self._admit_seq,
                           n_ctx=n0, last_tok=tok0, narrow=degraded)
             self.running[slot] = st
-            self.stats.admitted += 1
+            geom = (self.engine.degraded_container if degraded
+                    else self.engine.container)
+            self._c_admitted.labels(geometry=geom).inc()
+            if degraded:
+                self._c_downshift.inc()
+            if tracer is not None:
+                lane = str(req.uid)
+                q = self._queued_spans.pop(req.uid, None)
+                if q is not None:
+                    tracer.end(q, requeued=req.requeued)
+                tracer.complete(
+                    "prefill", lane, time.perf_counter() - t_pf,
+                    geometry=geom, blocks=pool.slot_blocks(slot),
+                    downshift=bool(degraded), prompt_tokens=n0, slot=slot)
             if self.storm_guard:
                 # The new runner's remaining growth joins the reservation
                 # before the next candidate is considered.
                 reserve += max(0, worst - pool.slot_blocks(slot))
-            if degraded:
-                self.stats.downshifted += 1
             emitted.append(self._emit(st, tok0))
             if emitted[-1][2]:  # max_new == 1 (or budget exhausted)
                 self._finish(st)
@@ -515,6 +648,47 @@ class Scheduler:
         buffer, so a request that hits its budget mid-burst still sees
         ``done`` on exactly its last token. Returns the (uid, token,
         done) tuples emitted this step."""
+        t0 = time.perf_counter()
+        emitted = self._step_inner(now, burst)
+        wall = time.perf_counter() - t0
+        self._h_step.observe(wall)
+        if emitted:
+            per = wall / len(emitted)
+            for _ in emitted:
+                self._h_tok.observe(per)
+        if self.obs.timeline is not None:
+            self._record_timeline()
+        self._step_i += 1
+        return emitted
+
+    def _record_timeline(self) -> None:
+        """One serve timeline entry: which geometry holds how many blocks
+        and bytes right now. Bytes are priced by the same per-slot rates
+        the pool charges, so the per-geometry sum byte-agrees with
+        ``pool.used_bytes`` by construction."""
+        eng = self.engine
+        pool = eng.pool
+        ps = pool.stats()
+        gblocks: Dict[str, int] = {}
+        gbytes: Dict[str, int] = {}
+        for st in self.running.values():
+            name = eng.degraded_container if st.narrow else eng.container
+            nb = pool.slot_blocks(st.slot)
+            gblocks[name] = gblocks.get(name, 0) + nb
+            gbytes[name] = (gbytes.get(name, 0)
+                            + nb * pool.slot_rate(st.slot))
+        degraded = bool(self.pressure is not None and self.pressure.degraded)
+        self.obs.timeline.record_serve(
+            self._step_i,
+            geometry_blocks=gblocks, geometry_bytes=gbytes,
+            used_bytes=ps.used_bytes, free_bytes=ps.free_bytes,
+            capacity_bytes=ps.capacity_bytes,
+            occupancy=ps.used_blocks / max(1, ps.num_blocks),
+            pressure="degraded" if degraded else "normal",
+            quarantined=ps.quarantined, running=len(self.running))
+
+    def _step_inner(self, now: Optional[float],
+                    burst: int) -> List[Tuple[Any, int, bool]]:
         emitted: List[Tuple[Any, int, bool]] = []
         self._expire(now)
         self._shed(now)
@@ -550,10 +724,23 @@ class Scheduler:
         slot_blocks = {st.slot: tuple(int(p) for p in pool.tables[st.slot]
                                       if p != TRASH_BLOCK)
                        for st in self.running.values()}
+        t_dec = time.perf_counter()
         nxt, bad = self.engine.decode_burst(toks, pos, K)  # (K, max_slots)
-        self.stats.decode_steps += K
+        dec_wall = time.perf_counter() - t_dec
+        self._c_decode.inc(K)
 
         live = list(self.running.values())
+        tracer = self.obs.tracer
+        if tracer is not None:
+            # One decode span per participating request per burst: the
+            # token positions advanced and the geometry it was served at.
+            for st in live:
+                tracer.complete(
+                    "decode", str(st.req.uid), dec_wall, burst=K,
+                    slot=st.slot, n_ctx=st.n_ctx,
+                    blocks=len(slot_blocks[st.slot]),
+                    geometry=(self.engine.degraded_container if st.narrow
+                              else self.engine.container))
         poisoned: Dict[int, _Running] = {}
         for i in range(K):
             for st in live:
@@ -573,7 +760,7 @@ class Scheduler:
                     self._finish(st)
         for st in poisoned.values():
             if self.running.get(st.slot) is st:
-                self.stats.nan_guard_trips += 1
+                self._c_nan.inc()
                 self._recover(st, slot_blocks[st.slot])
         self.engine.refresh_checksums(written)
         return emitted

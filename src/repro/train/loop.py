@@ -8,20 +8,27 @@ Responsibilities:
   * straggler watchdog: per-step wall-time deadline; breaches are logged
     and surfaced in metrics (on a real fleet this triggers hot-spare
     swap-in — see DESIGN.md §4);
-  * metrics emission (JSONL) for the benchmark/figure scripts.
+  * telemetry: the per-step metrics stream is a ``repro.obs.EventLog``
+    (JSONL; per-step metric lines keep their historical format, and
+    lifecycle events — step failures, restores, checkpoints — are
+    structured ``{"event": ...}`` lines in the same stream, so failed
+    steps are no longer print-only); an optional ``LoopConfig.obs``
+    records the step-time histogram, restart counters, and — with
+    ``timeline_fn`` — the live per-layer precision timeline; and
+    ``profile_steps`` brackets ``jax.profiler`` around chosen steps.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs import EventLog, Obs
 
 
 @dataclasses.dataclass
@@ -44,6 +51,18 @@ class LoopConfig:
     # it; segmented drivers (the per-layer-stash refresh loop) set this on
     # every segment after the first so one JSONL spans the whole run.
     metrics_truncate: bool = True
+    # Telemetry (repro.obs). ``obs`` carries the registry (step-time
+    # histogram, failure/straggler counters) and, when its timeline is
+    # enabled, ``timeline_fn(state)`` -> [(man_bits, exp_bits), ...] is
+    # sampled every ``timeline_every`` steps into the precision timeline.
+    obs: Optional[Obs] = None
+    timeline_fn: Optional[Callable[[Any], Any]] = None
+    timeline_every: int = 10
+    # (start, n): bracket ``jax.profiler`` around steps [start, start+n)
+    # — the same capture idiom bench_decode_micro uses, so the profile
+    # opens in Perfetto next to the serve span trace.
+    profile_steps: Optional[Tuple[int, int]] = None
+    profile_dir: str = "experiments/traces/train"
 
 
 def _scalarize(v):
@@ -65,6 +84,31 @@ class LoopResult:
     straggler_steps: int
 
 
+class _Profiler:
+    """Bracket ``jax.profiler`` around steps [start, start+n)."""
+
+    def __init__(self, cfg: LoopConfig):
+        self.span = cfg.profile_steps
+        self.dir = cfg.profile_dir
+        self.active = False
+
+    def tick(self, step: int) -> None:
+        if self.span is None:
+            return
+        start, n = self.span
+        if not self.active and start <= step < start + n:
+            Path(self.dir).mkdir(parents=True, exist_ok=True)
+            jax.profiler.start_trace(self.dir)
+            self.active = True
+        elif self.active and step >= start + n:
+            self.stop()
+
+    def stop(self) -> None:
+        if self.active:
+            jax.profiler.stop_trace()
+            self.active = False
+
+
 def run(train_step: Callable, state: Any, batch_iter_factory:
         Callable[[int], Iterator[Dict[str, Any]]], cfg: LoopConfig,
         fault_hook: Optional[Callable[[int], None]] = None) -> LoopResult:
@@ -76,11 +120,29 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
     history = []
     restarts = 0
     stragglers = 0
-    mfile = Path(cfg.metrics_file) if cfg.metrics_file else None
-    if mfile:
-        mfile.parent.mkdir(parents=True, exist_ok=True)
-        if cfg.metrics_truncate or not mfile.exists():
-            mfile.write_text("")
+    sink = None
+    if cfg.metrics_file:
+        Path(cfg.metrics_file).parent.mkdir(parents=True, exist_ok=True)
+        sink = EventLog(cfg.metrics_file, truncate=cfg.metrics_truncate)
+    obs = cfg.obs
+    h_step = c_fail = c_straggle = None
+    if obs is not None:
+        h_step = obs.registry.histogram(
+            "train_step_seconds", "train step wall time", unit="s")
+        c_fail = obs.registry.counter(
+            "train_step_failures_total", "step failures restored from "
+            "checkpoint")
+        c_straggle = obs.registry.counter(
+            "train_straggler_steps_total", "steps past the wall-time "
+            "deadline")
+    prof = _Profiler(cfg)
+
+    def tick_timeline(step: int, force: bool = False) -> None:
+        if (obs is None or obs.timeline is None
+                or cfg.timeline_fn is None):
+            return
+        if force or step % max(1, cfg.timeline_every) == 0:
+            obs.timeline.record_train(step, cfg.timeline_fn(state))
 
     step = int(np.asarray(state.step))
     if mgr is not None and mgr.latest_step() is not None:
@@ -88,47 +150,77 @@ def run(train_step: Callable, state: Any, batch_iter_factory:
         state = mgr.restore(latest, state)
         step = int(np.asarray(state.step))
 
-    while step < cfg.total_steps:
-        batches = batch_iter_factory(step)
-        try:
-            for batch in batches:
-                if step >= cfg.total_steps:
-                    break
-                if fault_hook is not None:
-                    fault_hook(step)
-                t0 = time.time()
-                state, metrics = train_step(state, batch)
-                metrics = {k: _scalarize(v) for k, v in metrics.items()}
-                dt = time.time() - t0
-                metrics["step"] = step
-                metrics["step_time_s"] = dt
-                if cfg.step_deadline_s and dt > cfg.step_deadline_s:
-                    stragglers += 1
-                    metrics["straggler"] = True
-                history.append(metrics)
-                if mfile and (step % cfg.log_every == 0
-                              or step == cfg.total_steps - 1):
-                    with mfile.open("a") as f:
-                        f.write(json.dumps(metrics) + "\n")
-                step += 1
-                if mgr is not None and step % cfg.ckpt_every == 0:
-                    mgr.save(step, state, blocking=False,
-                             extra=_resolve_extra(cfg.ckpt_extra, state))
-        except KeyboardInterrupt:
-            raise
-        except Exception as e:
-            restarts += 1
-            if mgr is None or restarts > cfg.max_restarts:
+    try:
+        while step < cfg.total_steps:
+            batches = batch_iter_factory(step)
+            try:
+                for batch in batches:
+                    if step >= cfg.total_steps:
+                        break
+                    if fault_hook is not None:
+                        fault_hook(step)
+                    prof.tick(step)
+                    t0 = time.time()
+                    state, metrics = train_step(state, batch)
+                    metrics = {k: _scalarize(v) for k, v in metrics.items()}
+                    dt = time.time() - t0
+                    metrics["step"] = step
+                    metrics["step_time_s"] = dt
+                    if h_step is not None:
+                        h_step.observe(dt)
+                    if obs is not None and obs.tracer is not None:
+                        obs.tracer.complete("train_step", "train", dt,
+                                            step=step)
+                    if cfg.step_deadline_s and dt > cfg.step_deadline_s:
+                        stragglers += 1
+                        metrics["straggler"] = True
+                        if c_straggle is not None:
+                            c_straggle.inc()
+                    history.append(metrics)
+                    if sink and (step % cfg.log_every == 0
+                                 or step == cfg.total_steps - 1):
+                        sink.write(metrics)
+                    tick_timeline(step)
+                    step += 1
+                    if mgr is not None and step % cfg.ckpt_every == 0:
+                        mgr.save(step, state, blocking=False,
+                                 extra=_resolve_extra(cfg.ckpt_extra,
+                                                      state))
+                        if sink:
+                            sink.emit("checkpoint", step=step)
+            except KeyboardInterrupt:
                 raise
-            mgr.wait()
-            latest = mgr.latest_step()
-            if latest is None:
-                raise RuntimeError("step failed before first checkpoint") from e
-            print(f"[loop] step {step} failed ({type(e).__name__}: {e}); "
-                  f"restoring step {latest} (restart {restarts})")
-            state = mgr.restore(latest, state)
-            step = int(np.asarray(state.step))
-            continue
+            except Exception as e:
+                restarts += 1
+                if c_fail is not None:
+                    c_fail.inc()
+                if mgr is None or restarts > cfg.max_restarts:
+                    raise
+                mgr.wait()
+                latest = mgr.latest_step()
+                if latest is None:
+                    raise RuntimeError(
+                        "step failed before first checkpoint") from e
+                # Structured twin of the console message: downstream
+                # tooling reads failures from the JSONL stream, not
+                # stdout.
+                for dst in (sink, None if obs is None else obs.events):
+                    if dst is not None:
+                        dst.emit("step_failure", step=step,
+                                 error=type(e).__name__, message=str(e),
+                                 restore_step=int(latest),
+                                 restart=restarts)
+                print(f"[loop] step {step} failed "
+                      f"({type(e).__name__}: {e}); "
+                      f"restoring step {latest} (restart {restarts})")
+                state = mgr.restore(latest, state)
+                step = int(np.asarray(state.step))
+                continue
+    finally:
+        prof.stop()
+        tick_timeline(step, force=True)
+        if sink:
+            sink.close()
 
     if mgr is not None:
         mgr.save(step, state, blocking=True,

@@ -45,7 +45,8 @@ def test_every_rule_has_a_fixture():
     covered = {rule for fx in VIOLATIONS for _, rule in _markers(fx)}
     assert covered == {"host-sync-in-jit", "stale-interpret-flag",
                        "force-backend-leak", "traced-truthiness",
-                       "container-name", "policy-name", "float64"}
+                       "container-name", "policy-name", "float64",
+                       "obs-no-hot-path-sync"}
 
 
 def test_clean_fixture_is_clean():
