@@ -29,9 +29,11 @@ import jax.numpy as jnp
 
 POINTS_FULL = [(1, 512), (4, 1024), (8, 2048)]
 POINTS_QUICK = [(1, 256)]
-# Fixed-lane words plus a dense bit-plane geometry: sfp-m2e4 reads
-# 7 bits/value + bases — below the 0.504x floor any 8-bit lane imposes.
-CONTAINERS = ("sfp8", "sfp16", "sfp-m2e4")
+# Fixed-lane words plus two dense bit-plane geometries: sfp-m2e4 reads
+# 7 bits/value + bases — below the 0.504x floor any 8-bit lane imposes —
+# and sfp-m1e2 is the narrowest (4-bit) plane decode the serving stack
+# downshifts to under pressure.
+CONTAINERS = ("sfp8", "sfp16", "sfp-m2e4", "sfp-m1e2")
 ITERS = 20
 ITERS_QUICK = 5
 OUT = Path(__file__).resolve().parent.parent / "BENCH_decode.json"
@@ -127,26 +129,33 @@ def run(quick: bool = False) -> dict:
     }
 
 
-# CI regression guard (--quick): the dense bit-plane decode must stay
+# CI regression guard (--quick): every dense bit-plane decode must stay
 # within this factor of the fixed-lane sfp8 step at the smoke shape.
 # The budget is loose against the full-sweep acceptance (~2.5x) because
 # the (1, 256) smoke point is dispatch- rather than bandwidth-dominated
 # and CI machines are noisy — it catches the failure mode that matters:
-# the plane expansion regressing back to per-bit gathers (>10x).
-QUICK_MAX_DENSE_VS_SFP8 = 3.0
+# the plane expansion regressing back to per-bit gathers (>10x). The
+# narrow sfp-m1e2 (pressure-downshift) geometry expands fewer planes
+# than sfp-m2e4, but at this dispatch-bound shape both ratios jitter up
+# to ~3x run-to-run, hence the extra headroom.
+QUICK_MAX_DENSE_VS_SFP8 = 3.5
+QUICK_DENSE_GUARDED = ("sfp-m2e4", "sfp-m1e2")
 
 
 def _check_quick(r: dict) -> None:
     ms = r["points"][0]["ms_per_step"]
-    ratio = ms["sfp-m2e4"] / ms["sfp8"]
-    status = "OK" if ratio <= QUICK_MAX_DENSE_VS_SFP8 else "FAIL"
-    print(f"quick guard: sfp-m2e4/sfp8 = {ratio:.2f}x "
-          f"(budget {QUICK_MAX_DENSE_VS_SFP8:.1f}x) {status}")
-    if ratio > QUICK_MAX_DENSE_VS_SFP8:
-        raise SystemExit(
-            f"dense decode regression: sfp-m2e4 {ms['sfp-m2e4']:.3f} ms "
-            f"vs sfp8 {ms['sfp8']:.3f} ms ({ratio:.2f}x > "
-            f"{QUICK_MAX_DENSE_VS_SFP8:.1f}x)")
+    failures = []
+    for name in QUICK_DENSE_GUARDED:
+        ratio = ms[name] / ms["sfp8"]
+        status = "OK" if ratio <= QUICK_MAX_DENSE_VS_SFP8 else "FAIL"
+        print(f"quick guard: {name}/sfp8 = {ratio:.2f}x "
+              f"(budget {QUICK_MAX_DENSE_VS_SFP8:.1f}x) {status}")
+        if ratio > QUICK_MAX_DENSE_VS_SFP8:
+            failures.append(
+                f"{name} {ms[name]:.3f} ms vs sfp8 {ms['sfp8']:.3f} ms "
+                f"({ratio:.2f}x > {QUICK_MAX_DENSE_VS_SFP8:.1f}x)")
+    if failures:
+        raise SystemExit("dense decode regression: " + "; ".join(failures))
 
 
 def main(argv=None) -> None:

@@ -355,6 +355,110 @@ def run_degraded(quick: bool = False) -> dict:
     }
 
 
+def run_speculation(quick: bool = False) -> dict:
+    """Self-speculative decoding section: draft plane-depth x K sweep.
+
+    One warm paged engine per sweep; each (draft_planes, K) point drives
+    the same prompts through ``Scheduler.run(speculate=K)`` — K decode
+    steps whose packed-KV reads expand only the leading ``draft_planes``
+    bit planes, then one batched full-width verify that commits the
+    longest matching prefix plus the verifier's correction token. Output
+    is greedy-token-identical to ``burst=1`` by construction (asserted
+    here against the baseline run), so the whole sweep is a pure
+    throughput/acceptance trade: deeper drafts accept more but read more
+    planes; larger K amortizes more dispatch overhead but risks longer
+    rejected suffixes.
+
+    Asserted acceptance: every point's acceptance rate is > 0, and the
+    best point's tok/s >= the non-speculative ``burst=1`` baseline.
+    """
+    import jax
+
+    from repro import codecs, configs
+    from repro.configs.base import reduced
+    from repro.kernels import ops
+    from repro.models.model import DecoderModel
+    from repro.serve import engine
+    from repro.serve.scheduler import Request, Scheduler
+
+    B = 2 if quick else 4
+    KS = (2, 4) if quick else (2, 4, 8)
+    CONTAINER = "sfp8"
+    cfg = dataclasses.replace(reduced(configs.get("mistral-large-123b")),
+                              dtype="bfloat16")
+    model = DecoderModel(cfg, kv_container=CONTAINER)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(9)
+    prompts = rng.randint(0, cfg.vocab, size=(B, PROMPT_LEN)
+                          ).astype(np.int32)
+    toks = B * MAX_NEW
+    fields = codecs.fields_for(CONTAINER, cfg.compute_dtype)
+    full = fields.payload_bits
+    depths = ((full - 1,) if quick
+              else tuple(sorted({fields.dexp_bits + 2, full - 1})))
+
+    def timed(fn):
+        fn()  # compile + warm caches
+        t0 = time.perf_counter()
+        out = fn()
+        return time.perf_counter() - t0, out
+
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=B,
+                                 max_len=PROMPT_LEN + MAX_NEW)
+        reqs = lambda: [Request(uid=i, prompt=prompts[i], max_new=MAX_NEW)
+                        for i in range(B)]
+        dt_base, base_out = timed(
+            lambda: Scheduler(eng).run(reqs(), burst=1))
+        base_tok_s = toks / dt_base
+
+        points = {}
+        for dp in depths:
+            for K in KS:
+                box = {}
+
+                def spec_run():
+                    sched = box["s"] = Scheduler(eng)
+                    return sched.run(reqs(), speculate=K, draft_planes=dp)
+
+                dt, out = timed(spec_run)
+                for uid in base_out:  # token-identity vs burst=1
+                    assert np.array_equal(base_out[uid], out[uid]), (
+                        f"speculative stream diverged (uid={uid}, "
+                        f"draft_planes={dp}, K={K})")
+                s = box["s"].stats
+                rate = s.draft_accepted / max(1, s.drafted)
+                assert rate > 0, (dp, K, s.drafted, s.draft_accepted)
+                points[f"p{dp}_k{K}"] = {
+                    "draft_planes": dp, "K": K,
+                    "tok_per_s": toks / dt,
+                    "acceptance_rate": round(rate, 4),
+                    "drafted": s.drafted,
+                    "draft_accepted": s.draft_accepted,
+                    "draft_rejected": s.draft_rejected,
+                    "spec_rounds": s.spec_rounds,
+                }
+    finally:
+        ops.force_backend(None)
+
+    best = max(points, key=lambda k: points[k]["tok_per_s"])
+    assert points[best]["tok_per_s"] >= base_tok_s, (
+        f"best speculative point {best} ({points[best]['tok_per_s']:.1f} "
+        f"tok/s) fell below the non-speculative burst=1 baseline "
+        f"({base_tok_s:.1f} tok/s)")
+    return {
+        "container": CONTAINER, "B": B, "prompt_len": PROMPT_LEN,
+        "max_new": MAX_NEW, "payload_bits": int(full),
+        "draft_depths": [int(d) for d in depths], "Ks": [int(k) for k in KS],
+        "tok_per_s_nonspec_burst1": round(base_tok_s, 2),
+        "best_point": best,
+        "speedup_vs_burst1": round(
+            points[best]["tok_per_s"] / base_tok_s, 3),
+        "points": points,
+    }
+
+
 def run_obs_overhead(quick: bool = False) -> dict:
     """Price the telemetry: the same paged workload with the default Obs
     (registry only — always on) vs the full surface (span tracer + a
@@ -430,6 +534,7 @@ def main(argv=None) -> None:
     bursts = (tuple(int(k) for k in args.burst.split(","))
               if args.burst else BURSTS)
     r = run(quick=args.quick, bursts=bursts)
+    r["speculation"] = run_speculation(quick=args.quick)
     r["observability_overhead"] = run_obs_overhead(quick=args.quick)
     if args.degraded:
         r["degraded_mode"] = run_degraded(quick=args.quick)

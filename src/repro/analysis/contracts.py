@@ -20,7 +20,8 @@ the AST layer cannot see:
   recompile-guard  compile caches stay at one entry across runtime-varying
                    but shape-stable inputs (decode steps at different
                    positions, repeated bursts at the same K, repeated
-                   generate() calls at the same budget).
+                   generate() calls at the same budget, repeated
+                   self-speculative rounds at the same (K, draft depth)).
 
 The jaxpr walks reuse ``roofline.jaxpr_cost.iter_eqns`` — one traversal
 definition for the cost model and the contracts.
@@ -220,6 +221,14 @@ def check_donation(container: str = "sfp8",
     out += _audit(f"PagedEngine.decode_burst[K=2,{container}]", low,
                   engine.mem)
 
+    # Self-speculative round: the draft+verify executable snapshots and
+    # rewinds per-slot state internally, so the *pool* donation is what
+    # keeps the round at zero extra HBM.
+    spec = engine._make_spec(2, engine.default_draft_planes())
+    low = spec.lower(params, engine.mem, tables, toks, pos)
+    out += _audit(f"PagedEngine.speculate[K=2,{container}]", low,
+                  engine.mem)
+
     # Contiguous decode loop: cache donated across the scan.
     cache = jax.eval_shape(lambda: model.init_cache(1, engine.max_len))
     loop = make_decode_loop(model, 4)
@@ -295,6 +304,23 @@ def check_recompile(container: str = "sfp8") -> List[Finding]:
             out.append(_finding(
                 "recompile-guard", "PagedEngine.decode_burst",
                 f"K=2 burst recompiled across calls (cache size {n})"))
+
+    dp = engine.default_draft_planes()
+    engine.speculate(toks, np.full(S, 4, np.int32), 2)
+    engine.speculate(toks + 1, np.full(S, 6, np.int32), 2)
+    if set(engine._specs) != {(2, dp)}:
+        out.append(_finding(
+            "recompile-guard", "PagedEngine.speculate",
+            f"spec memo holds {sorted(engine._specs)} after two K=2 "
+            f"rounds at the default draft depth (want exactly "
+            f"[(2, {dp})])"))
+    else:
+        n = _cache_size(engine._specs[(2, dp)])
+        if n is not None and n != 1:
+            out.append(_finding(
+                "recompile-guard", "PagedEngine.speculate",
+                f"K=2 draft+verify round recompiled across shape-stable "
+                f"calls (cache size {n})"))
 
     prompt = np.zeros((1, 8), np.int32)
     generate(model, params, jnp.asarray(prompt), 4, max_len=engine.max_len)

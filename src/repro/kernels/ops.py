@@ -30,6 +30,7 @@ from repro.kernels import sfp_pack as _sp
 
 PackFields = _ref.PackFields  # re-export: the kernel-facing format descriptor
 decode_kv_mask = _ref.decode_kv_mask  # shared ring-slot validity semantics
+prefix_fields = _ref.prefix_fields  # truncated geometry of a draft read
 DECODE_BLOCK_L = _pfd.DEFAULT_BLOCK_L  # flash-decode KV block (alloc hint)
 
 _FORCED: Optional[str] = None  # None | 'pallas' | 'ref' | 'interpret'
@@ -237,8 +238,8 @@ def attention(q, k, v, *, causal=True, window=None, softcap=None,
 
 
 def packed_flash_decode(q, k_packed: Packed, v_packed: Packed, pos, *,
-                        fields: PackFields, window=None,
-                        softcap=None) -> jax.Array:
+                        fields: PackFields, window=None, softcap=None,
+                        prefix_planes: Optional[int] = None) -> jax.Array:
     """One-token decode attention directly over an SFP-packed KV cache.
 
     q: (B, 1, H, hd); the packed K/V pairs are in the rank-preserving
@@ -246,22 +247,27 @@ def packed_flash_decode(q, k_packed: Packed, v_packed: Packed, pos, *,
     On pallas/interpret this is the fused decompress-attend kernel (the
     bf16 cache never materializes in HBM); on the ref backend it is the
     unpack-then-attend oracle, the kernel's bit-exactness target.
+    ``prefix_planes`` is the speculative draft read mode: only the leading
+    P' payload bits of the same packed cache are expanded, decoded as the
+    truncated geometry (``ref.prefix_fields``) — same blocks, fewer planes.
     """
     b = backend()
     if b in ("pallas", "interpret"):
         return _pfd.packed_flash_decode(
             q, k_packed.payload, k_packed.bases, v_packed.payload,
             v_packed.bases, jnp.asarray(pos, jnp.int32), fields=fields,
-            window=window, softcap=softcap, interpret=(b == "interpret"))
+            window=window, softcap=softcap, interpret=(b == "interpret"),
+            prefix_planes=prefix_planes)
     return _ref.packed_flash_decode(
         q, k_packed.payload, k_packed.bases, v_packed.payload,
         v_packed.bases, pos, fields, window=window, softcap=softcap,
-        block_l=_pfd.DEFAULT_BLOCK_L)  # kernel-matching accumulation order
+        block_l=_pfd.DEFAULT_BLOCK_L,  # kernel-matching accumulation order
+        prefix_planes=prefix_planes)
 
 
 def paged_flash_decode(q, k_packed: Packed, v_packed: Packed,
-                       tables, pos, *, fields: PackFields,
-                       softcap=None) -> jax.Array:
+                       tables, pos, *, fields: PackFields, softcap=None,
+                       prefix_planes: Optional[int] = None) -> jax.Array:
     """One-token decode attention over a paged SFP-packed KV block pool.
 
     The continuous-batching serving step: pool parts are
@@ -271,7 +277,8 @@ def paged_flash_decode(q, k_packed: Packed, v_packed: Packed,
     table is a scalar-prefetch operand and the gather happens inside the
     kernel grid (no contiguous per-request cache in HBM); on the ref
     backend this is the gather-unpack-attend oracle with the identical
-    block recurrence. Global attention only.
+    block recurrence. Global attention only. ``prefix_planes`` is the
+    speculative draft read mode (see ``packed_flash_decode``).
     """
     b = backend()
     if b in ("pallas", "interpret"):
@@ -279,7 +286,8 @@ def paged_flash_decode(q, k_packed: Packed, v_packed: Packed,
             q, k_packed.payload, k_packed.bases, v_packed.payload,
             v_packed.bases, jnp.asarray(tables, jnp.int32),
             jnp.asarray(pos, jnp.int32), fields=fields, softcap=softcap,
-            interpret=(b == "interpret"))
+            interpret=(b == "interpret"), prefix_planes=prefix_planes)
     return _ref.paged_flash_decode(
         q, k_packed.payload, k_packed.bases, v_packed.payload,
-        v_packed.bases, tables, pos, fields, softcap=softcap)
+        v_packed.bases, tables, pos, fields, softcap=softcap,
+        prefix_planes=prefix_planes)

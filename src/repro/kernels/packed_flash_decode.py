@@ -90,7 +90,8 @@ def vmem_estimate(*, fields: kref.PackFields, H: int, KH: int, hd: int,
 def _decode_kernel(pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, block_l: int, L: int, KH: int,
                    hd: int, window: Optional[int], softcap: Optional[float],
-                   scale: float, fields: kref.PackFields, spec):
+                   scale: float, fields: kref.PackFields, spec,
+                   prefix_planes: Optional[int] = None):
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
 
@@ -104,11 +105,15 @@ def _decode_kernel(pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref, o_ref,
 
     # Softmax-fused expansion: only this grid step's block_l-slot tile is
     # decompressed (ref.unpack_tile — the one inline-decompressor body both
-    # decode kernels share), right before it feeds the recurrence.
+    # decode kernels share), right before it feeds the recurrence. In the
+    # draft (prefix_planes) read mode the plane slice happens in VMEM after
+    # the full-block DMA; per-plane BlockSpec indexing that also shrinks
+    # the HBM transfer is a Mosaic port (ROADMAP: TPU sublanes).
     k = kref.unpack_tile(kp_ref[0], kb_ref[0], fields, spec, rows=block_l,
-                         KH=KH, hd=hd)          # (block_l, KH, hd)
+                         KH=KH, hd=hd,
+                         prefix_planes=prefix_planes)  # (block_l, KH, hd)
     v = kref.unpack_tile(vp_ref[0], vb_ref[0], fields, spec, rows=block_l,
-                         KH=KH, hd=hd)
+                         KH=KH, hd=hd, prefix_planes=prefix_planes)
     q = q_ref[0].astype(jnp.float32)            # (KH, rep, hd)
 
     s = jnp.einsum("hgd,lhd->hgl", q, k) * scale
@@ -136,7 +141,8 @@ def _decode_kernel(pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("fields", "window", "softcap",
-                                             "block_l", "interpret"))
+                                             "block_l", "interpret",
+                                             "prefix_planes"))
 def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
                         k_bases: jax.Array, v_payload: jax.Array,
                         v_bases: jax.Array, pos: jax.Array, *,
@@ -144,7 +150,8 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,
                         block_l: int = DEFAULT_BLOCK_L,
-                        interpret: Optional[bool] = None) -> jax.Array:
+                        interpret: Optional[bool] = None,
+                        prefix_planes: Optional[int] = None) -> jax.Array:
     """One-token attention over an SFP-packed (B, L, KH*hd) KV cache.
 
     q: (B, 1, H, hd); payload (B, L, fields.nd_payload_cols(D)) — 8/16-bit
@@ -153,8 +160,10 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
     ``bitplane_pack_nd`` layout (D = KH * hd, D % 128 == 0). ``pos`` is
     the absolute decode position — a scalar, or (B,) for
     continuous-batching slots each at their own position; ``window`` not
-    None means an L-slot ring buffer (local attention). Returns
-    (B, 1, H, hd) in q's dtype.
+    None means an L-slot ring buffer (local attention). ``prefix_planes``
+    is the speculative *draft* read mode: only the leading P' payload bits
+    of the same packed cache are expanded, decoded as the truncated
+    geometry (``ref.prefix_fields``). Returns (B, 1, H, hd) in q's dtype.
     """
     interpret = kref.default_interpret(interpret)
     B, one, H, hd = q.shape
@@ -187,7 +196,8 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
     out = pl.pallas_call(
         functools.partial(_decode_kernel, block_l=block_l, L=L, KH=KH,
                           hd=hd, window=window, softcap=softcap, scale=scale,
-                          fields=fields, spec=spec),
+                          fields=fields, spec=spec,
+                          prefix_planes=prefix_planes),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda b, j: (b, 0)),          # per-row pos
@@ -212,7 +222,8 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
 def _paged_kernel(tab_ref, pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref,
                   o_ref, m_scr, l_scr, acc_scr, *, block_l: int, nb: int,
                   KH: int, hd: int, softcap: Optional[float], scale: float,
-                  fields: kref.PackFields, spec):
+                  fields: kref.PackFields, spec,
+                  prefix_planes: Optional[int] = None):
     """One (batch row, logical KV block) step over the paged pool.
 
     The DMA gather already happened: the grid spec's index_map routed this
@@ -236,9 +247,9 @@ def _paged_kernel(tab_ref, pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref,
     # Same softmax-fused per-tile expansion as the contiguous kernel — one
     # shared decompressor body (ref.unpack_tile) for both grids.
     k = kref.unpack_tile(kp_ref[0], kb_ref[0], fields, spec, rows=block_l,
-                         KH=KH, hd=hd)
+                         KH=KH, hd=hd, prefix_planes=prefix_planes)
     v = kref.unpack_tile(vp_ref[0], vb_ref[0], fields, spec, rows=block_l,
-                         KH=KH, hd=hd)
+                         KH=KH, hd=hd, prefix_planes=prefix_planes)
     q = q_ref[0].astype(jnp.float32)
 
     s = jnp.einsum("hgd,lhd->hgl", q, k) * scale
@@ -269,13 +280,14 @@ def _paged_kernel(tab_ref, pos_ref, q_ref, kp_ref, kb_ref, vp_ref, vb_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("fields", "softcap",
-                                             "interpret"))
+                                             "interpret", "prefix_planes"))
 def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
                        k_bases: jax.Array, v_payload: jax.Array,
                        v_bases: jax.Array, tables: jax.Array,
                        pos: jax.Array, *, fields: kref.PackFields,
                        softcap: Optional[float] = None,
-                       interpret: Optional[bool] = None) -> jax.Array:
+                       interpret: Optional[bool] = None,
+                       prefix_planes: Optional[int] = None) -> jax.Array:
     """One-token attention over a *paged* SFP-packed KV block pool.
 
     The serving engine's continuous-batching decode step: pool parts are
@@ -341,7 +353,7 @@ def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
     out = pl.pallas_call(
         functools.partial(_paged_kernel, block_l=block_l, nb=nb, KH=KH,
                           hd=hd, softcap=softcap, scale=scale, fields=fields,
-                          spec=spec),
+                          spec=spec, prefix_planes=prefix_planes),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KH, rep, hd), q.dtype),
         interpret=interpret,

@@ -374,9 +374,47 @@ def unpack_planes(planes: jax.Array, bases: jax.Array, fields: PackFields,
     return _unpack_words(words, bases.astype(jnp.int32), fields, spec)
 
 
+def prefix_fields(fields: PackFields, prefix_planes: int) -> PackFields:
+    """Geometry of the leading ``prefix_planes`` bits of a payload word.
+
+    The payload word layout is most-significant-first (sign, delta-exp,
+    mantissa top), so truncating a P-bit word to its top P' bits yields a
+    valid narrower container with the same sign/dexp fields and
+    ``man_keep - (P - P')`` mantissa bits: ``wide_word >> (P - P')`` *is*
+    the narrow pack of the same values (flush encodings included — a wide
+    flush word truncates to the narrow flush word). In the dense plane
+    layout that truncation is free: planes are stored bit-index-ascending,
+    so the leading P' bits live in the *last* P' planes of each group and
+    a draft read touches a strict byte subset of the packed block.
+
+    ``prefix_planes`` must keep at least one mantissa bit
+    (``dexp_bits + 2 <= prefix_planes <= payload_bits``).
+    """
+    P = int(prefix_planes)
+    if not fields.dexp_bits + 2 <= P <= fields.payload_bits:
+        raise ValueError(
+            f"prefix_planes={P} outside [{fields.dexp_bits + 2}, "
+            f"{fields.payload_bits}] for {fields}")
+    drop = fields.payload_bits - P
+    return PackFields(man_keep=fields.man_keep - drop,
+                      dexp_bits=fields.dexp_bits, payload_bits=P,
+                      dense=fields.dense)
+
+
+def prefix_plane_view(payload: jax.Array, fields: PackFields,
+                      prefix_planes: int) -> jax.Array:
+    """Slice a dense group payload (..., P*16) to its leading-plane prefix
+    (..., P'*16): the last P' planes in storage order (planes are stored
+    LSB-first, and the prefix keeps the *high* bits of the word)."""
+    P, Pp = fields.payload_bits, int(prefix_planes)
+    lead = payload.shape[:-1]
+    pl = payload.reshape(*lead, P, PLANE_BYTES)
+    return pl[..., P - Pp:, :].reshape(*lead, Pp * PLANE_BYTES)
+
+
 def unpack_tile(payload: jax.Array, bases: jax.Array, fields: PackFields,
                 spec: containers.FloatSpec, *, rows: int, KH: int,
-                hd: int) -> jax.Array:
+                hd: int, prefix_planes: Optional[int] = None) -> jax.Array:
     """Shared per-tile decompressor for the packed decode kernels.
 
     ``payload`` (rows, nd_payload_cols(KH*hd)) — fixed-lane words or dense
@@ -385,8 +423,29 @@ def unpack_tile(payload: jax.Array, bases: jax.Array, fields: PackFields,
     the online-softmax loop: only the ``rows`` (= block_l) slots being
     consumed are ever expanded, in VMEM, immediately before the dot —
     dense geometries go through the SWAR plane transpose first.
+
+    ``prefix_planes`` selects the speculative *draft* read mode: only the
+    leading P' bits of each payload word are expanded, decoded as the
+    truncated geometry (``prefix_fields``). Dense geometries slice the
+    plane bytes before the SWAR transpose, so the expansion work (and, on
+    a DMA'd backend, the bytes moved) shrinks with P'; fixed-lane words
+    shift in place (same bytes, same truncated semantics).
     """
     G = (KH * hd) // GROUP
+    if prefix_planes is not None and prefix_planes != fields.payload_bits:
+        nf = prefix_fields(fields, prefix_planes)
+        if fields.dense:
+            planes = prefix_plane_view(
+                payload.reshape(rows, G, fields.group_payload_bytes),
+                fields, prefix_planes)
+            x = unpack_planes(planes, bases.reshape(rows, G, 1), nf, spec)
+        else:
+            drop = fields.payload_bits - nf.payload_bits
+            p = payload.astype(jnp.int32).reshape(rows, G, GROUP) >> drop
+            x = _unpack_words(p,
+                              bases.astype(jnp.int32).reshape(rows, G, 1),
+                              nf, spec)
+        return x.reshape(rows, KH, hd).astype(jnp.float32)
     if fields.dense:
         x = unpack_planes(
             payload.reshape(rows, G, fields.group_payload_bytes),
@@ -557,7 +616,8 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
                         v_bases: jax.Array, pos, fields: PackFields, *,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,
-                        block_l: Optional[int] = None) -> jax.Array:
+                        block_l: Optional[int] = None,
+                        prefix_planes: Optional[int] = None) -> jax.Array:
     """Unpack-then-attend decode oracle for kernels/packed_flash_decode.py.
 
     Decompresses the whole packed cache (same bit logic as the kernel:
@@ -571,7 +631,9 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
     planes; the kernel expands the planes inline). GQA is grouped: q head
     h reads kv head h // (H // KH). ``pos`` is scalar (whole batch at one
     position) or (B,) — one decode position per batch row (the serving
-    engine's continuous-batching slots).
+    engine's continuous-batching slots). ``prefix_planes`` is the
+    speculative draft read mode: expand only the leading P' payload bits
+    (see ``prefix_fields``) of the same packed cache.
     """
     B, _, H, hd = q.shape
     L, G = k_bases.shape[1], k_bases.shape[2]
@@ -590,7 +652,8 @@ def packed_flash_decode(q: jax.Array, k_payload: jax.Array,
         # Same tile decompressor the kernels run (rows = every slot here:
         # the oracle expands the whole cache up front).
         x = unpack_tile(payload.reshape(B * L, -1), bases.reshape(B * L, G),
-                        fields, spec, rows=B * L, KH=KH, hd=hd)
+                        fields, spec, rows=B * L, KH=KH, hd=hd,
+                        prefix_planes=prefix_planes)
         return x.reshape(B, L, KH, hd)
 
     k = unp(k_payload, k_bases)
@@ -643,7 +706,8 @@ def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
                        k_bases: jax.Array, v_payload: jax.Array,
                        v_bases: jax.Array, tables: jax.Array, pos,
                        fields: PackFields, *,
-                       softcap: Optional[float] = None) -> jax.Array:
+                       softcap: Optional[float] = None,
+                       prefix_planes: Optional[int] = None) -> jax.Array:
     """Gather-unpack-attend oracle for the paged flash-decode kernel.
 
     Pool parts are (P_blocks, block_l, D) / (P_blocks, block_l, D // 128)
@@ -659,7 +723,8 @@ def paged_flash_decode(q: jax.Array, k_payload: jax.Array,
     return packed_flash_decode(
         q, paged_gather(k_payload, tables), paged_gather(k_bases, tables),
         paged_gather(v_payload, tables), paged_gather(v_bases, tables),
-        pos, fields, window=None, softcap=softcap, block_l=block_l)
+        pos, fields, window=None, softcap=softcap, block_l=block_l,
+        prefix_planes=prefix_planes)
 
 
 # ---------------------------------------------------------------------------

@@ -168,7 +168,8 @@ def run_trace(args) -> None:
     t0 = time.time()
     try:
         out = sched.run(reqs, now_fn=now, burst=args.burst,
-                        fault_hook=step_hook)
+                        fault_hook=step_hook, speculate=args.speculate,
+                        draft_planes=args.draft_planes)
     finally:
         if prof["on"]:
             jax.profiler.stop_trace()
@@ -209,7 +210,24 @@ def run_trace(args) -> None:
         "quarantined_blocks": pool.quarantined,
         "injected_faults": hook.counts() if hook else {},
     }
+    if args.speculate:
+        report["speculate"] = args.speculate
+        report["draft_planes"] = (args.draft_planes if args.draft_planes
+                                  is not None
+                                  else eng.default_draft_planes())
+        report["spec_rounds"] = s.spec_rounds
+        report["drafted"] = s.drafted
+        report["draft_accepted"] = s.draft_accepted
+        report["draft_rejected"] = s.draft_rejected
+        report["acceptance_rate"] = round(
+            s.draft_accepted / max(1, s.drafted), 3)
     obs.close()  # writes --metrics-out / --trace-out, closes streams
+    if args.tokens_out:
+        # Per-request emitted streams, for identity diffs across runs
+        # (e.g. CI asserts --speculate K streams == burst=1 streams).
+        Path(args.tokens_out).write_text(json.dumps(
+            {int(uid): [int(t) for t in toks] for uid, toks in out.items()},
+            sort_keys=True))
     print(json.dumps(report, indent=2))
 
 
@@ -251,6 +269,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--burst", type=int, default=1,
                     help="decode tokens per scheduler step (one scan "
                     "dispatch)")
+    ap.add_argument("--speculate", type=int, default=None, metavar="K",
+                    help="self-speculative decoding: K draft steps at "
+                    "prefix-precision reads + one full-width verify per "
+                    "scheduler step (token-identical to --burst 1)")
+    ap.add_argument("--draft-planes", type=int, default=None,
+                    help="bit planes the draft expands per group "
+                    "(default: container payload width - 1)")
+    ap.add_argument("--tokens-out", default=None,
+                    help="write the per-request emitted token streams "
+                    "(JSON uid -> tokens) for identity diffs across runs")
     # fault tolerance / chaos
     ap.add_argument("--flood", action="store_true",
                     help="collapse every trace arrival to t=0")

@@ -449,7 +449,7 @@ class DecoderModel:
         return cache
 
     def _decode_slot(self, slot_params, h, slot_cache, pos, kind,
-                     tables=None):
+                     tables=None, prefix_planes=None):
         cfg = self.cfg
         hn = common.rmsnorm(slot_params["pre_norm"], h)
         if kind in (GLOBAL, LOCAL):
@@ -460,11 +460,13 @@ class DecoderModel:
                 # below with per-row positions.
                 out, new_cache = _kvcache().attention_decode_paged(
                     slot_params["attn"], hn, slot_cache, tables, pos, cfg,
-                    container=self.kv_container)
+                    container=self.kv_container,
+                    prefix_planes=prefix_planes)
             elif self.kv_container is not None:
                 out, new_cache = _kvcache().attention_decode_packed(
                     slot_params["attn"], hn, slot_cache, pos, cfg, kind=kind,
-                    container=self.kv_container)
+                    container=self.kv_container,
+                    prefix_planes=prefix_planes)
             else:
                 out, new_cache = attention.attention_decode(
                     slot_params["attn"], hn, slot_cache, pos, cfg, kind=kind)
@@ -569,7 +571,8 @@ class DecoderModel:
         return logits, cache
 
     def decode_step(self, params, cache, token: jax.Array, pos: jax.Array,
-                    tables: Optional[jax.Array] = None
+                    tables: Optional[jax.Array] = None,
+                    prefix_planes: Optional[int] = None
                     ) -> Tuple[jax.Array, Any]:
         """One decode step. token: (B, 1) int32; pos: scalar int32 absolute
         position (prefix + generated so far). Returns (logits (B, 1, V), cache).
@@ -581,7 +584,14 @@ class DecoderModel:
         ``kvcache.PagedKV`` pool slices addressed through the tables, and
         local ring / SSD / RGLRU layers hold per-slot dense state.
         Requires ``kv_container`` in that mode.
+
+        ``prefix_planes`` makes every packed-attention *read* expand only
+        the leading P' payload bits (the speculative draft mode); K/V
+        writes and all recurrent state updates stay full-fidelity.
+        Requires ``kv_container``.
         """
+        assert prefix_planes is None or self.kv_container is not None, \
+            "prefix_planes (draft reads) needs a packed kv_container"
         shd.set_active_mesh(self.mesh, self.rules)
         cfg = self.cfg
         scale = (cfg.d_model ** 0.5) if cfg.emb_scale else None
@@ -592,7 +602,8 @@ class DecoderModel:
             new_c = {}
             for i, kind in enumerate(cfg.period):
                 h, nc = self._decode_slot(p[f"slot{i}"], h, c[f"slot{i}"],
-                                          pos, kind, tables=tables)
+                                          pos, kind, tables=tables,
+                                          prefix_planes=prefix_planes)
                 new_c[f"slot{i}"] = nc
             return h, new_c
 
@@ -604,7 +615,8 @@ class DecoderModel:
             for i, kind in enumerate(cfg.remainder):
                 h, nc = self._decode_slot(params["rem"][f"slot{i}"], h,
                                           cache["rem"][f"slot{i}"], pos,
-                                          kind, tables=tables)
+                                          kind, tables=tables,
+                                          prefix_planes=prefix_planes)
                 new_cache["rem"][f"slot{i}"] = nc
         h = common.rmsnorm(params["final_norm"], h)
         logits = common.unembed(params, h, tied=cfg.tie_embeddings,
@@ -613,8 +625,10 @@ class DecoderModel:
         return logits, new_cache
 
     def decode_step_paged(self, params, cache, token: jax.Array,
-                          pos: jax.Array, tables: jax.Array
+                          pos: jax.Array, tables: jax.Array,
+                          prefix_planes: Optional[int] = None
                           ) -> Tuple[jax.Array, Any]:
         """Paged decode step (see ``decode_step`` with ``tables``)."""
         assert self.kv_container is not None, "paged decode needs a codec"
-        return self.decode_step(params, cache, token, pos, tables=tables)
+        return self.decode_step(params, cache, token, pos, tables=tables,
+                                prefix_planes=prefix_planes)

@@ -264,7 +264,10 @@ class PagedEngine:
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
         self._bursts: Dict[int, Any] = {}  # K -> compiled scan loop
+        # (K, draft_planes) -> compiled self-speculative draft+verify round
+        self._specs: Dict[Tuple[int, int], Any] = {}
         self.decode_steps = 0
+        self.spec_rounds = 0
         # Block integrity: a cheap per-physical-block checksum over the
         # packed planes (kvcache.paged_block_checksums summed across the
         # global layers), recomputed after every legitimate write
@@ -646,5 +649,179 @@ class PagedEngine:
         res = np.asarray(out), np.asarray(bad)
         self._observe("serve_decode_seconds",
                       "decode dispatch wall time (whole burst)",
+                      time.perf_counter() - t0)
+        return res
+
+    # -- self-speculative decoding ---------------------------------------
+
+    def default_draft_planes(self) -> int:
+        """Deepest valid draft prefix shallower than full width, if any.
+
+        The draft must keep the sign, the full shared-exponent delta and
+        at least one mantissa bit (``ops.prefix_fields`` enforces this),
+        so very narrow containers (e.g. sfp-m1e2) may only support the
+        full width — speculation still works, the draft just reads every
+        plane.
+        """
+        fields = _kvcache._paged_fields(self.cfg, self.container)
+        return max(fields.payload_bits - 1, fields.dexp_bits + 2)
+
+    def validate_draft_planes(self, draft_planes: int) -> int:
+        """Check ``draft_planes`` against the pool geometry; returns it."""
+        fields = _kvcache._paged_fields(self.cfg, self.container)
+        ops.prefix_fields(fields, int(draft_planes))  # raises ValueError
+        return int(draft_planes)
+
+    def _non_global_keys(self) -> Tuple[tuple, tuple]:
+        """slot keys of the per-slot (non paged-pool) layer state in mem."""
+        per = tuple(f"slot{i}" for i, k in enumerate(self.cfg.period)
+                    if k != GLOBAL)
+        rem = tuple(f"slot{i}" for i, k in enumerate(self.cfg.remainder)
+                    if k != GLOBAL)
+        return per, rem
+
+    def _make_spec(self, K: int, draft_planes: int):
+        """Compiled self-speculative round: K draft steps at prefix
+        precision, one batched full-width verify, device-side acceptance
+        and bit-exact state rollback — a single executable per
+        (K, draft_planes), memoized like the burst loops.
+
+        Protocol (greedy, guaranteed token-identical to plain decode):
+
+        * **Draft**: ``lax.scan`` of K decode steps whose packed-attention
+          reads expand only the leading ``draft_planes`` bit planes per
+          group (``prefix_planes``); KV writes and recurrent updates stay
+          full width.
+        * **Rewind**: per-slot layer state (local packed rings, SSD and
+          RGLRU states) is restored to its round-start snapshot. Paged
+          pool rows the draft wrote need no rollback: the verify pass
+          rewrites each position before any step can attend to it, and
+          rows past the current position are causally masked — so
+          speculation allocates and touches exactly the blocks a burst of
+          the same horizon would (zero additional pool bytes).
+        * **Verify**: ``lax.scan`` of K full-width steps teacher-forced
+          with [token, d_1..d_{K-1}] over the same positions, stacking
+          the per-slot layer state after every step.
+        * **Accept**: per slot, ``m`` = longest prefix with d_i == v_i;
+          ``n_emit = min(m+1, K)`` (the verifier's correction token is
+          always emitted, so at least one token commits per round). The
+          committed per-slot state is the verify stack at step
+          ``n_emit-1``; because accepted verify steps consumed exactly
+          the tokens a non-speculative decode would have, that state —
+          and every emitted token — is bit-exact vs. ``burst=1`` decode.
+
+        The stacked rollback state costs K extra copies of the per-slot
+        (window/width-bounded) layers inside the executable — never of
+        the block pool itself.
+        """
+        per_keys, rem_keys = self._non_global_keys()
+
+        def extract(mem):
+            out = {"periods": {k: mem["periods"][k] for k in per_keys}}
+            if rem_keys:
+                out["rem"] = {k: mem["rem"][k] for k in rem_keys}
+            return out
+
+        def merge(mem, ng):
+            out = {"periods": {**mem["periods"], **ng["periods"]}}
+            if "rem" in mem:
+                out["rem"] = {**mem["rem"], **ng.get("rem", {})}
+            return out
+
+        S = self.max_slots
+
+        def gather_committed(stack, n_emit):
+            """Per-slot pick of the verify stack at step n_emit[s]-1.
+
+            Leaves are (K, n_periods, slots, ...) under "periods" and
+            (K, slots, ...) under "rem"; the step axis is gathered at a
+            different index per slot.
+            """
+            idx = n_emit - 1  # (S,) in [0, K)
+
+            def pick(leaf, slot_axis):
+                ym = jnp.moveaxis(leaf, slot_axis, 1)  # (K, S, ...)
+                out = ym[idx, jnp.arange(S)]           # (S, ...)
+                return jnp.moveaxis(out, 0, slot_axis - 1)
+
+            out = {"periods": jax.tree.map(lambda a: pick(a, 2),
+                                           stack["periods"])}
+            if "rem" in stack:
+                out["rem"] = jax.tree.map(lambda a: pick(a, 1),
+                                          stack["rem"])
+            return out
+
+        def spec(params, mem, tables, toks, pos):
+            snap = extract(mem)
+
+            def dstep(carry, i):
+                tok, mem = carry
+                logits, mem = self.model.decode_step_paged(
+                    params, mem, tok, pos + i, tables,
+                    prefix_planes=draft_planes)
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                return (nxt[:, None], mem), nxt
+
+            (_, mem), drafts = jax.lax.scan(
+                dstep, (toks, mem), jnp.arange(K, dtype=jnp.int32))
+
+            mem = merge(mem, snap)  # rewind per-slot state for verify
+
+            vin = jnp.concatenate([toks[:, 0][None], drafts[:-1]], axis=0)
+
+            def vstep(mem, x):
+                tok, i = x
+                logits, mem = self.model.decode_step_paged(
+                    params, mem, tok[:, None], pos + i, tables)
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                bad = ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
+                return mem, (nxt, bad, extract(mem))
+
+            mem, (verifs, bad, stack) = jax.lax.scan(
+                vstep, mem, (vin, jnp.arange(K, dtype=jnp.int32)))
+
+            match = jnp.cumprod((drafts == verifs).astype(jnp.int32), axis=0)
+            accepted = jnp.sum(match, axis=0)           # (S,) m in [0, K]
+            n_emit = jnp.minimum(accepted + 1, K)       # (S,) in [1, K]
+
+            mem = merge(mem, gather_committed(stack, n_emit))
+            return verifs, bad, accepted, n_emit, mem
+
+        return jax.jit(spec, donate_argnums=(1,))
+
+    def speculate(self, toks: np.ndarray, pos: np.ndarray, K: int,
+                  draft_planes: Optional[int] = None):
+        """One self-speculative round over every slot.
+
+        Same calling convention as ``decode_burst``: every running slot
+        must own blocks covering ``pos + K`` (``pos + K <= max_len``).
+        Returns ``(verifs (K, max_slots), bad (K, max_slots),
+        accepted (max_slots,), n_emit (max_slots,))`` — ``accepted`` is
+        the per-slot count of drafts the verify pass confirmed (0..K);
+        ``n_emit = min(accepted+1, K)`` counts the tokens actually
+        decoded (the verifier's correction token always commits). The
+        caller streams ``verifs[:n_emit[s], s]`` per slot; the rejected
+        suffix was rolled back on device.
+        """
+        K = int(K)
+        assert K >= 1, K
+        if draft_planes is None:
+            draft_planes = self.default_draft_planes()
+        dp = self.validate_draft_planes(draft_planes)
+        fn = self._specs.get((K, dp))
+        if fn is None:
+            fn = self._specs[(K, dp)] = self._make_spec(K, dp)
+        t0 = time.perf_counter()
+        tables = jnp.asarray(self.pool.tables)
+        verifs, bad, accepted, n_emit, self.mem = fn(
+            self.params, self.mem, tables,
+            jnp.asarray(toks, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32))
+        self.decode_steps += 2 * K  # K draft + K verify model steps
+        self.spec_rounds += 1
+        res = (np.asarray(verifs), np.asarray(bad), np.asarray(accepted),
+               np.asarray(n_emit))
+        self._observe("serve_spec_seconds",
+                      "speculative draft+verify round wall time",
                       time.perf_counter() - t0)
         return res

@@ -114,7 +114,8 @@ def _splice(cache_pt: codecs.PackedTensor, new_pt: codecs.PackedTensor,
 
 def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
                             pos: jax.Array, cfg: ArchConfig, *, kind: str,
-                            container: Optional[str] = None
+                            container: Optional[str] = None,
+                            prefix_planes: Optional[int] = None
                             ) -> Tuple[jax.Array, PackedKV]:
     """One-token decode over the compressed cache.
 
@@ -126,6 +127,12 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
     backend — the whole cache is decompressed first and attended with
     ``decode_attend`` (both paths share the ring-slot semantics of
     ``ops.decode_kv_mask``).
+
+    ``prefix_planes`` (speculative draft steps) makes the attention *read*
+    expand only the leading P' payload bits of the packed cache
+    (``ops.prefix_fields``); the write path is unchanged — drafts append
+    full-width rows, so the cache bytes a later verify reads are identical.
+    Requires a fixed-width geometry (``pack_fields``).
     """
     codec = _codec(container)
     B = h_tok.shape[0]
@@ -156,8 +163,14 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
                    slot)
 
     fields = codec.pack_fields(dtype)
-    if fields is not None and ops.backend() in ("pallas", "interpret"):
+    if prefix_planes is not None and fields is None:
+        raise ValueError(f"prefix_planes needs a fixed-width payload "
+                         f"geometry; codec {codec.name!r} has none")
+    if fields is not None and (prefix_planes is not None
+                               or ops.backend() in ("pallas", "interpret")):
         # Fused decompress-attend: the packed pair is the attention input.
+        # Draft (prefix) reads take this path on every backend — the ref
+        # oracle implements the same truncated-geometry expansion.
         window = cfg.window if kind == LOCAL else None
         o = ops.packed_flash_decode(
             q.astype(dtype),
@@ -165,7 +178,8 @@ def attention_decode_packed(params, h_tok: jax.Array, cache: PackedKV,
                        bases=k_pt.data["bases"]),
             ops.Packed(payload=v_pt.data["payload"],
                        bases=v_pt.data["bases"]),
-            pos, fields=fields, window=window, softcap=cfg.attn_softcap)
+            pos, fields=fields, window=window, softcap=cfg.attn_softcap,
+            prefix_planes=prefix_planes)
     else:
         # Fallback: decompress the whole cache, then attend over it.
         k_c = codec.unpack(k_pt).reshape(B, L, KH, hd)
@@ -286,7 +300,8 @@ def paged_block_checksums(paged: PagedKV, salt: int = 0) -> jax.Array:
 def attention_decode_paged(params, h_tok: jax.Array, paged: PagedKV,
                            tables: jax.Array, pos: jax.Array,
                            cfg: ArchConfig, *,
-                           container: Optional[str] = None
+                           container: Optional[str] = None,
+                           prefix_planes: Optional[int] = None
                            ) -> Tuple[jax.Array, PagedKV]:
     """One continuous-batching decode step over the paged block pool.
 
@@ -299,6 +314,8 @@ def attention_decode_paged(params, h_tok: jax.Array, paged: PagedKV,
     the scalar-prefetched block table. Global attention only (local ring
     buffers are window-bounded and stay per-slot contiguous). The pool is
     a single-host structure; multi-host pool sharding is future work.
+    ``prefix_planes`` (speculative draft steps) expands only the leading
+    P' payload bits on the read side; writes stay full width.
     """
     codec = _codec(container)
     B = h_tok.shape[0]
@@ -331,6 +348,7 @@ def attention_decode_paged(params, h_tok: jax.Array, paged: PagedKV,
         q.astype(dtype),
         ops.Packed(payload=paged.k_payload, bases=paged.k_bases),
         ops.Packed(payload=paged.v_payload, bases=paged.v_bases),
-        tables, pos, fields=fields, softcap=cfg.attn_softcap)
+        tables, pos, fields=fields, softcap=cfg.attn_softcap,
+        prefix_planes=prefix_planes)
     out = o.reshape(B, 1, H * hd) @ params["wo"]
     return out, paged

@@ -94,6 +94,8 @@ class RequestResult:
     tokens: np.ndarray          # every token emitted (partial if not ok)
     container: str              # geometry the final residency stored KV at
     recoveries: int = 0
+    drafted: int = 0            # speculative drafts proposed for this uid
+    draft_accepted: int = 0     # drafts the full-width verify confirmed
 
 
 @dataclasses.dataclass
@@ -134,7 +136,11 @@ class SchedulerStats:
                  "alloc_failures": "serve_alloc_failures_total",
                  "recompute_tokens": "serve_recompute_tokens_total",
                  "downshifted": "serve_downshifted_total",
-                 "submitted": "serve_submitted_total"}
+                 "submitted": "serve_submitted_total",
+                 "drafted": "serve_drafted_total",
+                 "draft_accepted": "serve_draft_accepted_total",
+                 "draft_rejected": "serve_draft_rejected_total",
+                 "spec_rounds": "serve_spec_rounds_total"}
 
     def __init__(self, registry: obs_mod.MetricsRegistry):
         self._reg = registry
@@ -229,6 +235,18 @@ class Scheduler:
         self._c_downshift = reg.counter(
             "serve_downshifted_total",
             "admissions downshifted to the degraded geometry")
+        self._c_drafted = reg.counter(
+            "serve_drafted_total",
+            "speculative draft tokens proposed (prefix-precision reads)")
+        self._c_draft_acc = reg.counter(
+            "serve_draft_accepted_total",
+            "draft tokens the full-width verify pass confirmed")
+        self._c_draft_rej = reg.counter(
+            "serve_draft_rejected_total",
+            "draft tokens rejected at verify (state rolled back)")
+        self._c_spec_rounds = reg.counter(
+            "serve_spec_rounds_total",
+            "speculative draft+verify rounds dispatched")
         self._h_ttft = reg.histogram(
             "serve_ttft_seconds", "submit-to-first-token wall time",
             unit="s")
@@ -251,6 +269,9 @@ class Scheduler:
         # holds in-flight requests.
         self._history: Dict[Any, List[int]] = {}
         self._recoveries: Dict[Any, int] = {}
+        # uid -> [drafted, accepted] speculative bookkeeping; survives
+        # requeue like _history, moves into RequestResult at terminal time.
+        self._spec_acc: Dict[Any, List[int]] = {}
         self._terminal: "deque[Any]" = deque()  # completion order (LRU)
 
     # -- queue -----------------------------------------------------------
@@ -315,11 +336,13 @@ class Scheduler:
 
     def _record(self, uid: Any, status: str, narrow: bool = False) -> None:
         toks = np.asarray(self._history.pop(uid, []), np.int32)
+        drafted, draft_acc = self._spec_acc.pop(uid, (0, 0))
         res = RequestResult(
             status=status, tokens=toks,
             container=(self.engine.degraded_container if narrow
                        else self.engine.container),
-            recoveries=self._recoveries.pop(uid, 0))
+            recoveries=self._recoveries.pop(uid, 0),
+            drafted=int(drafted), draft_accepted=int(draft_acc))
         self.results[uid] = res
         # The single terminal-outcome increment: every path that ends a
         # request funnels through here, so summing the outcome series
@@ -638,7 +661,9 @@ class Scheduler:
 
     # -- the loop --------------------------------------------------------
 
-    def step(self, now: Optional[float] = None, burst: int = 1
+    def step(self, now: Optional[float] = None, burst: int = 1,
+             speculate: Optional[int] = None,
+             draft_planes: Optional[int] = None
              ) -> List[Tuple[Any, int, bool]]:
         """Expire, shed, verify, admit, then advance every running slot by
         up to ``burst`` tokens in one jitted dispatch. Admission, slot
@@ -647,9 +672,24 @@ class Scheduler:
         replayed in step order from the burst's (K, max_slots) token
         buffer, so a request that hits its budget mid-burst still sees
         ``done`` on exactly its last token. Returns the (uid, token,
-        done) tuples emitted this step."""
+        done) tuples emitted this step.
+
+        ``speculate=K`` replaces the burst with one self-speculative
+        round (``engine.speculate``): K draft steps at
+        ``draft_planes``-bit prefix reads, one batched full-width
+        verify, and per-slot acceptance — each slot commits between 1
+        and K tokens, greedy-guaranteed identical to ``burst=1`` output.
+        Rejected suffixes are rolled back on device; ``n_ctx`` advances
+        only by the tokens actually emitted, so pool byte accounting is
+        untouched by rejection. Draft precision is engine-wide (the
+        executable is specialized on it): degraded (downshifted)
+        admissions store narrow-requantized planes whose low mantissa
+        bit planes are zero, so a prefix at or above the degraded width
+        reads their KV exactly — they effectively draft at their own
+        narrower prefix, and verification covers the rest.
+        """
         t0 = time.perf_counter()
-        emitted = self._step_inner(now, burst)
+        emitted = self._step_inner(now, burst, speculate, draft_planes)
         wall = time.perf_counter() - t0
         self._h_step.observe(wall)
         if emitted:
@@ -687,8 +727,10 @@ class Scheduler:
             pressure="degraded" if degraded else "normal",
             quarantined=ps.quarantined, running=len(self.running))
 
-    def _step_inner(self, now: Optional[float],
-                    burst: int) -> List[Tuple[Any, int, bool]]:
+    def _step_inner(self, now: Optional[float], burst: int,
+                    speculate: Optional[int] = None,
+                    draft_planes: Optional[int] = None
+                    ) -> List[Tuple[Any, int, bool]]:
         emitted: List[Tuple[Any, int, bool]] = []
         self._expire(now)
         self._shed(now)
@@ -696,7 +738,9 @@ class Scheduler:
         self._admit(now, emitted)
         if not self.running:
             return emitted
-        K = self._burst_len(burst)
+        if speculate is not None and int(speculate) < 1:
+            raise ValueError(f"speculate must be >= 1, got {speculate}")
+        K = self._burst_len(burst if speculate is None else speculate)
         try:
             self._ensure_blocks(K)
         except RuntimeError:
@@ -725,22 +769,50 @@ class Scheduler:
                                       if p != TRASH_BLOCK)
                        for st in self.running.values()}
         t_dec = time.perf_counter()
-        nxt, bad = self.engine.decode_burst(toks, pos, K)  # (K, max_slots)
+        if speculate is None:
+            nxt, bad = self.engine.decode_burst(toks, pos, K)
+            # Uniform replay: every slot streams all K burst tokens.
+            n_emit = np.full(self.engine.max_slots, K, np.int64)
+            accepted = None
+            self._c_decode.inc(K)
+        else:
+            nxt, bad, accepted, n_emit = self.engine.speculate(
+                toks, pos, K, draft_planes)  # nxt/bad: (K, max_slots)
+            self._c_decode.inc(2 * K)  # K draft + K verify model steps
+            self._c_spec_rounds.inc()
         dec_wall = time.perf_counter() - t_dec
-        self._c_decode.inc(K)
 
         live = list(self.running.values())
         tracer = self.obs.tracer
-        if tracer is not None:
-            # One decode span per participating request per burst: the
-            # token positions advanced and the geometry it was served at.
+        if speculate is not None:
+            # Acceptance bookkeeping happens before replay (terminal
+            # replay paths pop _spec_acc into the request's result).
             for st in live:
-                tracer.complete(
-                    "decode", str(st.req.uid), dec_wall, burst=K,
-                    slot=st.slot, n_ctx=st.n_ctx,
-                    blocks=len(slot_blocks[st.slot]),
-                    geometry=(self.engine.degraded_container if st.narrow
-                              else self.engine.container))
+                acc = int(accepted[st.slot])
+                self._c_drafted.inc(K)
+                self._c_draft_acc.inc(acc)
+                self._c_draft_rej.inc(K - acc)
+                pair = self._spec_acc.setdefault(st.req.uid, [0, 0])
+                pair[0] += K
+                pair[1] += acc
+        if tracer is not None:
+            # One decode/spec span per participating request per round:
+            # the token positions advanced and the geometry served at.
+            for st in live:
+                geom = (self.engine.degraded_container if st.narrow
+                        else self.engine.container)
+                if speculate is None:
+                    tracer.complete(
+                        "decode", str(st.req.uid), dec_wall, burst=K,
+                        slot=st.slot, n_ctx=st.n_ctx,
+                        blocks=len(slot_blocks[st.slot]), geometry=geom)
+                else:
+                    tracer.complete(
+                        "spec", str(st.req.uid), dec_wall, horizon=K,
+                        accepted=int(accepted[st.slot]),
+                        emitted=int(n_emit[st.slot]),
+                        slot=st.slot, n_ctx=st.n_ctx,
+                        blocks=len(slot_blocks[st.slot]), geometry=geom)
         poisoned: Dict[int, _Running] = {}
         for i in range(K):
             for st in live:
@@ -748,6 +820,8 @@ class Scheduler:
                     continue  # finished earlier in this burst
                 if st.slot in poisoned:
                     continue  # NaN guard tripped earlier in this burst
+                if i >= n_emit[st.slot]:
+                    continue  # speculative round: rejected suffix
                 if bad[i, st.slot]:
                     # Non-finite logits: this token and everything chained
                     # after it is garbage — stop streaming, recover below.
@@ -766,15 +840,19 @@ class Scheduler:
         return emitted
 
     def run(self, requests=None, now_fn=None, max_steps: int = 100_000,
-            burst: int = 1, fault_hook=None) -> Dict[Any, np.ndarray]:
+            burst: int = 1, fault_hook=None,
+            speculate: Optional[int] = None,
+            draft_planes: Optional[int] = None) -> Dict[Any, np.ndarray]:
         """Drive until every submitted request reaches a terminal state.
         ``now_fn`` feeds the admission clock (trace simulation); None
         admits on submit order only. ``burst`` > 1 decodes K tokens per
         scheduler step (one scan dispatch), touching the host only
-        between bursts. ``fault_hook(step)`` runs before each step —
-        the serving analogue of the train loop's chaos hook (the
-        FaultInjector plugs in here). Returns uid -> tokens for requests
-        that finished ``ok``; other outcomes are in ``results``."""
+        between bursts; ``speculate=K`` instead runs self-speculative
+        draft+verify rounds (see ``step``). ``fault_hook(step)`` runs
+        before each step — the serving analogue of the train loop's
+        chaos hook (the FaultInjector plugs in here). Returns uid ->
+        tokens for requests that finished ``ok``; other outcomes are in
+        ``results``."""
         if requests:
             for r in requests:
                 self.submit(r)
@@ -784,5 +862,6 @@ class Scheduler:
             if fault_hook is not None:
                 fault_hook(step_i)
             self.step(now=None if now_fn is None else now_fn(),
-                      burst=burst)
+                      burst=burst, speculate=speculate,
+                      draft_planes=draft_planes)
         raise RuntimeError(f"scheduler did not drain in {max_steps} steps")

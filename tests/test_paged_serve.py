@@ -376,14 +376,16 @@ def test_generate_memoizes_compiled_functions():
 # ---------------------------------------------------------------------------
 
 
-def _burst_stream_run(model, params, reqs, burst, stream=None, **eng_kw):
+def _burst_stream_run(model, params, reqs, burst, stream=None,
+                      speculate=None, draft_planes=None, **eng_kw):
     ops.force_backend("ref")
     try:
         eng = engine.PagedEngine(model, params, **eng_kw)
         sched = Scheduler(
             eng, on_token=None if stream is None else
             (lambda uid, tok, done: stream.append((uid, tok, done))))
-        out = sched.run(reqs, burst=burst)
+        out = sched.run(reqs, burst=burst, speculate=speculate,
+                        draft_planes=draft_planes)
     finally:
         ops.force_backend(None)
     return eng, sched, out
@@ -563,6 +565,134 @@ def test_burst_matches_generate_interpret():
                                    max_new=r.max_new, max_len=eng.max_len)
             np.testing.assert_array_equal(out[r.uid],
                                           np.asarray(want.tokens[0]))
+    finally:
+        ops.force_backend(None)
+
+
+# ---------------------------------------------------------------------------
+# Self-speculative decoding
+# ---------------------------------------------------------------------------
+
+
+def test_speculate_token_streams_identical_to_single_step():
+    """Greedy self-speculation is a pacing change, not a semantic one:
+    the full-width verify corrects every draft divergence, so per-uid
+    streams (values, order, done flags) must equal burst=1 exactly — and
+    drafting reads the *same* pool blocks, so peak pool usage must equal
+    a burst run of the same horizon (zero additional pool bytes)."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    sizes, news = [4, 6, 5], [2, 5, 9]
+
+    def reqs():
+        rng = np.random.RandomState(8)
+        return [Request(uid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(
+                    zip(_prompts(rng, cfg, sizes), news))]
+
+    stream1, streamS = [], []
+    _, s1, out1 = _burst_stream_run(model, params, reqs(), 1, stream1,
+                                    max_slots=3, max_len=128)
+    engB, _, _ = _burst_stream_run(model, params, reqs(), 4,
+                                   max_slots=3, max_len=128)
+    engS, sS, outS = _burst_stream_run(model, params, reqs(), 1, streamS,
+                                       speculate=4,
+                                       max_slots=3, max_len=128)
+    assert set(out1) == set(outS)
+    for uid in out1:
+        np.testing.assert_array_equal(out1[uid], outS[uid])
+
+    def per_uid(stream):
+        per = {}
+        for uid, tok, done in stream:
+            per.setdefault(uid, []).append((tok, done))
+        return per
+
+    assert per_uid(stream1) == per_uid(streamS)
+    # Draft + verify touch only blocks a K-burst would also own: the
+    # same-horizon burst run is the pool-bytes ceiling.
+    assert engS.pool.stats().peak_used == engB.pool.stats().peak_used
+    # The speculative run drafted something and the verify accepted a
+    # nonzero prefix somewhere (greedy drafts at 7 of 8 payload bits
+    # agree with full width most steps).
+    assert sS.stats.spec_rounds >= 1 and sS.stats.drafted > 0
+    assert sS.stats.draft_accepted > 0
+
+
+def test_speculate_acceptance_bookkeeping():
+    """Counters and per-request terminal records stay consistent:
+    accepted + rejected == drafted globally, per-uid drafted/accepted
+    sum to the scheduler totals, and the engine's model-step accounting
+    charges K draft + K verify steps per round."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(21)
+    reqs = [Request(uid=i, prompt=p, max_new=n)
+            for i, (p, n) in enumerate(
+                zip(_prompts(rng, cfg, [4, 7]), [6, 9]))]
+    eng, sched, out = _burst_stream_run(model, params, reqs, 1,
+                                        speculate=3,
+                                        max_slots=2, max_len=128)
+    s = sched.stats
+    assert s.spec_rounds >= 1
+    assert s.draft_accepted + s.draft_rejected == s.drafted > 0
+    res = [sched.results[r.uid] for r in reqs]
+    assert all(r.status == "ok" for r in res)
+    assert sum(r.drafted for r in res) == s.drafted
+    assert sum(r.draft_accepted for r in res) == s.draft_accepted
+    assert all(0 <= r.draft_accepted <= r.drafted for r in res)
+    # one spec round = K draft + K verify jitted model steps (K may be
+    # clamped below 3 near the budget wall, but always pairs up)
+    assert eng.decode_steps == s.decode_steps
+    assert s.decode_steps % 2 == 0
+    assert s.decode_steps <= 6 * s.spec_rounds
+    assert s.emitted_tokens == sum(len(v) for v in out.values())
+
+
+def test_speculate_dense_geometry_and_draft_depth():
+    """Dense bit-plane pools speculate too, across the legal draft-depth
+    range: the minimum prefix (dexp_bits + 2) and the widest
+    (payload - 1) both stream token-identical to burst=1."""
+    cfg, model = _model("mistral-large-123b", "sfp-m3e5")
+    params = model.init(jax.random.PRNGKey(0))
+
+    def reqs():
+        rng = np.random.RandomState(5)
+        return [Request(uid=i, prompt=p, max_new=n)
+                for i, (p, n) in enumerate(
+                    zip(_prompts(rng, cfg, [5, 8]), [5, 7]))]
+
+    _, _, out1 = _burst_stream_run(model, params, reqs(), 1,
+                                   max_slots=2, max_len=128)
+    fields = codecs.get("sfp-m3e5").pack_fields(cfg.compute_dtype)
+    lo, hi = fields.dexp_bits + 2, fields.payload_bits - 1
+    assert lo <= hi
+    for dp in {lo, hi}:
+        _, sched, outS = _burst_stream_run(model, params, reqs(), 1,
+                                           speculate=2, draft_planes=dp,
+                                           max_slots=2, max_len=128)
+        for uid in out1:
+            np.testing.assert_array_equal(out1[uid], outS[uid])
+        assert sched.stats.drafted > 0
+
+
+def test_speculate_validates_inputs():
+    """Bad speculation knobs fail loudly at the host boundary: a
+    non-positive K, a draft depth outside the container's legal prefix
+    range, and speculation over a raw (uncontainered) cache all raise."""
+    cfg, model = _model("mistral-large-123b", "sfp8")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    reqs = [Request(uid=0, prompt=_prompts(rng, cfg, [4])[0], max_new=2)]
+    ops.force_backend("ref")
+    try:
+        eng = engine.PagedEngine(model, params, max_slots=1, max_len=128)
+        with pytest.raises(ValueError):
+            Scheduler(eng).run(reqs, speculate=0)
+        fields = codecs.get("sfp8").pack_fields(cfg.compute_dtype)
+        for bad in (fields.dexp_bits + 1, fields.payload_bits + 1):
+            with pytest.raises(ValueError):
+                eng.validate_draft_planes(bad)
     finally:
         ops.force_backend(None)
 

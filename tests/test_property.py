@@ -182,6 +182,56 @@ def test_plane_expansion_all_widths_vs_python_oracle(payload, rows, seed,
 
 
 @settings(max_examples=30, deadline=None)
+@given(st.integers(1, 7), st.integers(1, 8), st.integers(0, 15),
+       st.lists(st.floats(min_value=-100, max_value=100, allow_nan=False,
+                          width=32), min_size=128, max_size=128))
+def test_prefix_plane_expansion_equals_truncated_pack(man, dexp, cut, vals):
+    """Self-speculative draft-read invariant, for every dense geometry
+    and every valid prefix depth P': the *leading* P' bit planes of a
+    packed block are byte-identical to packing the same values at the
+    truncated geometry (man_keep - drop, same dexp, P' payload bits),
+    and expand to exactly the truncated payload words — all asserted
+    against the pure-Python word/plane oracles. This is what lets the
+    draft pass read a strict byte subset of the full-width pool and
+    still decode a well-formed narrower container."""
+    payload = 1 + man + dexp
+    if payload > 16:
+        man = 16 - 1 - dexp  # clamp like codecs.dense_fields
+        payload = 16
+    from repro import codecs
+    f = codecs.dense_fields(man, dexp, C.BF16)
+    lo = f.dexp_bits + 2  # sign + full dexp + >= 1 mantissa bit
+    pp = lo + cut % (f.payload_bits - lo + 1)   # valid P' in [lo, P]
+    drop = f.payload_bits - pp
+    nf = ref.prefix_fields(f, pp)
+    assert (nf.payload_bits, nf.dexp_bits, nf.man_keep) == (
+        pp, f.dexp_bits, f.man_keep - drop)
+    x = jnp.asarray(vals, jnp.float32).astype(jnp.bfloat16).reshape(1, 128)
+    planes, bases = ref.bitplane_pack(x, f)
+    sliced = np.asarray(ref.prefix_plane_view(planes, f, pp))
+    x16 = np.asarray(x).view(np.uint16)
+    words, base_wide = _py_sfp_words(x16, f.man_keep, f.dexp_bits,
+                                     f.payload_bits)
+    narrow_words, base_narrow = _py_sfp_words(x16, f.man_keep - drop,
+                                              f.dexp_bits, pp)
+    # Truncating the wide word IS the narrow-geometry encode (incl. the
+    # flush-to-zero cases), and the shared exponent base is unchanged.
+    np.testing.assert_array_equal(narrow_words, words >> drop)
+    np.testing.assert_array_equal(base_wide, base_narrow)
+    # The leading planes are byte-for-byte the narrow container's pack...
+    np.testing.assert_array_equal(sliced, _py_planes(narrow_words, pp))
+    # ...and the SWAR expansion of the slice yields the truncated words.
+    np.testing.assert_array_equal(
+        np.asarray(ref.plane_unpack_words(jnp.asarray(sliced), pp)),
+        narrow_words)
+    # out-of-range prefix depths must be rejected, not mis-sliced
+    with pytest.raises(ValueError):
+        ref.prefix_fields(f, lo - 1)
+    with pytest.raises(ValueError):
+        ref.prefix_fields(f, f.payload_bits + 1)
+
+
+@settings(max_examples=30, deadline=None)
 @given(st.integers(3, 16), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
 def test_plane_unpack_bijective_on_trash_blocks(payload, rows, seed):
     """Arbitrary garbage plane bytes (what the pool's trash block holds)
